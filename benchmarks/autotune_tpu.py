@@ -1,0 +1,28 @@
+"""DESIGN.md §2.2: the paper's technique on TPU kernel variants — NN2 cost
+model over Pallas matmul block configs, PBQP-selected per matmul site for
+every assigned architecture."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import base as cb
+from repro.core.autotune import autotune_arch, train_cost_model
+
+
+def main() -> dict:
+    model = train_cost_model(max_iters=3000)
+    results = {}
+    for arch in cb.ASSIGNED_ARCHS:
+        cfg = cb.get(arch)
+        res = autotune_arch(cfg, model)
+        gap = (res.predicted_s / res.oracle_s - 1.0) * 100 if res.oracle_s else 0.0
+        results[arch] = {"speedup": res.speedup_vs_default,
+                         "gap_to_oracle_pct": gap,
+                         "assignment": res.assignment}
+        emit(f"autotune.{arch}", res.predicted_s * 1e6,
+             f"speedup_vs_default={res.speedup_vs_default:.2f}x "
+             f"oracle_gap={gap:.1f}%")
+    return results
+
+
+if __name__ == "__main__":
+    main()

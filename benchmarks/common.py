@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: dataset + trained-model caches, CSV output."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.perfmodel import PerfModel, fit_perf_model
+from repro.profiler.dataset import (PerfDataset, simulate_dlt_dataset,
+                                    simulate_primitive_dataset)
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+_ds_cache = {}
+
+
+def dataset(platform: str) -> PerfDataset:
+    if ("prim", platform) not in _ds_cache:
+        _ds_cache[("prim", platform)] = simulate_primitive_dataset(
+            platform, max_triplets=60 if FAST else None)
+    return _ds_cache[("prim", platform)]
+
+
+def dlt_dataset(platform: str) -> PerfDataset:
+    if ("dlt", platform) not in _ds_cache:
+        _ds_cache[("dlt", platform)] = simulate_dlt_dataset(platform)
+    return _ds_cache[("dlt", platform)]
+
+
+def model_path(tag: str) -> str:
+    d = os.path.join(ART, "models")
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, tag + ".pkl")
+
+
+def trained_model(tag: str, kind: str, ds: PerfDataset, *,
+                  max_iters: int = 8000, seed: int = 0,
+                  base: Optional[PerfModel] = None,
+                  cache: bool = True) -> PerfModel:
+    path = model_path(tag)
+    if cache and base is None and os.path.exists(path):
+        return PerfModel.load(path)
+    tr, va, te = ds.split()
+    m = fit_perf_model(kind, tr.feats, tr.times, va.feats, va.times,
+                       columns=ds.columns, seed=seed, base=base,
+                       max_iters=max_iters if not FAST else min(max_iters, 2000))
+    if cache and base is None:
+        try:
+            m.save(path)
+        except Exception:
+            pass
+    return m
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Contract from the scaffold: ``name,us_per_call,derived`` CSV."""
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,31 @@
+"""Paper Fig 7: relative inference-time increase when optimising with
+performance-model estimates instead of measured (simulated) times."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, dlt_dataset, emit, trained_model
+from repro.core.selection import ModelProvider, SimulatedProvider, network_cost, select
+from repro.models import cnn_zoo
+
+
+def main() -> dict:
+    results = {}
+    for plat in ("intel", "amd", "arm"):
+        prim_m = trained_model(f"{plat}_nn2", "nn2", dataset(plat))
+        dlt_m = trained_model(f"{plat}_dlt_nn2", "nn2", dlt_dataset(plat))
+        model = ModelProvider(prim_m, dlt_m)
+        truth = SimulatedProvider(plat)
+        for net in cnn_zoo.PAPER_SELECTION_NETS:
+            spec = cnn_zoo.get(net)
+            sel_model = select(spec, model)
+            sel_truth = select(spec, truth)
+            c_model = network_cost(spec, sel_model.assignment, truth)
+            c_truth = sel_truth.solver_cost
+            inc = 100.0 * (c_model / c_truth - 1.0)
+            results[f"{plat}.{net}"] = inc
+            emit(f"fig7.{plat}.{net}.increase_pct", inc,
+                 f"truth={c_truth*1e3:.3f}ms model={c_model*1e3:.3f}ms")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Figs 9/10: fine-tuning the Intel model to AMD/ARM vs training from
+scratch, across training-data fractions."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import FAST, dataset, dlt_dataset, emit, trained_model
+from repro.core.perfmodel import fit_perf_model
+from repro.core.selection import ModelProvider, SimulatedProvider, network_cost, select
+from repro.models import cnn_zoo
+
+FRACTIONS = (0.001, 0.01, 0.1, 0.25) if not FAST else (0.01, 0.1)
+SEEDS = (0, 1) if not FAST else (0,)
+
+
+def main() -> dict:
+    results = {}
+    intel = trained_model("intel_nn2", "nn2", dataset("intel"))
+    spec = cnn_zoo.get("googlenet")
+    for plat in ("amd", "arm"):
+        ds = dataset(plat)
+        tr, va, te = ds.split()
+        truth = SimulatedProvider(plat)
+        c_opt = select(spec, truth).solver_cost
+        dlt_native = trained_model(f"{plat}_dlt_nn2", "nn2", dlt_dataset(plat))
+        full = trained_model(f"{plat}_nn2", "nn2", ds)
+        results[f"{plat}.full"] = full.mdrae(te.feats, te.times)
+        for frac in FRACTIONS:
+            for mode in ("scratch", "finetune"):
+                errs, incs = [], []
+                for seed in SEEDS:
+                    sub = tr.subsample(frac, seed=seed)
+                    m = fit_perf_model(
+                        "nn2", sub.feats, sub.times, va.feats, va.times,
+                        columns=ds.columns, seed=seed,
+                        base=intel if mode == "finetune" else None,
+                        max_iters=2000 if not FAST else 1200, patience=150)
+                    errs.append(m.mdrae(te.feats, te.times))
+                    prov = ModelProvider(m, dlt_native)
+                    c = network_cost(spec, select(spec, prov).assignment, truth)
+                    incs.append(100.0 * (c / c_opt - 1.0))
+                md, inc = float(np.mean(errs)), float(np.mean(incs))
+                results[f"{plat}.{mode}.{frac}"] = {"mdrae": md, "increase_pct": inc}
+                emit(f"fig9.{plat}.{mode}.frac{frac}", md * 100,
+                     f"mdrae={md*100:.1f}% increase={inc:.2f}%")
+    return results
+
+
+if __name__ == "__main__":
+    main()

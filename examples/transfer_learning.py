@@ -1,0 +1,46 @@
+"""Transfer learning across platforms (paper §4.4/§5.3): pre-train on intel,
+port to arm with 1% of the data — direct / factor-corrected / fine-tuned.
+
+Run:  PYTHONPATH=src python examples/transfer_learning.py
+"""
+from repro.core.perfmodel import factor_correct, fit_perf_model
+from repro.profiler.dataset import simulate_primitive_dataset
+
+
+def main():
+    print("== pre-training on intel ==")
+    ds_i = simulate_primitive_dataset("intel", max_triplets=60)
+    tr, va, te = ds_i.split()
+    intel = fit_perf_model("nn2", tr.feats, tr.times, va.feats, va.times,
+                           columns=ds_i.columns, max_iters=4000)
+    print(f"   intel test MdRAE: {intel.mdrae(te.feats, te.times)*100:.1f}%")
+
+    print("== porting to arm ==")
+    ds_a = simulate_primitive_dataset("arm", max_triplets=60)
+    tra, vaa, tea = ds_a.split()
+    direct = intel.mdrae(tea.feats, tea.times)
+    print(f"   intel model applied directly:   MdRAE {direct*100:.0f}%")
+
+    onepct = tra.subsample(0.01)
+    fc = factor_correct(intel, onepct.feats, onepct.times)
+    print(f"   + per-primitive factor (1% data): MdRAE "
+          f"{fc.mdrae(tea.feats, tea.times)*100:.1f}%")
+
+    ft = fit_perf_model("nn2", onepct.feats, onepct.times, vaa.feats, vaa.times,
+                        columns=ds_a.columns, base=intel, max_iters=2000)
+    print(f"   + fine-tuning      (1% data): MdRAE "
+          f"{ft.mdrae(tea.feats, tea.times)*100:.1f}%")
+
+    scratch = fit_perf_model("nn2", onepct.feats, onepct.times, vaa.feats,
+                             vaa.times, columns=ds_a.columns, max_iters=2000)
+    print(f"   from scratch       (1% data): MdRAE "
+          f"{scratch.mdrae(tea.feats, tea.times)*100:.1f}%")
+
+    native = fit_perf_model("nn2", tra.feats, tra.times, vaa.feats, vaa.times,
+                            columns=ds_a.columns, max_iters=4000)
+    print(f"   native (all data):            MdRAE "
+          f"{native.mdrae(tea.feats, tea.times)*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Llama-3.1-405B — dense GQA, 128k vocab. [arXiv:2407.21783].
+Full attention: long_500k skipped. Training cell defaults to Adafactor +
+ZeRO-3 so optimizer state fits v5e HBM (DESIGN.md §4, EXPERIMENTS §Dry-run)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama3_405b", family="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, d_ff=53248,
+    vocab=128256, head_dim=128, rope_theta=500000.0, tie_embeddings=False,
+    source="arXiv:2407.21783",
+))

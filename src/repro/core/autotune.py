@@ -1,0 +1,149 @@
+"""Kernel-variant selection for TPU (DESIGN.md §2.2) — the paper's technique
+operating natively on the TPU stack.
+
+"Primitives" here are Pallas matmul block configurations (bm, bk, bn) from
+``repro.kernels.matmul.ops.VARIANTS``; "layers" are the matmul sites of a
+transformer architecture (QKV/out projections, MLP up/down, expert GEMMs).
+An NN2 performance model is trained on an analytic TPU cost surface
+(MXU roofline + VMEM-tiling effects + HBM traffic, deliberately non-linear
+in the block shape), then a chain PBQP selects per-site variants. On real
+hardware the analytic surface is replaced by profiled timings — the pipeline
+is identical (the paper's point).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import pbqp
+from repro.core.perfmodel import PerfModel, fit_perf_model
+from repro.kernels.matmul.ops import VARIANTS
+
+# v5e-flavoured constants (per chip)
+_PEAK = 197e12
+_HBM_BW = 819e9
+_VMEM_BYTES = 64 * 2 ** 20          # ~64 MiB usable VMEM per core (v5e ~128)
+
+
+def matmul_sites(cfg: ArchConfig, seq: int = 4096, batch_tokens: int = 65536,
+                 tp: int = 16) -> List[Tuple[str, int, int, int]]:
+    """(name, M, K, N) matmul sites for one layer of ``cfg``, after TP
+    sharding by ``tp`` (the per-device GEMM the kernel actually runs)."""
+    d, hd = cfg.d_model, cfg.hd
+    M = batch_tokens
+    sites = []
+    if cfg.attn_kind == "gqa":
+        sites += [("wq", M, d, max(cfg.n_heads * hd // tp, 128)),
+                  ("wk", M, d, max(cfg.n_kv_heads * hd // tp, 128)),
+                  ("wo", M, max(cfg.n_heads * hd // tp, 128), d)]
+    elif cfg.attn_kind == "mla":
+        m = cfg.mla
+        sites += [("wdq", M, d, m.q_lora),
+                  ("wuq", M, m.q_lora, max(cfg.n_heads * (m.qk_nope + m.qk_rope) // tp, 128)),
+                  ("wo", M, max(cfg.n_heads * m.v_head // tp, 128), d)]
+    if cfg.moe is not None:
+        ff = cfg.moe.d_ff
+        tokens_per_expert = int(1.25 * M * cfg.moe.top_k / cfg.moe.n_experts)
+        sites += [("expert_up", max(tokens_per_expert, 128), d, ff),
+                  ("expert_down", max(tokens_per_expert, 128), ff, d)]
+    elif cfg.d_ff:
+        sites += [("mlp_up", M, d, max(cfg.d_ff // tp, 128)),
+                  ("mlp_down", M, max(cfg.d_ff // tp, 128), d)]
+    if cfg.ssm is not None:
+        din = cfg.ssm.d_inner(d)
+        sites += [("ssm_in", M, d, max((2 * din) // tp, 128)),
+                  ("ssm_out", M, max(din // tp, 128), d)]
+    return sites
+
+
+def analytic_cost(M: int, K: int, N: int, bm: int, bk: int, bn: int,
+                  dtype_bytes: int = 2) -> float:
+    """Seconds for a tiled (M,K)x(K,N) GEMM on one v5e core. Non-linear in
+    the block config: MXU alignment, VMEM residency, grid overheads and
+    HBM re-streaming of operands across tile passes."""
+    gm, gn, gk = -(-M // bm), -(-N // bn), -(-K // bk)
+    # padding waste from tile quantisation
+    eff_shape = (M / (gm * bm)) * (N / (gn * bn)) * (K / (gk * bk))
+    # MXU alignment: sub-128 tiles underuse the systolic array
+    align = min(bm, 128) / 128 * min(bn, 128) / 128 * min(bk, 128) / 128
+    mxu_eff = 0.9 * eff_shape * (0.55 + 0.45 * align)
+    # VMEM residency: working set must fit; overflow thrashes
+    ws = dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn
+    if ws > _VMEM_BYTES:
+        mxu_eff *= 0.25
+    flops = 2.0 * M * N * K
+    t_compute = flops / (_PEAK * mxu_eff)
+    # HBM: x re-read gn times, y re-read gm times (output-stationary tiling)
+    traffic = dtype_bytes * (M * K * gn + K * N * gm) + dtype_bytes * M * N
+    t_mem = traffic / _HBM_BW
+    t_grid = gm * gn * gk * 1.2e-6      # per-tile dispatch overhead
+    return max(t_compute, t_mem) + t_grid
+
+
+def build_dataset(n: int = 3000, seed: int = 0):
+    """(M, K, N, bm, bk, bn) -> seconds samples over realistic GEMM shapes."""
+    rng = np.random.default_rng(seed)
+    names = list(VARIANTS)
+    feats, times = [], []
+    for _ in range(n):
+        M = int(2 ** rng.uniform(7, 17))
+        K = int(2 ** rng.uniform(7, 15))
+        N = int(2 ** rng.uniform(7, 15))
+        row = []
+        for v in names:
+            bm, bk, bn = VARIANTS[v]
+            row.append(analytic_cost(M, K, N, bm, bk, bn)
+                       * math.exp(rng.normal(0, 0.02)))
+        feats.append([M, K, N])
+        times.append(row)
+    return np.array(feats, float), np.array(times), names
+
+
+def train_cost_model(seed: int = 0, max_iters: int = 4000) -> PerfModel:
+    f, t, names = build_dataset(seed=seed)
+    n = len(f)
+    tr, va = slice(0, int(0.8 * n)), slice(int(0.8 * n), int(0.9 * n))
+    return fit_perf_model("nn2", f[tr], t[tr], f[va], t[va], columns=names,
+                          max_iters=max_iters, seed=seed)
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    assignment: Dict[str, str]           # site -> variant
+    predicted_s: float
+    default_s: float                     # all sites on the first variant
+    oracle_s: float                      # analytic-optimal
+
+    @property
+    def speedup_vs_default(self) -> float:
+        return self.default_s / self.predicted_s if self.predicted_s else 1.0
+
+
+def autotune_arch(cfg: ArchConfig, model: PerfModel, tp: int = 16,
+                  batch_tokens: int = 65536) -> AutotuneResult:
+    """PBQP-select a kernel variant per matmul site of ``cfg`` (chain graph;
+    variant switches carry no layout cost for these kernels, so edges are
+    zero — the graph degenerates to per-site argmin, which PBQP handles as
+    R0 reductions; layout-carrying kernels would populate the edges)."""
+    sites = matmul_sites(cfg, batch_tokens=batch_tokens, tp=tp)
+    names = list(model.columns)
+    feats = np.array([[m, k, n] for (_, m, k, n) in sites], float)
+    pred = model.predict(feats)                      # (n_sites, n_variants)
+
+    g = pbqp.PBQPGraph()
+    for i, (site, m, k, n) in enumerate(sites):
+        g.add_node(i, pred[i], labels=names)
+    sol = pbqp.solve(g)
+    lab = sol.labelled(g)
+
+    true = np.array([[analytic_cost(m, k, n, *VARIANTS[v]) for v in names]
+                     for (_, m, k, n) in sites])
+    sel = sum(true[i, names.index(lab[i])] for i in range(len(sites)))
+    default = float(true[:, 0].sum())
+    oracle = float(true.min(axis=1).sum())
+    return AutotuneResult({s[0]: lab[i] for i, s in enumerate(sites)},
+                          float(sel), default, oracle)

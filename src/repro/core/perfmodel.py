@@ -1,0 +1,335 @@
+"""Performance models (paper §3.3, Fig 3): NN1 (per-primitive MLP), NN2
+(shared MLP over all primitives), and a linear-regression baseline.
+
+Pure JAX. The NN2 masked-MSE loss implements the paper's treatment of
+undefined runtimes: entries where a primitive is inapplicable are NaN in the
+label matrix; their squared error and gradient are exactly zero.
+
+The public interface is numpy-in / numpy-out so the optimisation pipeline
+(Fig 2) can batch all layer configurations of a CNN in one call — predicted
+cost of optimising VGG-19 is milliseconds, the paper's Table 4 claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.normalize import LogStandardizer, mdrae
+from repro.train import optim as optim_lib
+
+
+# ---------------------------------------------------------------------------
+# MLP core
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, sizes: Sequence[int], dtype=jnp.float32) -> list:
+    """He-initialised fully connected network ``sizes[0] -> ... -> sizes[-1]``."""
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (fan_in, fan_out) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (fan_in, fan_out), dtype) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((fan_out,), dtype)
+        params.append({"w": w, "b": b})
+    return params
+
+
+def mlp_apply(params: list, x: jnp.ndarray) -> jnp.ndarray:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def masked_mse(params: list, x: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """MSE over defined entries only. ``y`` must already have NaNs replaced by
+    zeros (any finite value works; the mask kills their contribution AND their
+    gradient, exactly as the paper's masking does)."""
+    pred = mlp_apply(params, x)
+    se = jnp.square(pred - y) * mask
+    return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Training loop with early stopping (paper Table 3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainResult:
+    params: list
+    train_losses: list
+    val_losses: list
+    best_val: float
+    iterations: int
+    seconds: float
+
+
+def train_mlp(key: jax.Array,
+              sizes: Sequence[int],
+              x_train: np.ndarray, y_train: np.ndarray,
+              x_val: np.ndarray, y_val: np.ndarray,
+              lr: float = 1e-3,
+              weight_decay: float = 1e-5,
+              batch_size: int = 1024,
+              patience: int = 250,
+              max_iters: int = 20000,
+              init_params: Optional[list] = None,
+              eval_every: int = 20) -> TrainResult:
+    """Adam + early stopping ("halt when validation has not improved for 250
+    iterations", paper Table 3). ``init_params`` given => fine-tuning (the
+    transfer-learning path; paper lowers LR by 10x for fine-tuning — callers
+    pass the lowered lr)."""
+    t0 = time.perf_counter()
+    mask_train = np.isfinite(y_train).astype(np.float32)
+    mask_val = np.isfinite(y_val).astype(np.float32)
+    y_train = np.nan_to_num(y_train, nan=0.0).astype(np.float32)
+    y_val = np.nan_to_num(y_val, nan=0.0).astype(np.float32)
+    x_train = x_train.astype(np.float32)
+    x_val = x_val.astype(np.float32)
+
+    params = init_params if init_params is not None else init_mlp(key, sizes)
+    opt = optim_lib.adamw(lr, weight_decay=weight_decay)
+    opt_state = opt.init(params)
+
+    n = x_train.shape[0]
+    bs = min(batch_size, n)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb, mb):
+        loss, grads = jax.value_and_grad(masked_mse)(params, xb, yb, mb)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    @jax.jit
+    def val_loss_fn(params):
+        return masked_mse(params, x_val, y_val, mask_val)
+
+    rng = np.random.default_rng(0)
+    best_val, best_params, best_iter = np.inf, params, 0
+    train_losses, val_losses = [], []
+    it = 0
+    while it < max_iters:
+        idx = rng.integers(0, n, size=bs)
+        params, opt_state, loss = step(params, opt_state, x_train[idx], y_train[idx], mask_train[idx])
+        it += 1
+        if it % eval_every == 0 or it == 1:
+            vl = float(val_loss_fn(params))
+            train_losses.append(float(loss))
+            val_losses.append(vl)
+            if vl < best_val - 1e-7:
+                best_val, best_params, best_iter = vl, params, it
+            elif it - best_iter > patience:
+                break
+    return TrainResult(best_params, train_losses, val_losses, float(best_val),
+                       it, time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# High-level performance models
+# ---------------------------------------------------------------------------
+
+# Paper Table 3 architectures. Input dim is 5 = (k, c, im, s, f) for
+# primitives and 2 = (c, im) for data-layout transformations.
+NN1_HIDDEN = (16, 64, 64, 16)
+NN2_HIDDEN = (128, 512, 512, 128)
+
+
+@dataclasses.dataclass
+class PerfModel:
+    """A trained performance estimator: features -> runtimes (seconds).
+
+    ``kind`` in {"nn1", "nn2", "lin"}. NN1 is an ensemble (one MLP per output
+    column); NN2 and Lin are single models over all columns.
+    """
+
+    kind: str
+    in_norm: LogStandardizer
+    out_norm: LogStandardizer
+    params: list              # nn2/lin: one params list; nn1: list per column
+    n_outputs: int
+    columns: Sequence[str]
+    train_seconds: float = 0.0
+
+    # -- prediction --------------------------------------------------------
+    def predict(self, feats: np.ndarray) -> np.ndarray:
+        """(N, F) raw features -> (N, n_outputs) runtimes in seconds."""
+        feats = np.atleast_2d(np.asarray(feats, np.float64))
+        xt = jnp.asarray(self.in_norm.transform(feats))
+        if self.kind == "nn1":
+            cols = [mlp_apply(p, xt) for p in self.params]
+            yt = jnp.concatenate(cols, axis=1)
+        else:
+            yt = mlp_apply(self.params, xt)
+        return self.out_norm.inverse(np.asarray(yt))
+
+    def mdrae(self, feats: np.ndarray, runtimes: np.ndarray) -> float:
+        return mdrae(self.predict(feats), runtimes)
+
+    def mdrae_per_column(self, feats: np.ndarray, runtimes: np.ndarray) -> np.ndarray:
+        from repro.core.normalize import mdrae_per_column
+        return mdrae_per_column(self.predict(feats), runtimes)
+
+    # -- (de)serialization -------------------------------------------------
+    def to_state(self) -> dict:
+        flat, treedef = jax.tree.flatten(self.params)
+        return {
+            "kind": self.kind,
+            "n_outputs": self.n_outputs,
+            "columns": list(self.columns),
+            "in_norm": self.in_norm.to_dict(),
+            "out_norm": self.out_norm.to_dict(),
+            "arrays": [np.asarray(a) for a in flat],
+            "treedef": str(treedef),  # informational; structure rebuilt below
+            "structure": jax.tree.structure(self.params),
+        }
+
+    def save(self, path: str) -> None:
+        import pickle
+        state = self.to_state()
+        state.pop("structure")
+        state["params_py"] = jax.tree.map(lambda a: np.asarray(a), self.params)
+        with open(path, "wb") as f:
+            pickle.dump(state, f)
+
+    @classmethod
+    def load(cls, path: str) -> "PerfModel":
+        import pickle
+        with open(path, "rb") as f:
+            state = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, state["params_py"])
+        return cls(kind=state["kind"],
+                   in_norm=LogStandardizer.from_dict(state["in_norm"]),
+                   out_norm=LogStandardizer.from_dict(state["out_norm"]),
+                   params=params, n_outputs=state["n_outputs"],
+                   columns=state["columns"])
+
+
+def _prep(feats, runtimes, in_norm=None, out_norm=None):
+    feats = np.asarray(feats, np.float64)
+    runtimes = np.asarray(runtimes, np.float64)
+    if in_norm is None:
+        in_norm = LogStandardizer(log=True).fit(feats)
+    if out_norm is None:
+        out_norm = LogStandardizer(log=True).fit(runtimes)
+    return in_norm, out_norm, in_norm.transform(feats), out_norm.transform(runtimes)
+
+
+def fit_perf_model(kind: str,
+                   feats_train: np.ndarray, runtimes_train: np.ndarray,
+                   feats_val: np.ndarray, runtimes_val: np.ndarray,
+                   columns: Optional[Sequence[str]] = None,
+                   seed: int = 0,
+                   base: Optional[PerfModel] = None,
+                   lr: Optional[float] = None,
+                   max_iters: int = 20000,
+                   patience: int = 250) -> PerfModel:
+    """Train a performance model of ``kind`` in {"lin", "nn1", "nn2"}.
+
+    ``base`` given => transfer learning: reuse base normalizers and start
+    from base params with LR lowered 10x (paper §4.4) unless ``lr`` is set.
+    """
+    t0 = time.perf_counter()
+    n_out = np.asarray(runtimes_train).shape[1]
+    columns = list(columns) if columns is not None else [f"p{i}" for i in range(n_out)]
+    in_norm = base.in_norm if base is not None else None
+    out_norm = base.out_norm if base is not None else None
+    in_norm, out_norm, xt, yt = _prep(feats_train, runtimes_train, in_norm, out_norm)
+    xv = in_norm.transform(feats_val)
+    yv = out_norm.transform(runtimes_val)
+    key = jax.random.PRNGKey(seed)
+
+    if kind == "lin":
+        # Closed-form ridge per column on defined rows (baseline model).
+        lam = 1e-6
+        X = np.concatenate([xt, np.ones((xt.shape[0], 1), np.float32)], axis=1)
+        W = np.zeros((X.shape[1], n_out), np.float64)
+        for j in range(n_out):
+            m = np.isfinite(yt[:, j])
+            if m.sum() < X.shape[1]:
+                continue
+            A = X[m].astype(np.float64)
+            b = yt[m, j].astype(np.float64)
+            W[:, j] = np.linalg.solve(A.T @ A + lam * np.eye(A.shape[1]), A.T @ b)
+        params = [{"w": jnp.asarray(W[:-1], jnp.float32), "b": jnp.asarray(W[-1], jnp.float32)}]
+        return PerfModel("lin", in_norm, out_norm, params, n_out, columns,
+                         train_seconds=time.perf_counter() - t0)
+
+    if kind == "nn2":
+        sizes = (xt.shape[1],) + NN2_HIDDEN + (n_out,)
+        lr_eff = lr if lr is not None else (1e-4 if base is not None else 1e-3)
+        res = train_mlp(key, sizes, xt, yt, xv, yv, lr=lr_eff, weight_decay=1e-5,
+                        init_params=None if base is None else base.params,
+                        max_iters=max_iters, patience=patience)
+        return PerfModel("nn2", in_norm, out_norm, res.params, n_out, columns,
+                         train_seconds=time.perf_counter() - t0)
+
+    if kind == "nn1":
+        # One small MLP per output column; single hyper-parameter set across
+        # all models (paper §4.2). Base model => per-column fine-tune.
+        sizes = (xt.shape[1],) + NN1_HIDDEN + (1,)
+        lr_eff = lr if lr is not None else (3e-4 if base is not None else 3e-3)
+        params = []
+        keys = jax.random.split(key, n_out)
+        for j in range(n_out):
+            yj = yt[:, j:j + 1]
+            yvj = yv[:, j:j + 1]
+            m = np.isfinite(yj[:, 0])
+            if m.sum() < 8:  # too few points: fall back to mean predictor
+                params.append(init_mlp(keys[j], sizes))
+                continue
+            init_p = base.params[j] if base is not None else None
+            res = train_mlp(keys[j], sizes, xt[m], yj[m], xv[np.isfinite(yvj[:, 0])],
+                            yvj[np.isfinite(yvj[:, 0])], lr=lr_eff, weight_decay=0.0,
+                            init_params=init_p, max_iters=max_iters, patience=patience)
+            params.append(res.params)
+        return PerfModel("nn1", in_norm, out_norm, params, n_out, columns,
+                         train_seconds=time.perf_counter() - t0)
+
+    raise ValueError(f"unknown perf model kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Factor correction (paper §4.4 "Factor Intel")
+# ---------------------------------------------------------------------------
+
+def factor_correct(base: PerfModel,
+                   feats_sample: np.ndarray,
+                   runtimes_sample: np.ndarray) -> PerfModel:
+    """Per-primitive multiplicative output correction estimated from a small
+    sample of target-platform measurements (paper uses 1% ≈ 25 points).
+    Returns a model whose predictions are ``base_prediction * factor[j]``.
+    The factor is the geometric-mean runtime ratio per column, the MMSE
+    estimator in log space."""
+    pred = base.predict(feats_sample)
+    actual = np.asarray(runtimes_sample, np.float64)
+    n_out = actual.shape[1]
+    log_factor = np.zeros(n_out)
+    for j in range(n_out):
+        m = np.isfinite(actual[:, j]) & np.isfinite(pred[:, j]) & (pred[:, j] > 0)
+        if m.any():
+            log_factor[j] = np.mean(np.log(actual[m, j]) - np.log(pred[m, j]))
+    corrected = FactorCorrectedModel(base=base, log_factor=log_factor)
+    return corrected
+
+
+@dataclasses.dataclass
+class FactorCorrectedModel(PerfModel):
+    """PerfModel wrapper applying per-column multiplicative correction."""
+    base: PerfModel = None
+    log_factor: np.ndarray = None
+
+    def __init__(self, base: PerfModel, log_factor: np.ndarray):
+        super().__init__(kind=f"factor-{base.kind}", in_norm=base.in_norm,
+                         out_norm=base.out_norm, params=base.params,
+                         n_outputs=base.n_outputs, columns=base.columns)
+        self.base = base
+        self.log_factor = log_factor
+
+    def predict(self, feats: np.ndarray) -> np.ndarray:
+        return self.base.predict(feats) * np.exp(self.log_factor)[None, :]

@@ -1,0 +1,236 @@
+"""Primitive selection pipeline (paper Fig 2).
+
+  (i)   extract layer configurations from the network spec,
+  (ii)  estimate primitive + DLT runtimes (performance model, batched — all
+        layers in one forward pass) or look up measured/simulated times,
+  (iii) solve the PBQP for the optimal per-layer assignment,
+  (iv)  emit the assignment for the executor.
+
+Join nodes (concat/residual-add) become 3-choice layout nodes with zero node
+cost (DESIGN.md §3), keeping inception-style graphs exactly reducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import pbqp
+from repro.core.perfmodel import PerfModel
+from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
+from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY
+from repro.primitives import layouts as L
+
+
+# ---------------------------------------------------------------------------
+# Cost providers
+# ---------------------------------------------------------------------------
+
+class CostProvider(Protocol):
+    columns: Sequence[str]
+
+    def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
+        """(L, 5) configs -> (L, P) runtimes (NaN = inapplicable)."""
+
+    def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
+        """(M, 2) (c, im) pairs -> (M, 6) non-identity DLT runtimes in
+        ``layouts.dlt_pairs()`` order (identity excluded)."""
+
+
+_DLT_COLS = [L.dlt_name(s, d) for (s, d) in L.dlt_pairs() if s != d]
+
+
+class SimulatedProvider:
+    """Ground-truth provider backed by a platform simulator — plays the role
+    of 'profiled on the device' in the paper's comparisons."""
+
+    def __init__(self, platform: str, noisy: bool = True,
+                 columns: Optional[Sequence[str]] = None):
+        from repro.profiler.simulators import PLATFORMS, dlt_time, primitive_time
+        self._plat = PLATFORMS[platform]
+        self._ptime = primitive_time
+        self._dtime = dlt_time
+        self.noisy = noisy
+        self.columns = list(columns) if columns is not None else list(PRIMITIVE_NAMES)
+
+    def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
+        out = np.full((len(configs), len(self.columns)), np.nan)
+        for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
+            for j, name in enumerate(self.columns):
+                out[i, j] = self._ptime(self._plat, REGISTRY[name], k, c, im, s, f,
+                                        noisy=self.noisy)
+        return out
+
+    def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
+        out = np.zeros((len(pairs), len(_DLT_COLS)))
+        for i, (c, im) in enumerate(np.asarray(pairs, int)):
+            j = 0
+            for (s, d) in L.dlt_pairs():
+                if s == d:
+                    continue
+                out[i, j] = self._dtime(self._plat, s, d, c, im, noisy=self.noisy)
+                j += 1
+        return out
+
+
+class ModelProvider:
+    """Performance-model provider (the paper's contribution): one batched
+    forward pass per network for primitives and one for DLTs."""
+
+    def __init__(self, prim_model: PerfModel, dlt_model: PerfModel):
+        self.prim_model = prim_model
+        self.dlt_model = dlt_model
+        self.columns = list(prim_model.columns)
+
+    def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
+        pred = self.prim_model.predict(np.asarray(configs, np.float64))
+        # applicability is structural knowledge, not predicted
+        for j, name in enumerate(self.columns):
+            p = REGISTRY[name]
+            for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
+                if not p.applicable(k, c, im, s, f):
+                    pred[i, j] = np.nan
+        return pred
+
+    def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
+        return self.dlt_model.predict(np.asarray(pairs, np.float64))
+
+
+class MeasuredProvider:
+    """Real-CPU provider (profiles on demand; expensive — the paper's point)."""
+
+    def __init__(self, repeats: int = 9, columns: Optional[Sequence[str]] = None):
+        from repro.primitives.conv import RUNNABLE
+        from repro.profiler import host
+        self._host = host
+        self.repeats = repeats
+        self.columns = list(columns) if columns is not None else list(RUNNABLE)
+
+    def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
+        out = np.full((len(configs), len(self.columns)), np.nan)
+        for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
+            for j, name in enumerate(self.columns):
+                out[i, j] = self._host.profile_primitive(name, k, c, im, s, f,
+                                                         repeats=self.repeats)
+        return out
+
+    def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
+        out = np.zeros((len(pairs), len(_DLT_COLS)))
+        for i, (c, im) in enumerate(np.asarray(pairs, int)):
+            j = 0
+            for (s, d) in L.dlt_pairs():
+                if s == d:
+                    continue
+                out[i, j] = self._host.profile_dlt(s, d, int(c), int(im),
+                                                   repeats=self.repeats)
+                j += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# PBQP construction
+# ---------------------------------------------------------------------------
+
+def _edge_tensor(node) -> Tuple[int, int]:
+    """(c, im) of the tensor a node produces."""
+    if isinstance(node, ConvLayer):
+        return node.k, node.out_im
+    return node.c, node.im
+
+
+def _out_layout(node, choice: str) -> str:
+    if isinstance(node, ConvLayer):
+        return REGISTRY[choice].out_layout
+    return choice           # join nodes choose a layout directly
+
+
+def _in_layout(node, choice: str) -> str:
+    if isinstance(node, ConvLayer):
+        return REGISTRY[choice].in_layout
+    return choice
+
+
+def _node_choices(node, columns: Sequence[str]) -> List[str]:
+    if isinstance(node, ConvLayer):
+        return list(columns)
+    return list(L.LAYOUTS)
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    assignment: Dict[int, str]       # node idx -> primitive name / layout
+    solver_cost: float
+    optimal: bool
+    estimate_seconds: float          # step (ii) wall time
+    solver_seconds: float            # step (iii) wall time
+
+    @property
+    def total_seconds(self) -> float:
+        return self.estimate_seconds + self.solver_seconds
+
+
+def build_pbqp(spec: CNNSpec, provider: CostProvider) -> pbqp.PBQPGraph:
+    columns = list(provider.columns)
+    convs = [(i, n) for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)]
+    configs = np.array([n.config for _, n in convs], np.float64)
+    cost_mat = provider.primitive_cost_matrix(configs) if len(convs) else np.zeros((0, len(columns)))
+
+    # batched DLT prediction for every distinct produced tensor
+    pair_list = sorted({_edge_tensor(spec.nodes[u]) for (u, v) in spec.edges})
+    pair_idx = {p: i for i, p in enumerate(pair_list)}
+    dlt_mat = (provider.dlt_cost_matrix(np.array(pair_list, np.float64))
+               if pair_list else np.zeros((0, len(_DLT_COLS))))
+    dlt_col = {name: j for j, name in enumerate(_DLT_COLS)}
+
+    def dlt(src: str, dst: str, c: int, im: int) -> float:
+        if src == dst:
+            return 0.0
+        v = dlt_mat[pair_idx[(c, im)], dlt_col[L.dlt_name(src, dst)]]
+        return float(max(v, 0.0))
+
+    g = pbqp.PBQPGraph()
+    conv_cost = {i: cost_mat[r] for r, (i, _) in enumerate(convs)}
+    for i, node in enumerate(spec.nodes):
+        choices = _node_choices(node, columns)
+        if isinstance(node, ConvLayer):
+            vec = np.where(np.isfinite(conv_cost[i]), conv_cost[i], np.inf)
+            vec = np.maximum(vec, 0.0)
+        else:
+            vec = np.zeros(len(choices))
+        g.add_node(i, vec, labels=choices)
+
+    for (u, v) in spec.edges:
+        nu, nv = spec.nodes[u], spec.nodes[v]
+        cu = _node_choices(nu, columns)
+        cv = _node_choices(nv, columns)
+        c, im = _edge_tensor(nu)
+        m = np.zeros((len(cu), len(cv)))
+        for a, pa in enumerate(cu):
+            for b, pb in enumerate(cv):
+                m[a, b] = dlt(_out_layout(nu, pa), _in_layout(nv, pb), c, im)
+        g.add_edge(u, v, m)
+    return g
+
+
+def select(spec: CNNSpec, provider: CostProvider) -> SelectionResult:
+    t0 = time.perf_counter()
+    g = build_pbqp(spec, provider)
+    t1 = time.perf_counter()
+    sol = pbqp.solve(g)
+    t2 = time.perf_counter()
+    labelled = sol.labelled(g)
+    return SelectionResult(labelled, sol.cost, sol.optimal, t1 - t0, t2 - t1)
+
+
+def network_cost(spec: CNNSpec, assignment: Dict[int, str],
+                 provider: CostProvider) -> float:
+    """Total network runtime under ``assignment`` with ``provider``'s costs —
+    used to score a model-derived assignment against ground truth (Fig 7)."""
+    g = build_pbqp(spec, provider)
+    idx_assignment = {}
+    for i, node in enumerate(spec.nodes):
+        choices = _node_choices(node, provider.columns)
+        idx_assignment[i] = choices.index(assignment[i])
+    return pbqp.evaluate(g, idx_assignment)

@@ -1,0 +1,52 @@
+"""Synthetic LM data pipeline.
+
+Deterministic, stateless-shardable: batch ``i`` on host ``h`` is a pure
+function of ``(seed, i, h)``, so a restarted (or re-scaled) job regenerates
+exactly the stream it needs — the elasticity contract from DESIGN.md §5.
+Sequences are Zipf-distributed token n-gram chains so the loss actually
+decreases (unlike uniform noise) while requiring no external corpus.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, index: int,
+               seed: int = 0, host: int = 0) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, index, host]))
+    V = cfg.vocab
+    # Markov-ish stream: next token = (a * prev + b) % V with noise, giving
+    # learnable structure.
+    a = 31 if V > 31 else 3
+    x = np.zeros((batch, seq + 1), np.int64)
+    x[:, 0] = rng.integers(0, V, batch)
+    noise = rng.random((batch, seq)) < 0.15
+    jumps = rng.integers(0, V, (batch, seq))
+    for t in range(seq):
+        nxt = (a * x[:, t] + 7) % V
+        x[:, t + 1] = np.where(noise[:, t], jumps[:, t], nxt)
+    out: Dict[str, jnp.ndarray] = {
+        "tokens": jnp.asarray(x[:, :-1], jnp.int32),
+        "labels": jnp.asarray(x[:, 1:], jnp.int32),
+    }
+    if cfg.prefix_tokens:
+        out["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, min(cfg.prefix_tokens, 8), cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.kind == "encdec":
+        out["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_model)) * 0.02, jnp.float32)
+    return out
+
+
+def synthetic_batches(cfg: ArchConfig, batch: int, seq: int, seed: int = 0,
+                      host: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    i = 0
+    while True:
+        yield make_batch(cfg, batch, seq, i, seed=seed, host=host)
+        i += 1

@@ -1,0 +1,15 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas kernels execute natively on TPU; everywhere else (this CPU
+    container included) they run in interpret mode, which executes the kernel
+    body in Python — bit-accurate for correctness validation."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,90 @@
+"""FlashAttention Pallas kernel (causal, GQA-ready via pre-repeated heads).
+
+Grid: (batch*heads, Q blocks, KV blocks), KV innermost. Online softmax
+carries (m, l, acc) in f32 VMEM scratch across KV steps. Causal masking is
+applied per element inside the block; fully-masked KV blocks (kv_start >
+q_end) are skipped with ``pl.when`` so the causal lower triangle costs ~half
+the FLOPs. Block sizes tile VMEM: (bq x d) + (bkv x d) x 2 + (bq x bkv)
+working set.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, n_kv: int, bq: int, bkv: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        run = qi * bq + bq - 1 >= ki * bkv     # any unmasked element in block
+    else:
+        run = jnp.asarray(True)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bkv)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: float | None = None,
+                    bq: int = 128, bkv: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q, k, v: (BH, S, d) with heads pre-folded into the batch dim
+    (GQA callers repeat KV heads first). Returns (BH, S, d)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bkv == 0, "pad sequence to block multiples"
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    grid = (bh, sq // bq, sk // bkv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, n_kv=grid[2],
+                          bq=bq, bkv=bkv, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Jitted wrapper + block-config variants for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+VARIANTS: Dict[str, Tuple[int, int]] = {
+    "fa-128x128": (128, 128),
+    "fa-128x256": (128, 256),
+    "fa-256x128": (256, 128),
+    "fa-256x256": (256, 256),
+    "fa-512x256": (512, 256),
+}
+
+
+@partial(jax.jit, static_argnames=("causal", "variant", "interpret"))
+def flash_attention_op(q, k, v, causal: bool = True,
+                       variant: str = "fa-128x128",
+                       interpret: bool | None = None):
+    """q/k/v: (B, S, H, hd) GQA layout; KV heads are repeated to full heads
+    and folded into the batch dim for the kernel."""
+    B, Sq, Hq, d = q.shape
+    Hkv = k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, -1, d)
+    bq, bkv = VARIANTS[variant]
+    bq = min(bq, Sq)
+    bkv = min(bkv, kf.shape[1])
+    interp = default_interpret() if interpret is None else interpret
+    out = flash_attention(qf, kf, vf, causal=causal, bq=bq, bkv=bkv,
+                          interpret=interp)
+    return out.reshape(B, Hq, Sq, d).transpose(0, 2, 1, 3)

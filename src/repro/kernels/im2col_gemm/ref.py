@@ -1,0 +1,8 @@
+"""Oracle for the fused conv kernel: the pure-jnp im2col primitive."""
+import jax.numpy as jnp
+
+from repro.primitives.conv import reference_conv
+
+
+def conv_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    return reference_conv(x, w, stride)

@@ -1,0 +1,64 @@
+"""Tiled MXU matmul Pallas kernel with configurable block shapes.
+
+The (bm, bk, bn) block configuration is the TPU analogue of the paper's
+"primitive variants" (DESIGN.md §2.2): each config is a selectable
+implementation whose cost the performance model predicts, and the autotune
+pipeline PBQP-selects per matmul site. Blocks tile VMEM; the inner jnp.dot
+maps onto the 128x128 MXU, so hardware-aligned configs keep bm/bk/bn at
+multiples of 128.
+
+Grid is (M/bm, N/bn, K/bk) with the K dimension innermost (sequential on
+TPU), accumulating into an f32 VMEM scratch tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128, bk: int = 128,
+           bn: int = 128, out_dtype=None, interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) @ y: (K, N) -> (M, N). Shapes need not divide blocks
+    (Pallas masks edge tiles; zero-fill is exact for the K reduction)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    out_dtype = out_dtype or x.dtype
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    # pad to block multiples: partial edge tiles are undefined on TPU (and
+    # NaN-poisoned in interpret mode); zero padding is exact for the K
+    # reduction and sliced away on M/N.
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        y = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+    return out[:m, :n]

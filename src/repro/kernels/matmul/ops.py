@@ -1,0 +1,39 @@
+"""Jitted wrapper + variant registry for the tiled matmul kernel.
+
+``VARIANTS`` is the kernel-config pool the autotune feature (repro.core.
+autotune) selects from — the TPU analogue of the paper's primitive table.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+
+from repro.kernels.common import default_interpret
+from repro.kernels.matmul.matmul import matmul
+
+# (bm, bk, bn) pool: MXU-aligned tilings trading VMEM footprint for reuse.
+VARIANTS: Dict[str, Tuple[int, int, int]] = {
+    "mm-128x128x128": (128, 128, 128),
+    "mm-256x128x128": (256, 128, 128),
+    "mm-128x128x256": (128, 128, 256),
+    "mm-256x128x256": (256, 128, 256),
+    "mm-512x128x128": (512, 128, 128),
+    "mm-128x256x128": (128, 256, 128),
+    "mm-256x256x256": (256, 256, 256),
+    "mm-512x256x256": (512, 256, 256),
+}
+
+
+@partial(jax.jit, static_argnames=("variant", "interpret"))
+def matmul_op(x, y, variant: str = "mm-128x128x128", interpret: bool | None = None):
+    bm, bk, bn = VARIANTS[variant]
+    interp = default_interpret() if interpret is None else interpret
+    return matmul(x, y, bm=bm, bk=bk, bn=bn, interpret=interp)
+
+
+def vmem_bytes(variant: str, dtype_bytes: int = 2) -> int:
+    """Working-set estimate per grid step — used as an autotune feature."""
+    bm, bk, bn = VARIANTS[variant]
+    return dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn

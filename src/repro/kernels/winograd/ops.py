@@ -1,0 +1,49 @@
+"""Full Winograd F(2x2,3x3) conv: jnp transforms around the Pallas
+point-GEMM (the compute-bound stage)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.winograd.winograd import winograd_point_gemm
+from repro.primitives.conv import _WINO_SETS
+
+VARIANTS = {"wino-128x128": (128, 128), "wino-256x128": (256, 128),
+            "wino-128x256": (128, 256)}
+
+
+@partial(jax.jit, static_argnames=("variant", "interpret"))
+def winograd_conv_op(x: jnp.ndarray, w: jnp.ndarray,
+                     variant: str = "wino-128x128",
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """x: (C, H, W); w: (K, C, 3, 3) -> (K, H-2, W-2). Stride 1."""
+    AT, G, BT = (jnp.asarray(a, jnp.float32) for a in _WINO_SETS[(2, 3)])
+    C, H, W = x.shape
+    K = w.shape[0]
+    m, n = 2, 4
+    oh, ow = H - 2, W - 2
+    th, tw = -(-oh // m), -(-ow // m)
+    ph, pw = (th - 1) * m + n, (tw - 1) * m + n
+    xp = jnp.pad(x, ((0, 0), (0, ph - H), (0, pw - W)))
+    rows = []
+    for a in range(n):
+        cols = [xp[:, a:a + (th - 1) * m + 1:m, b:b + (tw - 1) * m + 1:m]
+                for b in range(n)]
+        rows.append(jnp.stack(cols, -1))
+    tiles = jnp.stack(rows, -2)                               # (C, th, tw, n, n)
+    V = jnp.einsum("ap,cijpq,qb->abcij", BT, tiles.astype(jnp.float32), BT.T)
+    V = V.reshape(n * n, C, th * tw)                          # (16, C, T)
+    U = jnp.einsum("ar,kcrs,sb->abkc", G, w.astype(jnp.float32), G.T)
+    U = U.reshape(n * n, K, C)
+
+    bk, bt = VARIANTS[variant]
+    interp = default_interpret() if interpret is None else interpret
+    M = winograd_point_gemm(U, V.astype(U.dtype), bk=bk, bt=bt,
+                            interpret=interp)                 # (16, K, T)
+    M = M.reshape(n, n, K, th, tw)
+    Y = jnp.einsum("ap,pqkij,qm->kiajm", AT, M, AT.T)         # (K, th, m, tw, m)
+    y = Y.reshape(K, th * m, tw * m)
+    return y[:, :oh, :ow].astype(x.dtype)

@@ -1,0 +1,13 @@
+"""Oracles for the Winograd kernel: point-GEMM einsum + full conv."""
+import jax.numpy as jnp
+
+from repro.primitives.conv import reference_conv
+
+
+def point_gemm_ref(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("pkc,pct->pkt", u.astype(jnp.float32),
+                      v.astype(jnp.float32)).astype(u.dtype)
+
+
+def conv3x3_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return reference_conv(x, w, 1)

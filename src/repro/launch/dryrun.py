@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DEVICES", "512")).strip()
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run driver.
+
+For one (architecture x input-shape x mesh) cell:
+  lower -> compile -> memory_analysis -> cost_analysis -> HLO roofline terms
+and write a JSON artifact under artifacts/dryrun/. Run all cells with
+``python -m repro.launch.dryrun --all`` (each cell in a subprocess so the
+forced device count matches its mesh: 256 single-pod, 512 multi-pod).
+
+This is the proof-of-coherence for the production mesh: sharding mismatch,
+compile-time OOM or an unsupported collective fails the cell loudly.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             fsdp: bool = True, grad_accum: int = 1,
+             seq_parallel: bool = True, save_hlo: bool = False) -> dict:
+    import jax
+    from repro.configs import base as CB
+    from repro.dist import hloanalysis as HA
+    from repro.launch import shapes as SHP
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps as ST
+
+    cfg = CB.get(arch)
+    if not SHP.cell_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": "full attention: no long-decode"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    bound = ST.bind_cell(cfg, shape, mesh, fsdp_train=fsdp, grad_accum=grad_accum,
+                         seq_parallel=seq_parallel)
+
+    donate = (0, 1) if bound.static_info.get("step") == "train" else \
+             ((1,) if bound.static_info.get("step") == "decode" else ())
+    with mesh:
+        lowered = jax.jit(bound.fn, in_shardings=bound.in_shardings,
+                          out_shardings=bound.out_shardings,
+                          donate_argnums=donate).lower(*bound.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    costs = HA.analyze(hlo_text)
+
+    cell = SHP.SHAPES[shape]
+    if cell.step == "train":
+        tokens = cell.seq_len * cell.global_batch
+        n = cfg.n_active_params() if cfg.moe is not None else cfg.n_params()
+        model_flops = 6.0 * n * tokens
+    elif cell.step == "prefill":
+        tokens = cell.seq_len * cell.global_batch
+        n = cfg.n_active_params() if cfg.moe is not None else cfg.n_params()
+        model_flops = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        n = cfg.n_active_params() if cfg.moe is not None else cfg.n_params()
+        model_flops = 2.0 * n * cell.global_batch
+
+    roof = HA.roofline_from_costs(costs, n_chips, model_flops)
+    result = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": n_chips,
+        "step_kind": cell.step, **bound.static_info,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+        },
+        "cost_analysis": {k: ca.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")
+                          if k in ca},
+        "hlo": {
+            "flops_per_device": costs.flops,
+            "bytes_per_device": costs.bytes,
+            "collective_bytes": dict(costs.collective_bytes),
+            "collective_count": dict(costs.collective_count),
+        },
+        "roofline": roof.to_dict(),
+        "n_params": cfg.n_params(),
+    }
+    if save_hlo:
+        hpath = os.path.join(out_dir, f"{arch}.{shape}.{'multi' if multi_pod else 'single'}.hlo.txt")
+        with open(hpath, "w") as f:
+            f.write(hlo_text)
+        result["hlo_path"] = hpath
+    return result
+
+
+def _artifact_path(out_dir: str, arch: str, shape: str, multi_pod: bool,
+                   tag: str = "") -> str:
+    suffix = "multi" if multi_pod else "single"
+    tag = f".{tag}" if tag else ""
+    return os.path.join(out_dir, f"{arch}.{shape}.{suffix}{tag}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell in subprocesses")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf experiments")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true",
+                    help="disable Megatron-style sequence-parallel residual stream (baseline)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true", help="rerun cached cells")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro.configs.base import ASSIGNED_ARCHS
+        shapes = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+        failures = []
+        for mesh_kind in ("single", "multi"):
+            for arch in ASSIGNED_ARCHS:
+                for shape in shapes:
+                    path = _artifact_path(args.out, arch, shape, mesh_kind == "multi", args.tag)
+                    if os.path.exists(path) and not args.force:
+                        print(f"cached  {path}")
+                        continue
+                    devices = "512" if mesh_kind == "multi" else "256"
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                           "--out", args.out]
+                    if args.no_fsdp:
+                        cmd.append("--no-fsdp")
+                    if args.no_seq_parallel:
+                        cmd.append("--no-seq-parallel")
+                    if args.tag:
+                        cmd += ["--tag", args.tag]
+                    if args.grad_accum != 1:
+                        cmd += ["--grad-accum", str(args.grad_accum)]
+                    env = dict(os.environ, REPRO_DEVICES=devices,
+                               PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+                    t0 = time.time()
+                    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    status = "OK" if r.returncode == 0 else "FAIL"
+                    print(f"{status:5s} {arch:20s} {shape:12s} {mesh_kind:6s} "
+                          f"{time.time()-t0:6.1f}s")
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mesh_kind, r.stderr[-2000:]))
+        for f in failures:
+            print("FAILURE:", f[0], f[1], f[2], "\n", f[3][:1000])
+        return 1 if failures else 0
+
+    # single cell (this process owns the forced device count)
+    result = {"arch": args.arch, "shape": args.shape,
+              "multi_pod": args.mesh == "multi", "status": "error"}
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh == "multi", args.out,
+                          fsdp=not args.no_fsdp, grad_accum=args.grad_accum,
+                          seq_parallel=not args.no_seq_parallel,
+                          save_hlo=args.save_hlo)
+    except Exception:
+        result["traceback"] = traceback.format_exc()
+        print(result["traceback"], file=sys.stderr)
+    path = _artifact_path(args.out, args.arch, args.shape, args.mesh == "multi", args.tag)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    mem = result.get("memory", {})
+    roof = result.get("roofline", {})
+    print(json.dumps({k: result.get(k) for k in
+                      ("arch", "shape", "multi_pod", "status", "compile_s")}))
+    if result["status"] == "ok":
+        print(f"per-device bytes: args={mem['argument_bytes']/1e9:.2f}G "
+              f"temp={mem['temp_bytes']/1e9:.2f}G | "
+              f"terms: compute={roof['compute_s']*1e3:.2f}ms "
+              f"memory={roof['memory_s']*1e3:.2f}ms "
+              f"collective={roof['collective_s']*1e3:.2f}ms "
+              f"dominant={roof['dominant']}")
+    return 0 if result["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

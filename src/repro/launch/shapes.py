@@ -1,0 +1,82 @@
+"""Assigned input-shape cells and per-(arch x shape) input_specs.
+
+Four shape cells (assignment brief):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (serve)
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token, KV=seq)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; SSM/hybrid/SWA only
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input — no device allocation, the dry-run pattern. Modality frontends are
+stubs: internvl2 gets 256 precomputed patch embeddings, whisper gets frame
+embeddings of the full sequence length (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: str) -> bool:
+    """long_500k only for sub-quadratic-decode archs (DESIGN.md §4)."""
+    if shape == "long_500k":
+        return cfg.supports_long_decode
+    return True
+
+
+def input_specs(cfg: ArchConfig, shape: str, dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: {'tokens', 'labels'?, 'prefix_embeds'?, 'enc_embeds'?}
+    decode:        {'tokens' (B,1), 'pos' (), 'cache': {...}}
+    """
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    if not cell_applicable(cfg, shape):
+        raise ValueError(f"{cfg.name} does not run {shape} (full attention)")
+
+    if cell.step in ("train", "prefill"):
+        s_text = S - (cfg.prefix_tokens if cfg.prefix_tokens else 0)
+        specs: Dict = {"tokens": SDS((B, s_text), jnp.int32)}
+        if cell.step == "train":
+            specs["labels"] = SDS((B, s_text), jnp.int32)
+        if cfg.prefix_tokens:
+            specs["prefix_embeds"] = SDS((B, cfg.prefix_tokens, cfg.d_model), dtype)
+        if cfg.kind == "encdec":
+            specs["enc_embeds"] = SDS((B, S, cfg.d_model), dtype)
+        return specs
+
+    # decode: one new token against a cache of S. eval_shape — the cache is
+    # never allocated (decode_32k caches run to terabytes globally).
+    from repro.models import transformer as T
+    cache_specs = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, enc_len=S if cfg.kind == "encdec" else 0,
+                             dtype=dtype))
+    return {
+        "tokens": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "cache": cache_specs,
+    }

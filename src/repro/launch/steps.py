@@ -1,0 +1,202 @@
+"""Step-function factories: train_step / prefill_step / serve_step per arch,
+plus the sharding trees the launcher and dry-run bind them with.
+
+train_step is the full update: loss -> grads -> optimizer. llama3-405b uses
+Adafactor (factored second moments) so optimizer state fits v5e HBM
+(DESIGN.md §4); everything else uses AdamW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist import sharding as SH
+from repro.models import transformer as T
+from repro.train import optim as optim_lib
+
+OPTIMIZER_FOR_ARCH = {"llama3_405b": "adafactor"}
+DEFAULT_LR = 3e-4
+
+
+def optimizer_for(cfg: ArchConfig) -> Tuple[str, optim_lib.Optimizer]:
+    name = OPTIMIZER_FOR_ARCH.get(cfg.name, "adamw")
+    if name == "adafactor":
+        return name, optim_lib.adafactor(DEFAULT_LR)
+    return name, optim_lib.adamw(DEFAULT_LR, weight_decay=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt: optim_lib.Optimizer,
+                    grad_accum: int = 1,
+                    aspec: Optional[T.ActShard] = None,
+                    grad_dtype=None) -> Callable:
+    """Full training step. With ``grad_accum > 1`` the global batch is split
+    into microbatches scanned sequentially (memory/throughput knob).
+
+    ``grad_dtype=jnp.bfloat16`` enables gradient compression: gradients are
+    cast before the cross-replica reduction, halving the DP/pod-axis
+    all-reduce bytes (the DCN-crossing collective on multi-pod meshes) at
+    the cost of ~8 bits of gradient mantissa — the standard large-fleet
+    trade (optimizer statistics stay f32)."""
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(p, cfg, batch, aspec=aspec), has_aux=True)(params)
+        else:
+            def micro(i, carry):
+                acc_loss, acc_grads = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // grad_accum), x.shape[0] // grad_accum, 0)
+                    if hasattr(x, "ndim") and x.ndim else x, batch)
+                (l, _), g = jax.value_and_grad(
+                    lambda p: T.loss_fn(p, cfg, mb, aspec=aspec), has_aux=True)(params)
+                return (acc_loss + l, jax.tree.map(jnp.add, acc_grads, g))
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            loss, grads = jax.lax.fori_loop(
+                0, grad_accum, micro, (jnp.zeros((), jnp.float32), zero))
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        if grad_dtype is not None:
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, aspec: Optional[T.ActShard] = None) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch["tokens"],
+                         prefix_embeds=batch.get("prefix_embeds"),
+                         enc_embeds=batch.get("enc_embeds"), aspec=aspec)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, aspec: Optional[T.ActShard] = None) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cfg, cache, tokens, pos, aspec=aspec)
+    return serve_step
+
+
+def make_aspec(mesh: Mesh, global_batch: int, seq_parallel: bool = False
+               ) -> Optional[T.ActShard]:
+    """Activation-sharding constraints for this mesh/batch. Batch axes are
+    dropped when the batch does not divide them (long_500k B=1)."""
+    dp = SH.dp_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    if global_batch % n != 0:
+        dp = ()
+    return T.ActShard(dp=dp, tp="model", seq=seq_parallel,
+                      tp_size=mesh.shape.get("model", 0))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state shardings (mirror the parameter shardings)
+# ---------------------------------------------------------------------------
+
+def make_opt_shardings(mesh: Mesh, params_like: Any, opt_name: str,
+                       fsdp: bool = True) -> Any:
+    repl = NamedSharding(mesh, P())
+
+    def pspec(path, leaf):
+        return SH.param_spec(SH._path_str(path), tuple(leaf.shape), mesh, fsdp=fsdp)
+
+    if opt_name in ("adam", "adamw"):
+        mirror = jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(mesh, pspec(p, l)), params_like)
+        return {"step": repl, "m": mirror, "v": mirror}
+
+    if opt_name == "adafactor":
+        def factored(path, leaf):
+            spec = pspec(path, leaf)
+            t = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+            if len(leaf.shape) >= 2 and min(leaf.shape[-1], leaf.shape[-2]) >= 128:
+                return {"vr": NamedSharding(mesh, P(*t[:-1])),
+                        "vc": NamedSharding(mesh, P(*(t[:-2] + (t[-1],)))),
+                        "v": None}
+            return {"vr": None, "vc": None, "v": NamedSharding(mesh, P(*t))}
+        return {"step": repl,
+                "v": jax.tree_util.tree_map_with_path(factored, params_like)}
+
+    raise ValueError(opt_name)
+
+
+# ---------------------------------------------------------------------------
+# Full dry-run binding for one (arch x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BoundStep:
+    fn: Callable
+    args: tuple                  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    static_info: Dict[str, Any]
+
+
+def bind_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+              fsdp_train: bool = True, grad_accum: int = 1,
+              serve_fsdp: Optional[bool] = None,
+              seq_parallel: bool = False) -> BoundStep:
+    """Build (fn, SDS args, shardings) for a dry-run cell."""
+    from repro.launch import shapes as SHP
+    cell = SHP.SHAPES[shape_name]
+    specs = SHP.input_specs(cfg, shape_name)
+    repl = NamedSharding(mesh, P())
+    aspec = make_aspec(mesh, cell.global_batch, seq_parallel)
+
+    def params_sds():
+        return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+    if cell.step == "train":
+        opt_name, opt = optimizer_for(cfg)
+        p_sds = params_sds()
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        p_sh = SH.make_param_shardings(mesh, p_sds, fsdp=fsdp_train)
+        o_sh = make_opt_shardings(mesh, p_sds, opt_name, fsdp=fsdp_train)
+        b_sh = SH.make_batch_shardings(mesh, specs)
+        fn = make_train_step(cfg, opt, grad_accum=grad_accum, aspec=aspec)
+        return BoundStep(fn, (p_sds, o_sds, specs), (p_sh, o_sh, b_sh),
+                         (p_sh, o_sh, repl),
+                         {"step": "train", "optimizer": opt_name})
+
+    if cell.step == "prefill":
+        p_sds = params_sds()
+        # serving keeps parameters 2D-sharded only when TP-only does not fit
+        big = cfg.n_params() * 2 > 8e9 * mesh.shape["model"]
+        use_fsdp = serve_fsdp if serve_fsdp is not None else big
+        p_sh = SH.make_param_shardings(mesh, p_sds, fsdp=use_fsdp)
+        b_sh = SH.make_batch_shardings(mesh, specs)
+        fn = make_prefill_step(cfg, aspec=aspec)
+        with mesh:   # _cst sharding constraints need the mesh in context
+            cache_sds = jax.eval_shape(fn, p_sds, specs)[1]
+        c_sh = SH.make_cache_shardings(mesh, cache_sds)
+        return BoundStep(fn, (p_sds, specs), (p_sh, b_sh), (repl, c_sh),
+                         {"step": "prefill", "params_fsdp": use_fsdp})
+
+    # decode
+    p_sds = params_sds()
+    big = cfg.n_params() * 2 > 8e9 * mesh.shape["model"]
+    use_fsdp = serve_fsdp if serve_fsdp is not None else big
+    p_sh = SH.make_param_shardings(mesh, p_sds, fsdp=use_fsdp)
+    c_sh = SH.make_cache_shardings(mesh, specs["cache"])
+    tok_sh = SH.make_batch_shardings(mesh, specs["tokens"])
+    fn = make_serve_step(cfg, aspec=aspec)
+    args = (p_sds, specs["cache"], specs["tokens"], specs["pos"])
+    in_sh = (p_sh, c_sh, tok_sh, repl)
+    out_sh = (repl, c_sh)
+    return BoundStep(fn, args, in_sh, out_sh,
+                     {"step": "decode", "params_fsdp": use_fsdp})

@@ -1,0 +1,403 @@
+"""Transformer building blocks, pure JAX.
+
+Everything is a (params-pytree, apply-fn) pair; no framework. Conventions:
+  * activations (B, S, D); weights stored in matmul-ready orientation;
+  * attention supports GQA, sliding windows, logit soft-capping and MLA;
+  * long sequences use blockwise (online-softmax) attention under
+    ``jax.checkpoint`` so neither forward nor backward materialises S x S;
+  * every apply-fn is shape-polymorphic over batch/sequence so the same code
+    serves train_step (full sequence) and serve_step (single token + cache).
+
+Initialisers take an explicit ``jax.random`` key and a dtype; parameter
+pytrees are plain nested dicts so the sharding rules in
+``repro.dist.sharding`` can pattern-match on path names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6,
+            plus_one: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if plus_one:                       # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (x * scale).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: Optional[float] = None) -> Params:
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)}
+
+
+def dense(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"]
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["emb"][tokens]
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: (B, S, D) @ (V, D)^T."""
+    return x @ params["emb"].T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0, rot_dim: Optional[int] = None) -> jnp.ndarray:
+    rd = rot_dim if rot_dim is not None else head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0,
+               rot_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (S,) — positions are batch-independent
+    (arange for train/prefill, the scalar step for decode), which keeps all
+    mask/rotation tensors free of the batch dim. Rotates the first
+    ``rot_dim`` dims (partial rotary — chatglm3 rotates half)."""
+    hd = x.shape[-1]
+    rd = rot_dim if rot_dim is not None else hd
+    freqs = rope_freqs(hd, theta, rd)                       # (rd/2,)
+    ang = positions[:, None].astype(jnp.float32) * freqs    # (S, rd/2)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rot = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1) if rd < hd else rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+def _softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: Optional[int]) -> jnp.ndarray:
+    """(Sq, Sk) additive bias: 0 allowed / -inf masked. Positions are 1-D,
+    so the bias carries no batch dim (broadcast over batch and heads)."""
+    d = q_pos[:, None].astype(jnp.int32) - k_pos[None, :].astype(jnp.int32)
+    ok = d >= 0 if causal else jnp.ones(d.shape, bool)
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              q_pos: jnp.ndarray, k_pos: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              kv_block: int = 1024) -> jnp.ndarray:
+    """GQA attention. q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd);
+    q_pos/k_pos: (Sq,)/(Sk,) absolute positions (1-D: batch-uniform).
+
+    Sharding-aware layout choice (found via dry-run memory analysis — see
+    EXPERIMENTS.md §Perf): the grouped (B,S,Hkv,rep,hd) reshape breaks the
+    head-dim TP sharding whenever Hkv doesn't divide the model axis, forcing
+    a full all-gather of activations. So:
+      * train/prefill (Sq large): keep q as (B,S,H,hd) and broadcast K/V to
+        full heads per KV block — transient, preserves TP sharding exactly;
+      * decode (Sq == 1): grouped einsum without the broadcast — all q-side
+        tensors are single-token-sized, so resharding them is free and the
+        big cache tensors stay in their native (Hkv) layout.
+    Long Sk uses a blockwise online-softmax scan (flash-style)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    vd = v.shape[-1]                      # may differ from hd (MLA)
+    rep = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    Sk = k.shape[1]
+
+    if Sq > 1:
+        qf = (q * sc).astype(jnp.float32)
+
+        def blk_attend(kc, vc, pc):
+            if rep > 1:
+                kc = jnp.repeat(kc, rep, axis=2)
+                vc = jnp.repeat(vc, rep, axis=2)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kc,
+                                preferred_element_type=jnp.float32)
+            logits = _softcap(logits, softcap)
+            logits = logits + _mask_bias(q_pos, pc, causal, window)[None, None]
+            return logits, vc
+
+        if Sk <= max(kv_block, 2048):
+            logits, vc = blk_attend(k, v, k_pos)
+            p = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", p, vc.astype(jnp.float32))
+            return out.astype(q.dtype)
+
+        nblk = Sk // kv_block
+        assert nblk * kv_block == Sk, "Sk must divide kv_block for blockwise path"
+        kb = jnp.moveaxis(k.reshape(B, nblk, kv_block, Hkv, hd), 1, 0)
+        vb = jnp.moveaxis(v.reshape(B, nblk, kv_block, Hkv, vd), 1, 0)
+        pb = k_pos.reshape(nblk, kv_block)
+
+        def body(carry, blk):
+            m, l, acc = carry
+            kc, vc, pc = blk
+            logits, vc = blk_attend(kc, vc, pc)             # (B, H, Sq, kb)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, Sq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+        a0 = jnp.zeros((B, Hq, Sq, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)      # (B, Sq, H, vd)
+
+    # ---- decode path (Sq == 1): grouped single-shot, no K/V broadcast ----
+    # Blockwise online softmax is pointless at Sq=1: logits are only
+    # (B, H, 1, Sk) (~100 MB at 32k) and a KV-block scan over the
+    # sequence-sharded cache forces per-block resharding collectives (and
+    # blew up SPMD compile memory — see EXPERIMENTS.md §Perf). One-shot
+    # softmax over the sharded Sk lowers to a clean psum-of-max/sum pattern.
+    qf = (q * sc).astype(jnp.float32).reshape(B, Sq, Hkv, rep, hd)
+    logits = jnp.einsum("bqgrh,bkgh->bgrqk", qf, k,
+                        preferred_element_type=jnp.float32)
+    logits = _softcap(logits, softcap)
+    logits = logits + _mask_bias(q_pos, k_pos, causal, window)[None, None, None]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, vd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16, qkv_bias: bool = False) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d, n_kv * head_dim, dtype),
+        "wv": dense_init(k3, d, n_kv * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_project(params: Params, x: jnp.ndarray, n_heads: int, n_kv: int,
+                head_dim: int, positions: jnp.ndarray, rope_theta: float,
+                rot_dim: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    q = dense(params["wq"], x)
+    k = dense(params["wk"], x)
+    v = dense(params["wv"], x)
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta, rot_dim)
+        k = apply_rope(k, positions, rope_theta, rot_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    q_lora: int = 768
+    kv_lora: int = 256
+    qk_nope: int = 64
+    qk_rope: int = 32
+    v_head: int = 64
+
+
+def mla_init(key, d: int, n_heads: int, dims: MLADims, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    qk_head = dims.qk_nope + dims.qk_rope
+    return {
+        "wdq": dense_init(ks[0], d, dims.q_lora, dtype),
+        "q_norm": rmsnorm_init(dims.q_lora),
+        "wuq": dense_init(ks[1], dims.q_lora, n_heads * qk_head, dtype),
+        "wdkv": dense_init(ks[2], d, dims.kv_lora, dtype),
+        "kv_norm": rmsnorm_init(dims.kv_lora),
+        "wkr": dense_init(ks[3], d, dims.qk_rope, dtype),
+        "wukv": dense_init(ks[4], dims.kv_lora, n_heads * (dims.qk_nope + dims.v_head), dtype),
+        "wo": dense_init(ks[5], n_heads * dims.v_head, d, dtype),
+    }
+
+
+def mla_project(params: Params, x: jnp.ndarray, n_heads: int, dims: MLADims,
+                positions: jnp.ndarray, rope_theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q, c_kv, k_rope, positions-ready). The compressed latent
+    (c_kv, k_rope) is what decode caches — 288 dims/token vs 2*H*hd."""
+    B, S, _ = x.shape
+    cq = rmsnorm(params["q_norm"], dense(params["wdq"], x))
+    q = dense(params["wuq"], cq).reshape(B, S, n_heads, dims.qk_nope + dims.qk_rope)
+    q_nope, q_rope = q[..., :dims.qk_nope], q[..., dims.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], dense(params["wdkv"], x))   # (B, S, kv_lora)
+    k_rope = dense(params["wkr"], x).reshape(B, S, 1, dims.qk_rope)
+    k_rope = apply_rope(k_rope, positions, rope_theta)
+    return q, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_attend(params: Params, q: jnp.ndarray, c_kv: jnp.ndarray,
+               k_rope: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+               n_heads: int, dims: MLADims, *, causal: bool = True,
+               kv_block: int = 1024) -> jnp.ndarray:
+    """q: (B,Sq,H,qk); c_kv: (B,Sk,kv_lora); k_rope: (B,Sk,qk_rope).
+
+    Train/prefill: expand the latent to per-head K/V and run full attention.
+    Decode (Sq==1): ABSORBED path (DeepSeek-V2 trick) — fold W_uk into the
+    query and W_uv into the output so attention runs directly in the
+    compressed latent space; the (B,Sk,H,·) expansion never materialises and
+    per-token KV reads drop from 2*H*hd to kv_lora + qk_rope floats."""
+    B, Sk, _ = c_kv.shape
+    Sq = q.shape[1]
+    scale = 1.0 / math.sqrt(dims.qk_nope + dims.qk_rope)
+
+    if Sq == 1:
+        w = params["wukv"]["w"].reshape(-1, n_heads, dims.qk_nope + dims.v_head)
+        w_uk, w_uv = w[..., :dims.qk_nope], w[..., dims.qk_nope:]
+        q_nope, q_rope = q[..., :dims.qk_nope], q[..., dims.qk_nope:]
+        q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        logits = (jnp.einsum("bqhc,bkc->bhqk", q_lat, c_kv.astype(jnp.float32))
+                  + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                               k_rope.astype(jnp.float32))) * scale
+        logits = logits + _mask_bias(q_pos, k_pos, causal, None)[None, None]
+        p = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkc->bqhc", p, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bqhc,chv->bqhv", o_lat, w_uv.astype(jnp.float32))
+        return dense(params["wo"], out.astype(q.dtype).reshape(B, 1, n_heads * dims.v_head))
+
+    kv = dense(params["wukv"], c_kv).reshape(B, Sk, n_heads, dims.qk_nope + dims.v_head)
+    k_nope, v = kv[..., :dims.qk_nope], kv[..., dims.qk_nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, Sk, n_heads, dims.qk_rope))], axis=-1)
+    out = attention(q, k, v, q_pos, k_pos, causal=causal, scale=scale, kv_block=kv_block)
+    return dense(params["wo"], out.reshape(B, Sq, n_heads * dims.v_head))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype=jnp.bfloat16, gated: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp(params: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    h = dense(params["w_up"], x)
+    if "w_gate" in params:
+        g = dense(params["w_gate"], x)
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        h = g * h
+    else:
+        h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    return dense(params["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy (sequence-chunked: never materialises (B, S, V) at once)
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(emb_params: Params, h: jnp.ndarray, labels: jnp.ndarray,
+                    n_chunks: int = 8, softcap: Optional[float] = None,
+                    label_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h: (B, S, D) final hidden; labels: (B, S). Computes mean CE by
+    scanning over S/n_chunks slabs — the full (B, S, V) logits tensor never
+    exists, which is what keeps the 128k-vocab archs inside HBM."""
+    B, S, D = h.shape
+    n_chunks = min(n_chunks, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    hs = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+    if label_mask is None:
+        ms = jnp.ones_like(ls, jnp.float32)
+    else:
+        ms = label_mask.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2).astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # checkpointed: the (B, S/n, V) logits of each chunk are recomputed
+        # in backward instead of stored (8 x 2.1 GB/device at 65k vocab).
+        hc, lc, mc = xs
+        logits = unembed(emb_params, hc).astype(jnp.float32)
+        logits = _softcap(logits, softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mc
+        return (carry[0] + jnp.sum(ce), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

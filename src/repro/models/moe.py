@@ -1,0 +1,170 @@
+"""Mixture-of-Experts layer (Mixtral 8x7b top-2, Qwen3-MoE 128x top-8).
+
+Capacity-based top-k routing with scatter dispatch / gather combine:
+tokens are routed per sequence-row (so the dispatch is shardable over the
+batch/data axis with no global resort), experts run as one batched GEMM
+over the expert axis (shardable over the model axis = expert parallelism;
+XLA inserts the all-to-all at the dispatch/combine boundaries). Dropped
+tokens (capacity overflow) pass through the residual, standard practice.
+
+An auxiliary load-balance loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.components import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                 # per-expert hidden
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    dispatch: str = "sort"    # "sort" (optimized) | "scatter" (baseline)
+
+
+def moe_init(key, d: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": dense_init(k1, d, cfg.n_experts, jnp.float32),
+        "w_gate": (jax.random.normal(k2, (cfg.n_experts, d, cfg.d_ff), jnp.float32) * s).astype(dtype),
+        "w_up": (jax.random.normal(k3, (cfg.n_experts, d, cfg.d_ff), jnp.float32) * s).astype(dtype),
+        "w_down": (jax.random.normal(k4, (cfg.n_experts, cfg.d_ff, d), jnp.float32)
+                   / math.sqrt(cfg.d_ff)).astype(dtype),
+    }
+
+
+def _route(params: Dict, x: jnp.ndarray, cfg: MoEConfig):
+    """Shared router: top-k indices/weights + Switch aux loss."""
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @ params["router"]["w"])          # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                      # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Switch aux loss: E * sum_e f_e * p_e  (f_e computed WITHOUT a dense
+    # (B,S,K,E) one-hot: scatter-add of ones into (B, E))
+    me = jnp.mean(probs, axis=(0, 1))
+    B, S, _ = x.shape
+    counts = jnp.zeros((B, E), jnp.float32).at[
+        jnp.arange(B)[:, None, None], gate_idx].add(1.0)
+    fe = jnp.mean(counts, axis=0) / S
+    aux = cfg.aux_coef * E * jnp.sum(me * fe)
+    return gate_idx, gate_vals, aux
+
+
+def _experts(params: Dict, buf: jnp.ndarray) -> jnp.ndarray:
+    """Batched expert FFN over (B, E, C, D) buffers — the expert dim is the
+    EP shard axis; XLA places the all-to-all at the buffer boundaries."""
+    h = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    h = jax.nn.silu(h) * u
+    return jnp.einsum("becf,efd->becd", h, params["w_down"])
+
+
+def _buf_cst(buf: jnp.ndarray, cfg: MoEConfig, aspec) -> jnp.ndarray:
+    """Pin the (B, E, C, D) expert-buffer sharding: batch over dp, experts
+    over the TP axis when they divide it (expert parallelism). Without this
+    the partitioner may contract the FSDP-sharded weight dim instead —
+    observed as a per-layer all-reduce of a GLOBAL-batch (B, E, C, ff)
+    tensor (EXPERIMENTS.md §Perf iteration 2)."""
+    if aspec is None:
+        return buf
+    from jax.sharding import PartitionSpec as P
+    ep = aspec.tp_size and cfg.n_experts % aspec.tp_size == 0
+    spec = P(aspec.dp, aspec.tp if ep else None, None, None)
+    return jax.lax.with_sharding_constraint(buf, spec)
+
+
+def moe_apply(params: Dict, x: jnp.ndarray, cfg: MoEConfig, aspec=None,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss). Dispatch impl per cfg.dispatch."""
+    if cfg.dispatch == "sort":
+        return _moe_sort(params, x, cfg, aspec)
+    return _moe_scatter(params, x, cfg, aspec)
+
+
+def _moe_scatter(params: Dict, x: jnp.ndarray, cfg: MoEConfig, aspec=None,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """BASELINE dispatch (recorded in EXPERIMENTS.md §Perf): positions from a
+    dense (B, S*K, E) one-hot cumsum — O(S*K*E) memory, the dominant cost at
+    E=128 — and a scatter-add of the full (B, S, K, D) token copies."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * S * K / E))
+    gate_idx, gate_vals, aux = _route(params, x, cfg)
+
+    one_hot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)           # (B, S, K, E)
+    flat_hot = one_hot.reshape(B, S * K, E)
+    pos = (jnp.cumsum(flat_hot, axis=1) - flat_hot)                    # (B, S*K, E)
+    pos = jnp.sum(pos * flat_hot, axis=-1).reshape(B, S, K)
+    keep = (pos < C).astype(x.dtype) * gate_vals.astype(x.dtype)
+    pos = jnp.minimum(pos, C - 1).astype(jnp.int32)
+
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    bidx = jnp.arange(B)[:, None, None]
+    mask = (keep > 0).astype(x.dtype)[..., None]
+    xk = jnp.broadcast_to(x[:, :, None, :], (B, S, K, D)) * mask
+    buf = _buf_cst(buf.at[bidx, gate_idx, pos].add(xk), cfg, aspec)
+
+    y = _buf_cst(_experts(params, buf), cfg, aspec)
+    out = y[bidx, gate_idx, pos] * keep[..., None]
+    return out.sum(2), aux
+
+
+def _moe_sort(params: Dict, x: jnp.ndarray, cfg: MoEConfig, aspec=None,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch (optimized; EXPERIMENTS.md §Perf iteration 1):
+    expert positions come from an argsort over the (B, S*K) expert ids —
+    every routing tensor is O(S*K) ints instead of the O(S*K*E) one-hot —
+    and expert buffers are built by GATHER (token-id table per slot) instead
+    of a (B,S,K,D)-sized scatter-add."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * S * K / E))
+    gate_idx, gate_vals, aux = _route(params, x, cfg)
+
+    flat_e = gate_idx.reshape(B, S * K)                                # (B, N)
+    N = S * K
+    order = jnp.argsort(flat_e, axis=1, stable=True)                   # (B, N)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    # position within each expert's run
+    ar = jnp.arange(N, dtype=jnp.int32)[None]
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+    run_start = jax.lax.cummax(jnp.where(is_start, ar, -1), axis=1)
+    pos_sorted = ar - run_start                                        # (B, N)
+    # token-id (flattened S*K slot) feeding each (e, c) buffer slot;
+    # capacity overflow routes to the out-of-bounds slot E*C, which
+    # mode="drop" discards (no collision with the last real slot).
+    slot = jnp.where(pos_sorted < C, sorted_e * C + pos_sorted, E * C)
+    token_sorted = order                                               # token*K + k
+    slot_token = jnp.zeros((B, E * C), jnp.int32).at[
+        jnp.arange(B)[:, None], slot].set(token_sorted, mode="drop")
+    slot_filled = jnp.zeros((B, E * C), bool).at[
+        jnp.arange(B)[:, None], slot].set(True, mode="drop")
+
+    # gather dispatch: (B, E, C, D)
+    src_tok = slot_token // K                                          # (B, E*C)
+    buf = jnp.take_along_axis(x, src_tok[..., None], axis=1)           # (B, E*C, D)
+    buf = jnp.where(slot_filled[..., None], buf, 0).reshape(B, E, C, D)
+    buf = _buf_cst(buf, cfg, aspec)
+
+    y = _buf_cst(_experts(params, buf), cfg, aspec).reshape(B, E * C, D)
+
+    # combine: each (token, k) reads back its slot
+    pos_tok = jnp.zeros((B, N), jnp.int32).at[
+        jnp.arange(B)[:, None], order].set(pos_sorted, mode="drop")
+    keep = (pos_tok < C).reshape(B, S, K).astype(x.dtype) * gate_vals.astype(x.dtype)
+    read_slot = (flat_e * C + jnp.minimum(pos_tok, C - 1))             # (B, N)
+    out = jnp.take_along_axis(y, read_slot[..., None], axis=1)         # (B, N, D)
+    out = out.reshape(B, S, K, D) * keep[..., None]
+    return out.sum(2), aux

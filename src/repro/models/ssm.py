@@ -1,0 +1,199 @@
+"""Mamba2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk work is
+attention-like batched GEMMs (MXU-friendly on TPU — this is the hardware
+adaptation of SSD's GPU kernel, see DESIGN.md §2.3), inter-chunk state is a
+small recurrence. Decode is the O(1)-per-token state update.
+
+Shapes: d_inner = expand * d_model, nheads = d_inner / headdim.
+x/z from in_proj; B, C per group (n_groups=1); dt per head; A scalar per
+head (Mamba2's scalar-identity structure); depthwise causal conv on the
+(x, B, C) channels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.components import dense_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    chunk: int = 256
+    n_groups: int = 1
+    d_conv: int = 4
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+def ssm_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 6)
+    din = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    conv_dim = din + 2 * cfg.n_groups * cfg.d_state
+    d_in_proj = 2 * din + 2 * cfg.n_groups * cfg.d_state + H
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(din),
+        "out_proj": dense_init(ks[2], din, d_model, dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(…, L) -> (…, L, L) lower-triangular segment sums (SSD paper)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]                 # sum_{j<i<=k}
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, g, n) with g groups broadcast over h.
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert nc * chunk == s, "sequence must be divisible by chunk"
+
+    xs = x.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h)
+    Bs = B.reshape(b, nc, chunk, g, n)
+    Cs = C.reshape(b, nc, chunk, g, n)
+    dA = dts * A[None, None, None, :]                       # (b, nc, l, h)
+    dA = jnp.moveaxis(dA, -1, 2)                            # (b, nc, h, l)
+    dA_cum = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (diagonal blocks): attention-like batched GEMMs
+    Lmat = jnp.exp(_segsum(dA))                             # (b, nc, h, l, l)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(causal, Lmat, 0.0)
+    xw = xs * dts[..., None]                                # dt-weighted input
+    # scores: C_i . B_j per head-group
+    scores = jnp.einsum("bcigs,bcjgs->bcgij", Cs, Bs)       # (b, nc, g, l, l)
+    scores = jnp.repeat(scores, rep, axis=2)                # (b, nc, h, l, l)
+    y_diag = jnp.einsum("bchij,bchij,bcjhp->bcihp", scores, Lmat.astype(scores.dtype), xw)
+
+    # 2. chunk states
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)       # (b, nc, h, l)
+    states = jnp.einsum("bclgs,bchl,bclhp->bchps",
+                        Bs, decay_states.astype(Bs.dtype), xw)  # (b, nc, h, p, n)
+
+    # 3. inter-chunk recurrence (small lax.scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                  # (b, nc, h)
+
+    def body(carry, inp):
+        st, dec = inp                                       # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit state BEFORE chunk
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros_like(states[:, 0]))
+    final, prior = jax.lax.scan(body, s0,
+                                (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prior = jnp.moveaxis(prior, 0, 1)                       # (b, nc, h, p, n)
+
+    # 4. state -> output
+    out_decay = jnp.exp(dA_cum)                             # (b, nc, h, l)
+    y_off = jnp.einsum("bclgs,bchps,bchl->bclhp",
+                       Cs, prior.astype(Cs.dtype), out_decay.astype(Cs.dtype))
+    y = (y_diag + jnp.repeat(y_off, 1, axis=0)).reshape(b, s, h, p)
+    return y, final
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. u: (B, S, C); w: (K, C). Returns (y, new_state)
+    where state carries the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state, u], axis=1)
+    y = sum(up[:, i:i + u.shape[1] + 0, :] * w[i] for i in range(K))
+    y = y[:, :u.shape[1], :] if y.shape[1] != u.shape[1] else y
+    new_state = up[:, -(K - 1):, :]
+    return jax.nn.silu(y + b), new_state
+
+
+def ssm_block(params: Dict, x: jnp.ndarray, cfg: SSMConfig, d_model: int,
+              return_state: bool = False):
+    """Full Mamba2 block (train/prefill path). x: (B, S, D) -> (B, S, D).
+    With ``return_state`` also returns (ssm_state, conv_state) for serving."""
+    B_, S, D = x.shape
+    din = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    g, n = cfg.n_groups, cfg.d_state
+
+    zxbcdt = x @ params["in_proj"]["w"]
+    z, xbc_raw, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs, Bc, Cc = jnp.split(xbc, [din, din + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    xh = xs.reshape(B_, S, H, cfg.headdim)
+    Bh = Bc.reshape(B_, S, g, n)
+    Ch = Cc.reshape(B_, S, g, n)
+    y, final_state = ssd_chunked(xh, dt, A, Bh, Ch, min(cfg.chunk, S))
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, din)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = (y @ params["out_proj"]["w"]).astype(x.dtype)
+    if return_state:
+        return out, final_state, xbc_raw[:, -(cfg.d_conv - 1):, :]
+    return out
+
+
+def ssm_decode_step(params: Dict, x: jnp.ndarray, cfg: SSMConfig, d_model: int,
+                    ssm_state: jnp.ndarray, conv_state: jnp.ndarray,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (B, 1, D); ssm_state: (B, H, P, N);
+    conv_state: (B, d_conv-1, conv_dim). Returns (y, ssm_state, conv_state)."""
+    B_, _, D = x.shape
+    din = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    g, n = cfg.n_groups, cfg.d_state
+
+    zxbcdt = x @ params["in_proj"]["w"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs, Bc, Cc = jnp.split(xbc, [din, din + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]   # (B, H)
+    A = -jnp.exp(params["A_log"])
+
+    xh = xs.reshape(B_, H, cfg.headdim)
+    Bh = jnp.repeat(Bc.reshape(B_, g, n), H // g, axis=1)       # (B, H, N)
+    Ch = jnp.repeat(Cc.reshape(B_, g, n), H // g, axis=1)
+    dA = jnp.exp(dt * A[None, :])                               # (B, H)
+    upd = (dt[..., None] * xh)[..., None] * Bh[:, :, None, :]   # (B, H, P, N)
+    ssm_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state.astype(Ch.dtype), Ch)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(B_, 1, din)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return (y @ params["out_proj"]["w"]).astype(x.dtype), ssm_state, conv_state

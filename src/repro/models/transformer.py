@@ -1,0 +1,697 @@
+"""Model assembly for all assigned architecture families.
+
+One parameterised stack covers: dense GQA decoders (llama3, chatglm3,
+gemma2 incl. local/global alternation + softcaps, internvl2 with a stubbed
+vision prefix), MLA (minicpm3), MoE (mixtral, qwen3-moe), pure SSM (mamba2),
+hybrid SSM + shared attention (zamba2) and encoder-decoder (whisper).
+
+Layers are scanned (``jax.lax.scan`` over stacked parameters) so compiled
+HLO size is O(1) in depth — at 126 layers x 512 devices this is what keeps
+dry-run compiles tractable — with ``jax.checkpoint`` rematerialisation for
+training. The same block functions serve training (full sequence) and
+decode (single token + cache): caches thread through the layer scan as
+per-layer xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import components as C
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+_BIG_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ActShard:
+    """How to pin activation shardings inside the jitted step. Without
+    explicit constraints GSPMD propagates the FSDP *parameter* shardings
+    (which place the 'data' axis on feature dims) into the activations and
+    silently drops batch parallelism — observed as global-batch-sized
+    attention buffers per device (EXPERIMENTS.md §Perf). ``dp`` = batch
+    axes; ``seq`` = sequence-parallel residual stream (Megatron SP): the
+    sequence dim of h is sharded over the TP axis between blocks."""
+    dp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+    seq: bool = False
+    tp_size: int = 0          # size of the tp axis (0 = unknown)
+
+
+def _cst(h: jnp.ndarray, a: Optional["ActShard"]) -> jnp.ndarray:
+    """Constrain a (B, S, D) activation (or (B, 1, D) decode activation)."""
+    if a is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+    seq_ax = a.tp if (a.seq and h.shape[1] > 1) else None
+    return jax.lax.with_sharding_constraint(h, P(a.dp, seq_ax, None))
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ArchConfig, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return C.layernorm_init(d)
+    return C.rmsnorm_init(d)
+
+
+def _norm(cfg: ArchConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return C.layernorm(p, x, cfg.norm_eps)
+    return C.rmsnorm(p, x, cfg.norm_eps, plus_one=(cfg.norm == "rmsnorm1p"))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer parameter initialisers
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: ArchConfig) -> Params:
+    if cfg.attn_kind == "mla":
+        return C.mla_init(key, cfg.d_model, cfg.n_heads, cfg.mla, cfg.param_dtype)
+    return C.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                      cfg.param_dtype, qkv_bias=cfg.qkv_bias)
+
+
+def _dense_block_init(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "ln_attn": _norm_init(cfg, cfg.d_model),
+        "attn": _attn_init(k1, cfg),
+        "ln_mlp": _norm_init(cfg, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = M.moe_init(k2, cfg.d_model, cfg.moe, cfg.param_dtype)
+    else:
+        p["mlp"] = C.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    if cfg.post_norms:
+        p["ln_attn_post"] = _norm_init(cfg, cfg.d_model)
+        p["ln_mlp_post"] = _norm_init(cfg, cfg.d_model)
+    return p
+
+
+def _ssm_block_init(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"ln": _norm_init(cfg, cfg.d_model),
+                 "ssm": S.ssm_init(k1, cfg.d_model, cfg.ssm, cfg.param_dtype)}
+    return p
+
+
+def _enc_block_init(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": _norm_init(cfg, cfg.d_model),
+        "attn": C.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.param_dtype),
+        "ln_mlp": _norm_init(cfg, cfg.d_model),
+        "mlp": C.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype, gated=False),
+    }
+
+
+def _dec_block_init(key, cfg: ArchConfig) -> Params:
+    """Decoder block for enc-dec: self-attn + cross-attn + mlp."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln_self": _norm_init(cfg, cfg.d_model),
+        "self_attn": C.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.param_dtype),
+        "ln_cross": _norm_init(cfg, cfg.d_model),
+        "cross_attn": C.gqa_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.param_dtype),
+        "ln_mlp": _norm_init(cfg, cfg.d_model),
+        "mlp": C.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.param_dtype, gated=False),
+    }
+
+
+def _stack(init_fn, key, n: int) -> Params:
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    params: Params = {"embed": C.embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+                      "final_norm": _norm_init(cfg, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = C.dense_init(ks[5], cfg.d_model, cfg.vocab, cfg.param_dtype)
+    if cfg.pos == "learned":
+        params["pos_emb"] = {"emb": (jax.random.normal(ks[6], (cfg.max_position, cfg.d_model),
+                                                       jnp.float32) * 0.02).astype(cfg.param_dtype)}
+    if cfg.kind == "encdec":
+        params["enc_layers"] = _stack(lambda k: _enc_block_init(k, cfg), ks[1], cfg.n_enc_layers)
+        params["enc_final_norm"] = _norm_init(cfg, cfg.d_model)
+        params["layers"] = _stack(lambda k: _dec_block_init(k, cfg), ks[2], cfg.n_layers)
+    elif cfg.hybrid_attn_every:
+        per = cfg.hybrid_attn_every
+        groups = cfg.n_layers // per
+        params["layers"] = jax.vmap(lambda k: _stack(lambda kk: _ssm_block_init(kk, cfg), k, per)
+                                    )(jax.random.split(ks[1], groups))
+        params["shared"] = _dense_block_init(ks[2], cfg)
+    elif cfg.ssm is not None:
+        params["layers"] = _stack(lambda k: _ssm_block_init(k, cfg), ks[1], cfg.n_layers)
+    else:
+        params["layers"] = _stack(lambda k: _dense_block_init(k, cfg), ks[1], cfg.n_layers)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block apply (training / prefill path)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(cfg: ArchConfig, p: Params, h: jnp.ndarray,
+                positions: jnp.ndarray, window, causal: bool = True,
+                kv_block: int = 1024) -> jnp.ndarray:
+    B, Sq, D = h.shape
+    if cfg.attn_kind == "mla":
+        q, ckv, kr = C.mla_project(p, h, cfg.n_heads, cfg.mla, positions, cfg.rope_theta)
+        return C.mla_attend(p, q, ckv, kr, positions, positions, cfg.n_heads,
+                            cfg.mla, causal=causal, kv_block=kv_block)
+    rot = int(cfg.hd * cfg.rope_fraction) if cfg.rope_theta > 0 else None
+    q, k, v = C.gqa_project(p, h, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions,
+                            cfg.rope_theta, rot)
+    out = C.attention(q, k, v, positions, positions, causal=causal, window=window,
+                      softcap=cfg.attn_softcap, kv_block=kv_block)
+    return C.dense(p["wo"], out.reshape(B, Sq, cfg.n_heads * cfg.hd))
+
+
+def _dense_block(cfg: ArchConfig, p: Params, h: jnp.ndarray, positions: jnp.ndarray,
+                 window, causal: bool = True,
+                 aspec: Optional[ActShard] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a = _attn_apply(cfg, p["attn"], _norm(cfg, p["ln_attn"], h), positions, window, causal)
+    if cfg.post_norms:
+        a = _norm(cfg, p["ln_attn_post"], a)
+    h = h + a
+    x = _norm(cfg, p["ln_mlp"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        m, aux = M.moe_apply(p["moe"], x, cfg.moe, aspec=aspec)
+    else:
+        m = C.mlp(p["mlp"], x, cfg.act)
+    if cfg.post_norms:
+        m = _norm(cfg, p["ln_mlp_post"], m)
+    return h + m, aux
+
+
+def _ssm_block_apply(cfg: ArchConfig, p: Params, h: jnp.ndarray) -> jnp.ndarray:
+    return h + S.ssm_block(p["ssm"], _norm(cfg, p["ln"], h), cfg.ssm, cfg.d_model)
+
+
+def _layer_window(cfg: ArchConfig, layer_flag: Optional[jnp.ndarray]):
+    """Resolve the attention window for a layer. ``layer_flag`` (is_global)
+    is a traced per-layer scalar under the layer scan."""
+    if cfg.layer_pattern == "alt_local_global":
+        return jnp.where(layer_flag, _BIG_WINDOW, cfg.window).astype(jnp.int32)
+    return cfg.window
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            enc_embeds: Optional[jnp.ndarray] = None,
+            aspec: Optional[ActShard] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (final hidden (B, S, D), aux loss)."""
+    h = C.embed(params["embed"], tokens)
+    if cfg.norm == "rmsnorm1p":         # gemma scales embeddings
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, Sq, D = h.shape
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    if cfg.pos == "learned":
+        h = h + params["pos_emb"]["emb"][:Sq][None]
+    h = _cst(h, aspec)
+
+    if cfg.kind == "encdec":
+        enc = _encode(params, cfg, enc_embeds, aspec)
+        h = _decode_stack(params, cfg, h, positions, enc, aspec)
+        return _norm(cfg, params["final_norm"], h), jnp.zeros((), jnp.float32)
+
+    if cfg.hybrid_attn_every:
+        h = _hybrid_stack(params, cfg, h, positions, aspec)
+        return _norm(cfg, params["final_norm"], h), jnp.zeros((), jnp.float32)
+
+    if cfg.ssm is not None:
+        def body(carry, p):
+            return _cst(_ssm_block_apply(cfg, p, carry), aspec), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return _norm(cfg, params["final_norm"], h), jnp.zeros((), jnp.float32)
+
+    flags = None
+    if cfg.layer_pattern == "alt_local_global":
+        flags = (jnp.arange(cfg.n_layers) % 2 == 1)
+
+    def body(carry, xs):
+        h, aux = carry
+        p, flag = xs
+        w = _layer_window(cfg, flag)
+        h, a = _dense_block(cfg, p, h, positions, w, aspec=aspec)
+        return (_cst(h, aspec), aux + a), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    xs = (params["layers"], flags if flags is not None else jnp.zeros(cfg.n_layers, bool))
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs)
+    return _norm(cfg, params["final_norm"], h), aux
+
+
+def _encode(params: Params, cfg: ArchConfig, enc_embeds: jnp.ndarray,
+            aspec: Optional[ActShard] = None) -> jnp.ndarray:
+    B, Se, D = enc_embeds.shape
+    h = _cst(enc_embeds.astype(cfg.param_dtype), aspec)
+    if cfg.pos == "learned":
+        h = h + params["pos_emb"]["emb"][:Se][None]
+    positions = jnp.arange(Se, dtype=jnp.int32)
+
+    def body(carry, p):
+        a = _attn_apply(cfg, p["attn"], _norm(cfg, p["ln_attn"], carry), positions,
+                        None, causal=False)
+        carry = carry + a
+        m = C.mlp(p["mlp"], _norm(cfg, p["ln_mlp"], carry), cfg.act)
+        return _cst(carry + m, aspec), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return _norm(cfg, params["enc_final_norm"], h)
+
+
+def _decode_stack(params: Params, cfg: ArchConfig, h: jnp.ndarray,
+                  positions: jnp.ndarray, enc: jnp.ndarray,
+                  aspec: Optional[ActShard] = None) -> jnp.ndarray:
+    B, Se, D = enc.shape
+    enc_pos = jnp.arange(Se, dtype=jnp.int32)
+
+    def body(carry, p):
+        a = _attn_apply(cfg, p["self_attn"], _norm(cfg, p["ln_self"], carry),
+                        positions, None, causal=True)
+        carry = carry + a
+        x = _norm(cfg, p["ln_cross"], carry)
+        q, k, v = C.gqa_project(p["cross_attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, positions, 0.0)
+        _, ke, ve = C.gqa_project(p["cross_attn"], enc, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.hd, enc_pos, 0.0)
+        o = C.attention(q, ke, ve, positions, enc_pos, causal=False)
+        carry = carry + C.dense(p["cross_attn"]["wo"], o.reshape(B, -1, cfg.n_heads * cfg.hd))
+        m = C.mlp(p["mlp"], _norm(cfg, p["ln_mlp"], carry), cfg.act)
+        return _cst(carry + m, aspec), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return h
+
+
+def _hybrid_stack(params: Params, cfg: ArchConfig, h: jnp.ndarray,
+                  positions: jnp.ndarray,
+                  aspec: Optional[ActShard] = None) -> jnp.ndarray:
+    """zamba2: groups of SSM blocks, shared attention block between groups."""
+    shared = params["shared"]
+
+    def group_body(carry, group_params):
+        def inner(c, p):
+            return _cst(_ssm_block_apply(cfg, p, c), aspec), None
+        c, _ = jax.lax.scan(inner, carry, group_params)
+        c, _ = _dense_block(cfg, shared, c, positions, cfg.window, aspec=aspec)
+        return _cst(c, aspec), None
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            aspec: Optional[ActShard] = None,
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens (B, S_text), labels (B, S_text) and optionally
+    prefix_embeds / enc_embeds / label_mask."""
+    h, aux = forward(params, cfg, batch["tokens"],
+                     prefix_embeds=batch.get("prefix_embeds"),
+                     enc_embeds=batch.get("enc_embeds"), aspec=aspec)
+    if batch.get("prefix_embeds") is not None:
+        h = h[:, batch["prefix_embeds"].shape[1]:]
+    emb = params["embed"] if cfg.tie_embeddings else {"emb": params["lm_head"]["w"].T}
+    ce = C.chunked_ce_loss(emb, h, batch["labels"], cfg.loss_chunks,
+                           softcap=cfg.final_softcap, label_mask=batch.get("label_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also emits the serving cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            enc_embeds: Optional[jnp.ndarray] = None,
+            aspec: Optional[ActShard] = None,
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Run the full-context forward pass and collect the decode cache.
+    Returns (last-position logits (B, vocab), cache). Cache sequence length
+    equals the input length; the serving layer copies it into (or ring-slices
+    it for windowed archs) the decode buffers."""
+    h = C.embed(params["embed"], tokens)
+    if cfg.norm == "rmsnorm1p":
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, Sq, D = h.shape
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    if cfg.pos == "learned":
+        h = h + params["pos_emb"]["emb"][:Sq][None]
+    h = _cst(h, aspec)
+
+    if cfg.kind == "encdec":
+        enc = _encode(params, cfg, enc_embeds, aspec)
+        Se = enc.shape[1]
+        enc_pos = jnp.arange(Se, dtype=jnp.int32)
+
+        def body(carry, p):
+            hh = carry
+            x_self = _norm(cfg, p["ln_self"], hh)
+            q, ks, vs = C.gqa_project(p["self_attn"], x_self, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd, positions, cfg.rope_theta)
+            o_self = C.attention(q, ks, vs, positions, positions, causal=True)
+            hh = hh + C.dense(p["self_attn"]["wo"],
+                              o_self.reshape(B, Sq, cfg.n_heads * cfg.hd))
+            x = _norm(cfg, p["ln_cross"], hh)
+            q, _, _ = C.gqa_project(p["cross_attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, positions, 0.0)
+            _, ke, ve = C.gqa_project(p["cross_attn"], enc, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.hd, enc_pos, 0.0)
+            o = C.attention(q, ke, ve, positions, enc_pos, causal=False)
+            hh = hh + C.dense(p["cross_attn"]["wo"], o.reshape(B, -1, cfg.n_heads * cfg.hd))
+            hh = hh + C.mlp(p["mlp"], _norm(cfg, p["ln_mlp"], hh), cfg.act)
+            return _cst(hh, aspec), (ks, vs, ke, ve)
+
+        h, (k, v, ck, cv) = jax.lax.scan(body, h, params["layers"])
+        cache = {"k": k, "v": v, "ck": ck, "cv": cv}
+
+    elif cfg.hybrid_attn_every:
+        shared = params["shared"]
+
+        def group_body(carry, gp):
+            def inner(c, p):
+                y, st, cs = S.ssm_block(p["ssm"], _norm(cfg, p["ln"], c), cfg.ssm,
+                                        cfg.d_model, return_state=True)
+                return c + y, (st, cs)
+            c, (st, cs) = jax.lax.scan(inner, carry, gp)
+            x = _norm(cfg, shared["ln_attn"], c)
+            q, ks, vs = C.gqa_project(shared["attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.hd, positions, cfg.rope_theta)
+            a = C.attention(q, ks, vs, positions, positions, causal=True,
+                            window=cfg.window, softcap=cfg.attn_softcap)
+            c = c + C.dense(shared["attn"]["wo"], a.reshape(B, Sq, cfg.n_heads * cfg.hd))
+            c = c + C.mlp(shared["mlp"], _norm(cfg, shared["ln_mlp"], c), cfg.act)
+            return _cst(c, aspec), (st, cs, ks, vs)
+
+        h, (st, cs, k, v) = jax.lax.scan(group_body, h, params["layers"])
+        cache = {"ssm": st, "conv": cs, "k": k, "v": v}
+
+    elif cfg.ssm is not None:
+        def body(carry, p):
+            y, st, cs = S.ssm_block(p["ssm"], _norm(cfg, p["ln"], carry), cfg.ssm,
+                                    cfg.d_model, return_state=True)
+            return _cst(carry + y, aspec), (st, cs)
+        h, (st, cs) = jax.lax.scan(body, h, params["layers"])
+        cache = {"ssm": st, "conv": cs}
+
+    elif cfg.attn_kind == "mla":
+        def body(carry, p):
+            hh = carry
+            x = _norm(cfg, p["ln_attn"], hh)
+            q, ckv, kr = C.mla_project(p["attn"], x, cfg.n_heads, cfg.mla,
+                                       positions, cfg.rope_theta)
+            a = C.mla_attend(p["attn"], q, ckv, kr, positions, positions,
+                             cfg.n_heads, cfg.mla, causal=True)
+            hh = hh + a
+            hh = hh + C.mlp(p["mlp"], _norm(cfg, p["ln_mlp"], hh), cfg.act)
+            return _cst(hh, aspec), (ckv, kr)
+        h, (ckv, kr) = jax.lax.scan(body, h, params["layers"])
+        cache = {"ckv": ckv, "kr": kr}
+
+    else:
+        flags = ((jnp.arange(cfg.n_layers) % 2 == 1)
+                 if cfg.layer_pattern == "alt_local_global"
+                 else jnp.zeros(cfg.n_layers, bool))
+
+        def body(carry, xs):
+            hh = carry
+            p, flag = xs
+            w = _layer_window(cfg, flag)
+            x = _norm(cfg, p["ln_attn"], hh)
+            rot = int(cfg.hd * cfg.rope_fraction) if cfg.rope_theta > 0 else None
+            q, ks, vs = C.gqa_project(p["attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.hd, positions, cfg.rope_theta, rot)
+            o = C.attention(q, ks, vs, positions, positions, causal=True, window=w,
+                            softcap=cfg.attn_softcap)
+            a = C.dense(p["attn"]["wo"], o.reshape(B, Sq, cfg.n_heads * cfg.hd))
+            if cfg.post_norms:
+                a = _norm(cfg, p["ln_attn_post"], a)
+            hh = hh + a
+            x2 = _norm(cfg, p["ln_mlp"], hh)
+            if cfg.moe is not None:
+                m, _ = M.moe_apply(p["moe"], x2, cfg.moe, aspec=aspec)
+            else:
+                m = C.mlp(p["mlp"], x2, cfg.act)
+            if cfg.post_norms:
+                m = _norm(cfg, p["ln_mlp_post"], m)
+            return _cst(hh + m, aspec), (ks, vs)
+
+        h, (k, v) = jax.lax.scan(body, h, (params["layers"], flags))
+        cache = {"k": k, "v": v}
+
+    h = _norm(cfg, params["final_norm"], h)
+    emb = params["embed"] if cfg.tie_embeddings else {"emb": params["lm_head"]["w"].T}
+    logits = C.unembed(emb, h[:, -1:]).astype(jnp.float32)[:, 0]
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: cache init + single-token step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> Params:
+    B, S = batch_size, max_len
+    if cfg.kind == "encdec":
+        return {
+            "k": jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd), dtype),
+            "ck": jnp.zeros((cfg.n_layers, B, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "cv": jnp.zeros((cfg.n_layers, B, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    if cfg.hybrid_attn_every:
+        per = cfg.hybrid_attn_every
+        G = cfg.n_layers // per
+        ssm = cfg.ssm
+        H = ssm.n_heads(cfg.d_model)
+        conv_dim = ssm.d_inner(cfg.d_model) + 2 * ssm.n_groups * ssm.d_state
+        kv_len = min(S, cfg.window) if cfg.window else S
+        return {
+            "ssm": jnp.zeros((G, per, B, H, ssm.headdim, ssm.d_state), jnp.float32),
+            "conv": jnp.zeros((G, per, B, ssm.d_conv - 1, conv_dim), dtype),
+            "k": jnp.zeros((G, B, kv_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((G, B, kv_len, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    if cfg.ssm is not None:
+        ssm = cfg.ssm
+        H = ssm.n_heads(cfg.d_model)
+        conv_dim = ssm.d_inner(cfg.d_model) + 2 * ssm.n_groups * ssm.d_state
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, B, H, ssm.headdim, ssm.d_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, B, ssm.d_conv - 1, conv_dim), dtype),
+        }
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": jnp.zeros((cfg.n_layers, B, S, cfg.mla.kv_lora), dtype),
+            "kr": jnp.zeros((cfg.n_layers, B, S, cfg.mla.qk_rope), dtype),
+        }
+    # All-windowed archs (mixtral) decode from a window-sized ring buffer —
+    # this is what makes the 500k-decode cell serveable. Mixed-pattern archs
+    # (gemma2) keep the full cache for their global layers.
+    if cfg.window is not None and cfg.layer_pattern == "global":
+        kv_len = min(S, cfg.window)
+    else:
+        kv_len = S
+    return {
+        "k": jnp.zeros((cfg.n_layers, B, kv_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, B, kv_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray,
+                aspec: Optional[ActShard] = None,
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. tokens: (B, 1); pos: scalar int32 (current length).
+    Returns (logits (B, vocab), updated cache)."""
+    B = tokens.shape[0]
+    h = C.embed(params["embed"], tokens)
+    if cfg.norm == "rmsnorm1p":
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    q_pos = pos[None].astype(jnp.int32)
+    if cfg.pos == "learned":
+        h = h + params["pos_emb"]["emb"][pos][None, None]
+    h = _cst(h, aspec)
+
+    if cfg.kind == "encdec":
+        h, cache = _decode_step_encdec(params, cfg, cache, h, q_pos, pos)
+    elif cfg.hybrid_attn_every:
+        h, cache = _decode_step_hybrid(params, cfg, cache, h, q_pos, pos)
+    elif cfg.ssm is not None:
+        h, cache = _decode_step_ssm(params, cfg, cache, h)
+    else:
+        h, cache = _decode_step_dense(params, cfg, cache, h, q_pos, pos, aspec=aspec)
+
+    h = _norm(cfg, params["final_norm"], h)
+    emb = params["embed"] if cfg.tie_embeddings else {"emb": params["lm_head"]["w"].T}
+    logits = C.unembed(emb, h)[:, 0].astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, cache
+
+
+def _cached_attn(cfg: ArchConfig, p: Params, h, ck, cv, q_pos, pos, window,
+                 kv_block: int = 2048):
+    """Project one token, update the per-layer cache, attend over it."""
+    B = h.shape[0]
+    rot = int(cfg.hd * cfg.rope_fraction) if cfg.rope_theta > 0 else None
+    q, k, v = C.gqa_project(p, h, cfg.n_heads, cfg.n_kv_heads, cfg.hd, q_pos,
+                            cfg.rope_theta, rot)
+    S = ck.shape[1]
+    # Ring buffer when the cache is sized to exactly the sliding window
+    # (mixtral / zamba2 long-decode); otherwise linear slots.
+    ring = cfg.window is not None and S == cfg.window
+    slot = (pos % S).astype(jnp.int32) if ring else pos
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+    if ring:
+        # absolute position held by each slot; never-written slots get a
+        # large sentinel so the causal mask kills them during warm-up.
+        wrap = (pos // S) * S
+        idx = jnp.arange(S, dtype=jnp.int32)
+        k_pos = jnp.where(idx <= (pos % S), wrap + idx, wrap - S + idx)
+        k_pos = jnp.where(k_pos < 0, jnp.int32(_BIG_WINDOW), k_pos)
+    else:
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+    out = C.attention(q, ck, cv, q_pos, k_pos, causal=True, window=window,
+                      softcap=cfg.attn_softcap, kv_block=kv_block)
+    return C.dense(p["wo"], out.reshape(B, 1, cfg.n_heads * cfg.hd)), ck, cv
+
+
+def _decode_step_dense(params, cfg: ArchConfig, cache, h, q_pos, pos, aspec=None):
+    flags = (jnp.arange(cfg.n_layers) % 2 == 1) if cfg.layer_pattern == "alt_local_global" \
+        else jnp.zeros(cfg.n_layers, bool)
+
+    if cfg.attn_kind == "mla":
+        def body(carry, xs):
+            hh = carry
+            p, ckv, kr, flag = xs
+            x = _norm(cfg, p["ln_attn"], hh)
+            q, new_ckv, new_kr = C.mla_project(p["attn"], x, cfg.n_heads, cfg.mla,
+                                               q_pos, cfg.rope_theta)
+            ckv = jax.lax.dynamic_update_slice(ckv, new_ckv.astype(ckv.dtype), (0, pos, 0))
+            kr = jax.lax.dynamic_update_slice(kr, new_kr.astype(kr.dtype), (0, pos, 0))
+            S = ckv.shape[1]
+            k_pos = jnp.arange(S, dtype=jnp.int32)
+            a = C.mla_attend(p["attn"], q, ckv, kr, q_pos, k_pos, cfg.n_heads, cfg.mla,
+                             kv_block=2048)
+            hh = hh + a
+            hh = hh + C.mlp(p["mlp"], _norm(cfg, p["ln_mlp"], hh), cfg.act)
+            return hh, (ckv, kr)
+
+        h, (ckv, kr) = jax.lax.scan(body, h, (params["layers"], cache["ckv"], cache["kr"], flags))
+        return h, {"ckv": ckv, "kr": kr}
+
+    def body(carry, xs):
+        hh = carry
+        p, ck, cv, flag = xs
+        w = _layer_window(cfg, flag)
+        a, ck, cv = _cached_attn(cfg, p["attn"], _norm(cfg, p["ln_attn"], hh),
+                                 ck, cv, q_pos, pos, w)
+        if cfg.post_norms:
+            a = _norm(cfg, p["ln_attn_post"], a)
+        hh = hh + a
+        x = _norm(cfg, p["ln_mlp"], hh)
+        if cfg.moe is not None:
+            m, _ = M.moe_apply(p["moe"], x, cfg.moe, aspec=aspec)
+        else:
+            m = C.mlp(p["mlp"], x, cfg.act)
+        if cfg.post_norms:
+            m = _norm(cfg, p["ln_mlp_post"], m)
+        return hh + m, (ck, cv)
+
+    h, (ck, cv) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"], flags))
+    return h, {"k": ck, "v": cv}
+
+
+def _decode_step_ssm(params, cfg: ArchConfig, cache, h):
+    def body(carry, xs):
+        hh = carry
+        p, st, cs = xs
+        y, st, cs = S.ssm_decode_step(p["ssm"], _norm(cfg, p["ln"], hh),
+                                      cfg.ssm, cfg.d_model, st, cs)
+        return hh + y, (st, cs)
+
+    h, (st, cs) = jax.lax.scan(body, h, (params["layers"], cache["ssm"], cache["conv"]))
+    return h, {"ssm": st, "conv": cs}
+
+
+def _decode_step_hybrid(params, cfg: ArchConfig, cache, h, q_pos, pos):
+    shared = params["shared"]
+
+    def group(carry, xs):
+        hh = carry
+        gp, st, cs, ck, cv = xs
+
+        def inner(c, ys):
+            p, s1, c1 = ys
+            y, s1, c1 = S.ssm_decode_step(p["ssm"], _norm(cfg, p["ln"], c),
+                                          cfg.ssm, cfg.d_model, s1, c1)
+            return c + y, (s1, c1)
+
+        hh, (st, cs) = jax.lax.scan(inner, hh, (gp, st, cs))
+        a, ck, cv = _cached_attn(cfg, shared["attn"], _norm(cfg, shared["ln_attn"], hh),
+                                 ck, cv, q_pos, pos, cfg.window)
+        hh = hh + a
+        hh = hh + C.mlp(shared["mlp"], _norm(cfg, shared["ln_mlp"], hh), cfg.act)
+        return hh, (st, cs, ck, cv)
+
+    h, (st, cs, ck, cv) = jax.lax.scan(
+        group, h, (params["layers"], cache["ssm"], cache["conv"], cache["k"], cache["v"]))
+    return h, {"ssm": st, "conv": cs, "k": ck, "v": cv}
+
+
+def _decode_step_encdec(params, cfg: ArchConfig, cache, h, q_pos, pos):
+    B = h.shape[0]
+    Se = cache["ck"].shape[2]
+    enc_pos = jnp.arange(Se, dtype=jnp.int32)
+
+    def body(carry, xs):
+        hh = carry
+        p, ck, cv, cck, ccv = xs
+        a, ck, cv = _cached_attn(cfg, p["self_attn"], _norm(cfg, p["ln_self"], hh),
+                                 ck, cv, q_pos, pos, None)
+        hh = hh + a
+        x = _norm(cfg, p["ln_cross"], hh)
+        q, _, _ = C.gqa_project(p["cross_attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, q_pos, 0.0)
+        o = C.attention(q, cck, ccv, q_pos, enc_pos, causal=False, kv_block=2048)
+        hh = hh + C.dense(p["cross_attn"]["wo"], o.reshape(B, 1, cfg.n_heads * cfg.hd))
+        hh = hh + C.mlp(p["mlp"], _norm(cfg, p["ln_mlp"], hh), cfg.act)
+        return hh, (ck, cv)
+
+    h, (ck, cv) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]))
+    return h, {"k": ck, "v": cv, "ck": cache["ck"], "cv": cache["cv"]}

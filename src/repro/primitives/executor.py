@@ -1,0 +1,169 @@
+"""Executor: run a CNN with a given primitive assignment on this host
+(paper Fig 2 step iv). Supports chains and DAGs with concat/add joins;
+inserts the data-layout transformations the assignment implies and can time
+each component — the real-hardware end of the pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
+from repro.primitives.conv import REGISTRY
+from repro.primitives import layouts as L
+
+_C_AXIS = {"chw": 0, "hcw": 1, "hwc": 2}
+_SPATIAL_AXES = {"chw": (1, 2), "hcw": (0, 2), "hwc": (0, 1)}
+
+
+def _crop_to_common(vals, layout: str):
+    ah, aw = _SPATIAL_AXES[layout]
+    h = min(v.shape[ah] for v in vals)
+    w = min(v.shape[aw] for v in vals)
+    out = []
+    for v in vals:
+        sl = [slice(None)] * 3
+        oh, ow = (v.shape[ah] - h) // 2, (v.shape[aw] - w) // 2
+        sl[ah] = slice(oh, oh + h)
+        sl[aw] = slice(ow, ow + w)
+        out.append(v[tuple(sl)])
+    return out
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    outputs: Dict[int, jnp.ndarray]
+    primitive_seconds: Dict[int, float]
+    dlt_seconds: Dict[Tuple[int, int], float]
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.primitive_seconds.values()) + sum(self.dlt_seconds.values())
+
+
+def _consumers(spec: CNNSpec) -> Dict[int, List[int]]:
+    out: Dict[int, List[int]] = {i: [] for i in range(len(spec.nodes))}
+    for u, v in spec.edges:
+        out[u].append(v)
+    return out
+
+
+def _producers(spec: CNNSpec) -> Dict[int, List[int]]:
+    out: Dict[int, List[int]] = {i: [] for i in range(len(spec.nodes))}
+    for u, v in spec.edges:
+        out[v].append(u)
+    return out
+
+
+def _topo_order(spec: CNNSpec) -> List[int]:
+    prods = _producers(spec)
+    indeg = {i: len(p) for i, p in prods.items()}
+    ready = [i for i, d in indeg.items() if d == 0]
+    order = []
+    cons = _consumers(spec)
+    while ready:
+        n = ready.pop()
+        order.append(n)
+        for v in cons[n]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                ready.append(v)
+    if len(order) != len(spec.nodes):
+        raise ValueError("cycle in CNN spec")
+    return order
+
+
+def make_weights(spec: CNNSpec, seed: int = 0) -> Dict[int, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i, node in enumerate(spec.nodes):
+        if isinstance(node, ConvLayer):
+            w = rng.standard_normal((node.k, node.c, node.f, node.f)) / (node.f * np.sqrt(node.c))
+            out[i] = jnp.asarray(w, jnp.float32)
+    return out
+
+
+def execute(spec: CNNSpec, assignment: Dict[int, str],
+            weights: Optional[Dict[int, jnp.ndarray]] = None,
+            x: Optional[jnp.ndarray] = None,
+            measure: bool = False, repeats: int = 5) -> ExecutionReport:
+    """Run the network under ``assignment``. Inputs of source conv nodes are
+    drawn from N(0,1) (paper §4.1.1) unless ``x`` is given (chw).
+
+    With ``measure=True`` every primitive call and DLT is individually timed
+    (jitted, warmed, median of ``repeats``); otherwise times are zeros and
+    only outputs are produced (correctness path).
+    """
+    weights = weights if weights is not None else make_weights(spec)
+    order = _topo_order(spec)
+    prods = _producers(spec)
+    tensors: Dict[int, jnp.ndarray] = {}      # node -> output in its layout
+    layouts: Dict[int, str] = {}
+    prim_secs: Dict[int, float] = {}
+    dlt_secs: Dict[Tuple[int, int], float] = {}
+    rng = np.random.default_rng(1)
+
+    def timed(fn, *args) -> Tuple[jnp.ndarray, float]:
+        jfn = jax.jit(fn)
+        y = jax.block_until_ready(jfn(*args))
+        if not measure:
+            return y, 0.0
+        samples = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(*args))
+            samples.append(time.perf_counter() - t0)
+        return y, float(np.median(samples))
+
+    def fetch_input(node_idx: int, want_layout: str) -> jnp.ndarray:
+        """Gather and layout-convert the producer tensors for ``node_idx``."""
+        ps = prods[node_idx]
+        vals = []
+        for p in ps:
+            v, src = tensors[p], layouts[p]
+            if src != want_layout:
+                v2, dt = timed(lambda a, s=src, d=want_layout: L.transform(a, s, d), v)
+                dlt_secs[(p, node_idx)] = dlt_secs.get((p, node_idx), 0.0) + dt
+                v = v2
+            vals.append(v)
+        return vals
+
+    for i in order:
+        node = spec.nodes[i]
+        if isinstance(node, ConvLayer):
+            prim = REGISTRY[assignment[i]]
+            if prim.impl is None:
+                raise ValueError(f"assignment uses simulated-only primitive {prim.name}")
+            if prods[i]:
+                (xin,) = fetch_input(i, prim.in_layout)
+            else:
+                x0 = (x if x is not None else
+                      jnp.asarray(rng.standard_normal((node.c, node.im, node.im)), jnp.float32))
+                xin = L.from_chw(x0, prim.in_layout)
+            y, dt = timed(lambda a, b, s=node.s: prim.impl(a, b, s), xin, weights[i])
+            tensors[i], layouts[i] = y, prim.out_layout
+            prim_secs[i] = dt
+        else:
+            lay = assignment[i]
+            vals = fetch_input(i, lay)
+            # Branches run valid (un-padded) convolutions, so spatial sizes
+            # can differ by a few pixels across branch depths; centre-crop to
+            # the smallest (real deployments pad — padding does not change
+            # the primitive-selection problem, see DESIGN.md §9).
+            vals = _crop_to_common(vals, lay)
+            if node.kind == "concat":
+                y = jnp.concatenate(vals, axis=_C_AXIS[lay])
+            elif node.kind == "add":
+                y = vals[0]
+                for v in vals[1:]:
+                    y = y + v
+            else:
+                raise ValueError(node.kind)
+            tensors[i], layouts[i] = y, lay
+
+    return ExecutionReport(tensors, prim_secs, dlt_secs)

@@ -1,0 +1,64 @@
+"""Data layouts and data-layout transformations (DLTs), paper §3.2.2.
+
+The primitive suite uses three single-image layouts for a (c, im, im)
+activation tensor:
+
+    chw — c × im × im   (channels-first; paper's "c x im x im")
+    hcw — im × c × im   (paper's "im x c x im")
+    hwc — im × im × c   (channels-last; paper's "im x im x c")
+
+There are 9 ordered DLT pairs including identity (cost 0). A DLT's cost
+depends only on (c, im) and the pair — exactly the feature set the DLT
+performance model consumes.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LAYOUTS = ("chw", "hcw", "hwc")
+
+# permutation that maps a chw tensor to the given layout
+_FROM_CHW = {
+    "chw": (0, 1, 2),
+    "hcw": (1, 0, 2),
+    "hwc": (1, 2, 0),
+}
+
+
+def from_chw(x: jnp.ndarray, layout: str) -> jnp.ndarray:
+    return jnp.transpose(x, _FROM_CHW[layout])
+
+
+def to_chw(x: jnp.ndarray, layout: str) -> jnp.ndarray:
+    perm = _FROM_CHW[layout]
+    inv = [0, 0, 0]
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return jnp.transpose(x, inv)
+
+
+def transform(x: jnp.ndarray, src: str, dst: str) -> jnp.ndarray:
+    """Apply the DLT src -> dst."""
+    if src == dst:
+        return x
+    return from_chw(to_chw(x, src), dst)
+
+
+def dlt_pairs() -> list[Tuple[str, str]]:
+    """All 9 ordered layout pairs, identity included (paper profiles all 9)."""
+    return list(itertools.product(LAYOUTS, LAYOUTS))
+
+
+def dlt_name(src: str, dst: str) -> str:
+    return f"{src}->{dst}"
+
+
+DLT_NAMES = [dlt_name(s, d) for s, d in dlt_pairs()]
+
+
+def dlt_index(src: str, dst: str) -> int:
+    return DLT_NAMES.index(dlt_name(src, dst))

@@ -1,0 +1,98 @@
+"""Profiler dataset construction (paper §3.2).
+
+Primitive dataset rows:  (k, c, im, s, f) -> (R_1 ... R_N)   N = |registry|
+DLT dataset rows:        (c, im)          -> (R_1 ... R_9)
+
+Undefined entries (inapplicable primitive) are NaN. Datasets are built either
+from a platform simulator (full scale) or from the real-CPU profiler
+(reduced scale); both return the same ``PerfDataset`` structure, and both are
+split 80/10/10 after shuffling (paper §4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY
+from repro.primitives import layouts as L
+from repro.profiler import pools
+from repro.profiler.simulators import PLATFORMS, Platform, dlt_time, primitive_time
+
+
+@dataclasses.dataclass
+class PerfDataset:
+    feats: np.ndarray        # (N, F) raw feature rows
+    times: np.ndarray        # (N, P) runtimes, NaN = undefined
+    columns: List[str]
+    feature_names: List[str]
+    platform: str
+
+    def split(self, seed: int = 0, fractions=(0.8, 0.1, 0.1)) -> Tuple["PerfDataset", "PerfDataset", "PerfDataset"]:
+        n = self.feats.shape[0]
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(n)
+        n_train = int(fractions[0] * n)
+        n_val = int(fractions[1] * n)
+        parts = (idx[:n_train], idx[n_train:n_train + n_val], idx[n_train + n_val:])
+        return tuple(
+            PerfDataset(self.feats[p], self.times[p], self.columns,
+                        self.feature_names, self.platform)
+            for p in parts)
+
+    def subsample(self, fraction: float, seed: int = 0) -> "PerfDataset":
+        """Random subset — the paper's transfer-learning data fractions."""
+        n = self.feats.shape[0]
+        m = max(1, int(round(fraction * n)))
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(n, size=m, replace=False)
+        return PerfDataset(self.feats[idx], self.times[idx], self.columns,
+                           self.feature_names, self.platform)
+
+    def family_subset(self, family: str) -> "PerfDataset":
+        """Keep only columns of one primitive family (Table 5 experiments).
+        Rows with no defined entry for the family are dropped."""
+        cols = [i for i, n in enumerate(self.columns) if REGISTRY[n].family == family]
+        times = self.times[:, cols]
+        keep = np.isfinite(times).any(axis=1)
+        return PerfDataset(self.feats[keep], times[keep],
+                           [self.columns[i] for i in cols],
+                           self.feature_names, self.platform)
+
+    @property
+    def n(self) -> int:
+        return self.feats.shape[0]
+
+
+def simulate_primitive_dataset(platform: str,
+                               max_triplets: Optional[int] = None,
+                               noisy: bool = True) -> PerfDataset:
+    plat = PLATFORMS[platform]
+    cfgs = pools.config_pool(max_triplets=max_triplets)
+    feats = np.array(cfgs, np.float64)
+    times = np.full((len(cfgs), len(PRIMITIVE_NAMES)), np.nan)
+    prims = [REGISTRY[n] for n in PRIMITIVE_NAMES]
+    for i, (k, c, im, s, f) in enumerate(cfgs):
+        for j, p in enumerate(prims):
+            times[i, j] = primitive_time(plat, p, k, c, im, s, f, noisy=noisy)
+    return PerfDataset(feats, times, list(PRIMITIVE_NAMES),
+                       ["k", "c", "im", "s", "f"], platform)
+
+
+def simulate_dlt_dataset(platform: str,
+                         max_pairs: Optional[int] = None,
+                         noisy: bool = True) -> PerfDataset:
+    plat = PLATFORMS[platform]
+    pairs = pools.dlt_pool(max_pairs=max_pairs)
+    names = [L.dlt_name(s, d) for (s, d) in L.dlt_pairs() if s != d]
+    feats = np.array(pairs, np.float64)
+    times = np.zeros((len(pairs), len(names)))
+    for i, (c, im) in enumerate(pairs):
+        j = 0
+        for (s, d) in L.dlt_pairs():
+            if s == d:
+                continue
+            times[i, j] = dlt_time(plat, s, d, c, im, noisy=noisy)
+            j += 1
+    return PerfDataset(feats, times, names, ["c", "im"], platform)

@@ -1,0 +1,106 @@
+"""Real-hardware profiler: measures actual primitive execution times on this
+container's CPU (paper §4.1 methodology: jit-compiled, warmed up, median of
+repeats, normally-distributed input data).
+
+Used for the reduced-scale real-hardware validation (DESIGN.md §2.1): the
+full-size datasets come from the platform simulators, but this module proves
+the pipeline — profile, train, select, execute — works end-to-end on a
+physical machine.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY, RUNNABLE
+from repro.primitives import layouts as L
+from repro.profiler.dataset import PerfDataset
+
+
+@lru_cache(maxsize=4096)
+def _jitted_primitive(name: str, c: int, im: int, k: int, f: int, s: int):
+    p = REGISTRY[name]
+    impl = p.impl
+
+    @jax.jit
+    def run(x, w):
+        return impl(x, w, s)
+    return run
+
+
+def time_callable(fn, *args, repeats: int = 25, warmup: int = 2) -> float:
+    """Median wall time of ``fn(*args)`` with block_until_ready (paper
+    profiles each primitive 25 times and takes the median)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def profile_primitive(name: str, k: int, c: int, im: int, s: int, f: int,
+                      repeats: int = 25, rng: Optional[np.random.Generator] = None) -> float:
+    """Measured runtime (seconds); NaN if inapplicable or simulated-only."""
+    p = REGISTRY[name]
+    if p.impl is None or not p.applicable(k, c, im, s, f):
+        return float("nan")
+    rng = rng or np.random.default_rng(0)
+    x_chw = jnp.asarray(rng.standard_normal((c, im, im)), jnp.float32)
+    x = L.from_chw(x_chw, p.in_layout)
+    w = jnp.asarray(rng.standard_normal((k, c, f, f)), jnp.float32)
+    fn = _jitted_primitive(name, c, im, k, f, s)
+    return time_callable(fn, x, w, repeats=repeats)
+
+
+@lru_cache(maxsize=64)
+def _jitted_dlt(src: str, dst: str):
+    @jax.jit
+    def run(x):
+        return L.transform(x, src, dst)
+    return run
+
+
+def profile_dlt(src: str, dst: str, c: int, im: int, repeats: int = 25) -> float:
+    if src == dst:
+        return 0.0
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((c, im, im)), jnp.float32)
+    x = L.from_chw(x, src)
+    return time_callable(_jitted_dlt(src, dst), x, repeats=repeats)
+
+
+def profile_primitive_dataset(configs: Sequence[Tuple[int, int, int, int, int]],
+                              primitives: Optional[Sequence[str]] = None,
+                              repeats: int = 9) -> PerfDataset:
+    """Profile ``configs`` x ``primitives`` on this host. Runnable primitives
+    only. This is the expensive stage the paper replaces — we keep it small."""
+    prims = list(primitives) if primitives is not None else list(RUNNABLE)
+    feats = np.array(configs, np.float64)
+    times = np.full((len(configs), len(prims)), np.nan)
+    rng = np.random.default_rng(0)
+    for i, (k, c, im, s, f) in enumerate(configs):
+        for j, name in enumerate(prims):
+            times[i, j] = profile_primitive(name, k, c, im, s, f, repeats=repeats, rng=rng)
+    return PerfDataset(feats, times, prims, ["k", "c", "im", "s", "f"], "host-cpu")
+
+
+def profile_dlt_dataset(pairs: Sequence[Tuple[int, int]], repeats: int = 9) -> PerfDataset:
+    names = [L.dlt_name(s, d) for (s, d) in L.dlt_pairs() if s != d]
+    feats = np.array(pairs, np.float64)
+    times = np.zeros((len(pairs), len(names)))
+    for i, (c, im) in enumerate(pairs):
+        j = 0
+        for (s, d) in L.dlt_pairs():
+            if s == d:
+                continue
+            times[i, j] = profile_dlt(s, d, c, im, repeats=repeats)
+            j += 1
+    return PerfDataset(feats, times, names, ["c", "im"], "host-cpu")

@@ -1,0 +1,265 @@
+"""Analytic platform simulators for primitive execution time (DESIGN.md §2.1).
+
+The container has one CPU, so the paper's three profiled machines (Intel
+i9-9900K, AMD A10-7850K, ARM Cortex-A73) are replaced by parameterised
+analytic timing models with realistic *structure*:
+
+  * compute term: GEMM-shaped work runs at ``peak * eff(M, N, K)`` where the
+    efficiency saturates in each dimension (small-dim penalties) and depends
+    on SIMD width utilisation (``-vec-N`` variants);
+  * memory term: ``bytes / bw(working_set)`` with a cache-hierarchy bandwidth
+    staircase (L1/L2/L3/DRAM cliffs at platform-specific sizes);
+  * family-specific work models: im2col pays lowering traffic, kn2 computes
+    on the full image and pays accumulate traffic, Winograd pays transform
+    FLOPs + tile-quantisation waste, MEC keeps a small working set but pays
+    partitioned-GEMM overheads, direct has no lowering but poor compute
+    efficiency;
+  * per-call overhead and deterministic multiplicative lognormal noise
+    (σ: intel 2.5%, amd 3%, arm 6% — the paper's observed MdRAE floors).
+
+Crucially, platforms are *correlated but not proportional* in log-time:
+cache-cliff positions, SIMD widths and GEMM efficiencies differ, so a model
+trained on one platform transfers imperfectly — a constant per-primitive
+factor helps (paper's "Factor Intel") but fine-tuning is required to close
+the gap. This is the structure the paper's transfer study measures.
+
+Times are in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.primitives.conv import REGISTRY, Primitive, out_size
+from repro.primitives import layouts as L
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    clock_ghz: float
+    vec_width: int          # fp32 lanes
+    fma_ports: int
+    gemm_eff: float         # best-case fraction of peak for large GEMM
+    l1_kb: float
+    l2_kb: float
+    l3_kb: float            # 0 => no L3
+    bw_l1: float            # GB/s
+    bw_l2: float
+    bw_l3: float
+    bw_dram: float
+    overhead_us: float      # per primitive call
+    noise_sigma: float
+    # efficiency saturation constants (smaller = less small-dim penalty)
+    sat_m: float
+    sat_n: float
+    sat_k: float
+    transpose_eff: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def peak_gflops(self) -> float:
+        return self.clock_ghz * self.vec_width * self.fma_ports * 2.0
+
+
+INTEL = Platform(
+    name="intel", clock_ghz=5.0, vec_width=8, fma_ports=2, gemm_eff=0.88,
+    l1_kb=32, l2_kb=256, l3_kb=16384, bw_l1=400, bw_l2=180, bw_l3=90,
+    bw_dram=38, overhead_us=1.5, noise_sigma=0.025,
+    sat_m=10, sat_n=28, sat_k=22,
+    transpose_eff={"adjacent": 0.62, "full": 0.38})
+
+AMD = Platform(
+    name="amd", clock_ghz=3.7, vec_width=8, fma_ports=1, gemm_eff=0.74,
+    l1_kb=16, l2_kb=2048, l3_kb=0, bw_l1=220, bw_l2=80, bw_l3=0,
+    bw_dram=18, overhead_us=2.8, noise_sigma=0.030,
+    sat_m=14, sat_n=40, sat_k=30,
+    transpose_eff={"adjacent": 0.5, "full": 0.3})
+
+ARM = Platform(
+    name="arm", clock_ghz=2.36, vec_width=4, fma_ports=1, gemm_eff=0.62,
+    l1_kb=32, l2_kb=1024, l3_kb=0, bw_l1=90, bw_l2=35, bw_l3=0,
+    bw_dram=7.5, overhead_us=6.0, noise_sigma=0.060,
+    sat_m=18, sat_n=64, sat_k=44,
+    transpose_eff={"adjacent": 0.42, "full": 0.22})
+
+PLATFORMS: Dict[str, Platform] = {"intel": INTEL, "amd": AMD, "arm": ARM}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def _bw(plat: Platform, working_set_bytes: float) -> float:
+    """Cache staircase, GB/s (smoothed cliffs)."""
+    kb = working_set_bytes / 1024.0
+    levels = [(plat.l1_kb, plat.bw_l1), (plat.l2_kb, plat.bw_l2)]
+    if plat.l3_kb:
+        levels.append((plat.l3_kb, plat.bw_l3))
+    bw = plat.bw_dram
+    for size, level_bw in reversed(levels):
+        # logistic blend around each cliff
+        frac = 1.0 / (1.0 + math.exp(4.0 * (math.log(kb + 1e-9) - math.log(size))))
+        bw = bw + frac * (level_bw - bw)
+    return bw
+
+
+def _gemm_time(plat: Platform, M: float, N: float, K: float,
+               vec: Optional[int], trans_penalty: float = 1.0) -> float:
+    """Seconds for a (M,K)x(K,N) fp32 GEMM on this platform."""
+    flops = 2.0 * M * N * K
+    eff = (plat.gemm_eff
+           * M / (M + plat.sat_m)
+           * N / (N + plat.sat_n)
+           * K / (K + plat.sat_k))
+    # SIMD-width variants: perfect fit gives a bonus, overwide ops are
+    # emulated (severe), narrow explicit vec under-uses wide units (mild).
+    if vec is not None:
+        if vec > plat.vec_width:
+            eff *= 0.30 * plat.vec_width / vec
+        elif vec == plat.vec_width:
+            eff *= 1.12
+        else:
+            eff *= 0.72 + 0.28 * vec / plat.vec_width
+    eff /= trans_penalty
+    t_compute = flops / (plat.peak_gflops * 1e9 * max(eff, 1e-3))
+    ws = 4.0 * (M * K + K * N + M * N)
+    t_mem = ws / (_bw(plat, ws) * 1e9)
+    return max(t_compute, t_mem)
+
+
+def _stream_time(plat: Platform, bytes_moved: float, footprint: float,
+                 eff: float = 1.0) -> float:
+    return bytes_moved / (_bw(plat, footprint) * 1e9 * eff)
+
+
+def _noise(plat: Platform, key: str) -> float:
+    h = int.from_bytes(hashlib.sha256(key.encode()).digest()[:8], "big")
+    u = (h % (1 << 52)) / float(1 << 52)
+    v = ((h >> 8) % (1 << 52)) / float(1 << 52)
+    # Box-Muller
+    z = math.sqrt(-2.0 * math.log(max(u, 1e-12))) * math.cos(2 * math.pi * v)
+    return math.exp(plat.noise_sigma * z)
+
+
+_TRANS_PENALTY = {None: 1.0, "atb": 1.06, "abt": 1.06, "atbt": 1.16}
+
+
+# ---------------------------------------------------------------------------
+# Per-family time models
+# ---------------------------------------------------------------------------
+
+def primitive_time(plat: Platform, prim: Primitive,
+                   k: int, c: int, im: int, s: int, f: int,
+                   noisy: bool = True) -> float:
+    """Simulated execution time (seconds) of ``prim`` on layer (k,c,im,s,f).
+    Returns NaN if the primitive is inapplicable."""
+    if not prim.applicable(k, c, im, s, f):
+        return float("nan")
+    o = out_size(im, f, s)
+    P = o * o
+    t = prim.traits
+    vec = t.get("vec")
+    trans = _TRANS_PENALTY.get(t.get("t"), 1.0)
+    fam = prim.family
+    in_bytes = 4.0 * c * im * im
+    w_bytes = 4.0 * k * c * f * f
+    out_bytes = 4.0 * k * P
+    base = plat.overhead_us * 1e-6
+
+    if fam == "direct":
+        # no lowering; poor compute efficiency (no blocking), input re-read
+        # f*f times when it does not fit cache.
+        flops = 2.0 * k * c * f * f * P
+        eff = 0.22 * (plat.vec_width / 8.0) ** 0.25
+        t_cmp = flops / (plat.peak_gflops * 1e9 * eff)
+        reread = f * f if in_bytes > plat.l2_kb * 1024 else 1.0
+        t_mem = _stream_time(plat, in_bytes * reread + w_bytes + out_bytes, in_bytes)
+        time = base + max(t_cmp, t_mem)
+
+    elif fam == "im2":
+        lower_bytes = 4.0 * c * f * f * P
+        scan = t.get("trav") == "scan"
+        # copy materialises the patch matrix (write+read), scan gathers with
+        # poorer locality but half the traffic.
+        if scan:
+            t_lower = _stream_time(plat, lower_bytes, in_bytes, eff=0.45)
+        else:
+            t_lower = _stream_time(plat, 2.0 * lower_bytes, lower_bytes, eff=0.85)
+        t_g = _gemm_time(plat, k, P, c * f * f, vec, trans)
+        # ki (chw) output from pixel-major GEMM pays a strided-write factor
+        t_out = _stream_time(plat, out_bytes, out_bytes,
+                             eff=0.8 if t.get("order") == "ki" else 1.0)
+        time = base + t_lower + t_g + t_out
+
+    elif fam == "kn2":
+        # f*f GEMMs over the FULL image + shifted accumulation traffic.
+        t_g = f * f * _gemm_time(plat, k, im * im, c, vec, trans)
+        acc_bytes = 4.0 * k * P * f * f * 2.0
+        t_acc = _stream_time(plat, acc_bytes, 4.0 * k * im * im, eff=0.7)
+        variant = t.get("variant", "")
+        if variant.startswith("as"):
+            t_acc *= 0.8    # single fused reduction
+        time = base + t_g + t_acc
+
+    elif fam in ("wino3", "wino5"):
+        m = t["tile_m"]; r = f
+        n = m + r - 1
+        if t.get("oned"):
+            tiles = o * (-(-o // m))          # rows x row-tiles
+            tr_flops = 2.0 * (c + k) * tiles * n * n + 2.0 * k * tiles * m * n
+            gemms = r * n                      # r kernel-rows x n points
+            t_g = gemms * _gemm_time(plat, k, tiles / max(1, n), c, vec)
+        else:
+            th = -(-o // m)
+            tiles = th * th                    # tile quantisation waste here
+            tr_flops = (2.0 * c * tiles * 2 * n * n * n     # input transform
+                        + 2.0 * k * c * 2 * n * n * r       # kernel transform
+                        + 2.0 * k * tiles * 2 * n * n * m)  # output transform
+            t_g = n * n * _gemm_time(plat, k, tiles, c, vec)
+        t_tr = tr_flops / (plat.peak_gflops * 1e9 * 0.35)
+        t_mem = _stream_time(plat, in_bytes + out_bytes + 4.0 * c * tiles * n * n,
+                             4.0 * c * tiles * n * n, eff=0.8)
+        time = base + t_g + t_tr + t_mem
+
+    elif fam == "c1x1":
+        t_g = _gemm_time(plat, k, P, c, vec, trans)
+        strided = 1.0 if s == 1 else 0.6
+        t_mem = _stream_time(plat, in_bytes / (s * s) + out_bytes, in_bytes, eff=strided)
+        time = base + t_g + t_mem
+
+    elif fam == "mec":
+        # partial lowering: ow strips of (h x f) columns; f partitioned GEMMs.
+        lower_bytes = 4.0 * c * im * f * o
+        t_lower = _stream_time(plat, 2.0 * lower_bytes, lower_bytes, eff=0.8)
+        # f partitioned GEMMs, each (M=k, N=P, K=c*f): total flops unchanged,
+        # but each GEMM sees a smaller K (worse efficiency) and a small
+        # per-partition call overhead — MEC trades time for memory.
+        t_g = f * _gemm_time(plat, k, P, c * f, vec)
+        t_part = f * plat.overhead_us * 0.3e-6
+        time = base + t_lower + t_g + t_part
+
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    if noisy:
+        time *= _noise(plat, f"{plat.name}|{prim.name}|{k},{c},{im},{s},{f}")
+    return time
+
+
+def dlt_time(plat: Platform, src: str, dst: str, c: int, im: int,
+             noisy: bool = True) -> float:
+    """Simulated data-layout-transformation time (seconds)."""
+    if src == dst:
+        return 0.0
+    bytes_moved = 2.0 * 4.0 * c * im * im
+    # chw<->hwc moves the innermost axis (worst); others swap adjacent axes.
+    kind = "full" if {src, dst} == {"chw", "hwc"} else "adjacent"
+    eff = plat.transpose_eff[kind]
+    tm = plat.overhead_us * 0.5e-6 + _stream_time(plat, bytes_moved, bytes_moved / 2, eff=eff)
+    if noisy:
+        tm *= _noise(plat, f"{plat.name}|dlt|{src}->{dst}|{c},{im}")
+    return tm

@@ -1,0 +1,249 @@
+"""Optimizers and LR schedules, pure JAX (no optax dependency).
+
+Implements the optimizers the paper uses (Adam, Table 3) plus the ones the
+large-scale training substrate needs (AdamW with decoupled weight decay,
+Adafactor with factored second moments — required to fit llama3-405b optimizer
+state in v5e HBM, see DESIGN.md §4), gradient clipping and schedules.
+
+All optimizers follow the same functional interface:
+
+    opt = adam(lr=1e-3)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+
+States are pytrees of arrays, so they are jit/pjit/checkpoint friendly. The
+``step`` counter lives in the state. ``lr`` may be a float or a callable
+``step -> lr`` (schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+LR = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Params, Any], tuple[Params, Any]]
+
+
+def _resolve_lr(lr: LR, step: jnp.ndarray) -> jnp.ndarray:
+    if callable(lr):
+        return jnp.asarray(lr(step), dtype=jnp.float32)
+    return jnp.asarray(lr, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                           floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        frac = jnp.clip((step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def step_decay_schedule(base: float, decay: float, every: int) -> Schedule:
+    """Multiply lr by ``decay`` every ``every`` steps (paper's fine-tune: x0.1)."""
+    def sched(step):
+        k = jnp.floor(jnp.asarray(step, jnp.float32) / every)
+        return base * decay ** k
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Gradient transforms
+# ---------------------------------------------------------------------------
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# SGD (baseline / tests)
+# ---------------------------------------------------------------------------
+
+def sgd(lr: LR, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+            new = jax.tree.map(lambda p, m: p - lr_t * m, params, mom)
+            return new, {"step": step, "mom": mom}
+        new = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
+        return new, {"step": step, "mom": None}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip_norm: Optional[float] = None) -> Optimizer:
+    """AdamW. With ``weight_decay=0`` this is the paper's Adam (Table 3 uses
+    Adam with L2-style weight decay 1e-5 for NN2; we apply it decoupled, which
+    for these magnitudes is equivalent in effect)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(params, grads, state):
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, step)
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1t
+            vh = v / b2t
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: LR, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; first moment optional)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: LR, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, min_dim_size_to_factor: int = 128,
+              momentum: Optional[float] = None,
+              momentum_dtype: jnp.dtype = jnp.bfloat16) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018). Factors the second-moment of any
+    matrix whose trailing two dims both exceed ``min_dim_size_to_factor`` into
+    row/col statistics. Memory per factored param ~= O(rows+cols), which is
+    what lets the llama3-405b training cell fit v5e HBM (DESIGN.md §4).
+    ``momentum=None`` disables the first moment entirely (maximum savings);
+    otherwise it is kept in ``momentum_dtype``."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor and shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def per(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    "v": None,
+                }
+            return {"vr": None, "vc": None, "v": jnp.zeros_like(p, jnp.float32)}
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(per, params, is_leaf=lambda x: isinstance(x, jnp.ndarray) or hasattr(x, "shape")),
+        }
+        if momentum is not None:
+            state["m"] = jax.tree.map(lambda p: jnp.zeros_like(p, momentum_dtype), params)
+        return state
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, vs, m):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if vs["v"] is None:
+                vr = beta2 * vs["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vs["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(vr[..., :, None] * vc[..., None, :]
+                                 / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+                new_vs = {"vr": vr, "vc": vc, "v": None}
+            else:
+                v = beta2 * vs["v"] + (1 - beta2) * g2
+                denom = jnp.sqrt(v)
+                new_vs = {"vr": None, "vc": None, "v": v}
+            u = g / jnp.maximum(denom, eps)
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if m is not None:
+                mm = (momentum * m.astype(jnp.float32) + (1 - momentum) * u)
+                u = mm
+                new_m = mm.astype(momentum_dtype)
+            else:
+                new_m = None
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, new_vs, new_m
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_m = treedef.flatten_up_to(state["m"]) if momentum is not None else [None] * len(flat_p)
+        out = [upd(p, g, v, m) for p, g, v, m in zip(flat_p, flat_g, flat_v, flat_m)]
+        new_state = {"step": step, "v": treedef.unflatten([o[1] for o in out])}
+        if momentum is not None:
+            new_state["m"] = treedef.unflatten([o[2] for o in out])
+        return treedef.unflatten([o[0] for o in out]), new_state
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {
+    "sgd": sgd,
+    "adam": adam,
+    "adamw": adamw,
+    "adafactor": adafactor,
+}
+
+
+def make_optimizer(name: str, lr: LR, **kw) -> Optimizer:
+    if name not in OPTIMIZERS:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(OPTIMIZERS)}")
+    return OPTIMIZERS[name](lr, **kw)

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
+benches must see 1 device (the dry-run sets its own count in-process).
+Distribution tests that need a host mesh spawn subprocesses."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

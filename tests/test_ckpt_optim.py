@@ -1,0 +1,87 @@
+"""Checkpoint manager + optimizers."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.train import optim
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"layers": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros((8,))},
+            "step_arr": jnp.asarray(3, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(10, t, extra={"loss": 1.5})
+    step, restored = mgr.restore_latest(jax.eval_shape(lambda: t))
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(a, b)
+    assert mgr.manifest(10)["extra"]["loss"] == 1.5
+
+
+def test_checkpoint_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [3, 4]
+
+
+def test_corrupt_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    # corrupt step 2's arrays: manifest checksum no longer matches
+    with open(os.path.join(str(tmp_path), "step_2", "arrays.npz"), "ab") as f:
+        f.write(b"garbage")
+    assert mgr.steps() == [1]
+    step, _ = mgr.restore_latest(jax.eval_shape(lambda: _tree()))
+    assert step == 1
+
+
+@pytest.mark.parametrize("name", ["sgd", "adam", "adamw", "adafactor"])
+def test_optimizers_descend_quadratic(name):
+    opt = optim.make_optimizer(name, 0.1 if name != "adafactor" else 0.5)
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum(q["x"] ** 2))(p)
+        return opt.update(p, g, s)
+
+    for _ in range(60):
+        params, state = step(params, state)
+    assert float(jnp.sum(params["x"] ** 2)) < 0.5
+
+
+def test_adafactor_factored_state_is_small():
+    opt = optim.adafactor(1e-2)
+    params = {"w": jnp.zeros((256, 512))}
+    st = opt.init(params)
+    v = st["v"]["w"]
+    assert v["v"] is None and v["vr"].shape == (256,) and v["vc"].shape == (512,)
+
+
+def test_schedules():
+    s = optim.warmup_cosine_schedule(1.0, 10, 110)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(110)) < 1e-6
+    d = optim.step_decay_schedule(1.0, 0.1, 100)
+    assert abs(float(d(250)) - 0.01) < 1e-9
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(optim.global_norm(clipped)) - 1.0) < 1e-5

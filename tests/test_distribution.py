@@ -1,0 +1,170 @@
+"""Distribution layer: sharding rules, HLO analysis, host-mesh pjit runs.
+
+Tests that need >1 device run in a subprocess with
+--xla_force_host_platform_device_count=8 (the main process must keep 1
+device for the rest of the suite).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.dist import sharding as SH
+from repro.dist.hloanalysis import HLOModule
+from repro.launch import shapes as SHP
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_specs_build_for_all_archs():
+    """Every parameter of every assigned arch gets a rank-consistent spec
+    on the production mesh shapes (structure-only — no devices needed)."""
+    from repro.models import transformer as T
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    for arch in cb.ASSIGNED_ARCHS:
+        cfg = cb.get(arch)
+        sds = jax.eval_shape(lambda c=cfg: T.init_params(jax.random.PRNGKey(0), c))
+        leaves = jax.tree_util.tree_flatten_with_path(sds)[0]
+        for path, leaf in leaves:
+            spec = SH.param_spec(SH._path_str(path), tuple(leaf.shape),
+                                 FakeMesh(), fsdp=True)
+            assert len(tuple(spec)) <= len(leaf.shape), (arch, path)
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is not None:
+                    size = 16 if isinstance(ax, str) else 256
+                    assert dim % (16 if isinstance(ax, str) else 256) == 0, \
+                        (arch, SH._path_str(path), spec, leaf.shape)
+
+
+def test_input_specs_cover_all_cells():
+    n = 0
+    for arch in cb.ASSIGNED_ARCHS:
+        cfg = cb.get(arch)
+        for shape in SHP.SHAPES:
+            if not SHP.cell_applicable(cfg, shape):
+                continue
+            specs = SHP.input_specs(cfg, shape)
+            assert "tokens" in specs
+            n += 1
+    assert n == 33          # 40 cells - 7 archs skipping long_500k
+
+
+def test_long_500k_policy():
+    for arch, expect in [("mamba2_2_7b", True), ("zamba2_2_7b", True),
+                         ("mixtral_8x7b", True), ("llama3_405b", False),
+                         ("gemma2_27b", False), ("whisper_medium", False)]:
+        assert SHP.cell_applicable(cb.get(arch), "long_500k") == expect, arch
+
+
+def test_hlo_parser_trip_count_correction():
+    """Parsed scan FLOPs must match the unrolled module (the parser's reason
+    to exist: cost_analysis does not multiply loop bodies)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys, json
+        sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, AxisType
+        from repro.dist.hloanalysis import HLOModule
+        mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+        D,F,B,S,L = 128, 256, 4, 32, 8
+        def step(params, x):
+            def loss_fn(p):
+                def body(c, w):
+                    h = jnp.einsum('bsd,df->bsf', c, w[0])
+                    return jnp.einsum('bsf,fd->bsd', jax.nn.relu(h), w[1]), None
+                y,_ = jax.lax.scan(body, x, p)
+                return jnp.mean(y**2)
+            return jax.value_and_grad(loss_fn)(params)
+        def mk(unroll):
+            def step_u(params, x):
+                def loss_fn(p):
+                    def body(c, w):
+                        h = jnp.einsum('bsd,df->bsf', c, w[0])
+                        return jnp.einsum('bsf,fd->bsd', jax.nn.relu(h), w[1]), None
+                    y,_ = jax.lax.scan(body, x, p, unroll=unroll)
+                    return jnp.mean(y**2)
+                return jax.value_and_grad(loss_fn)(params)
+            params = (jax.ShapeDtypeStruct((L,D,F), jnp.float32),
+                      jax.ShapeDtypeStruct((L,F,D), jnp.float32))
+            x = jax.ShapeDtypeStruct((B,S,D), jnp.float32)
+            ps = jax.NamedSharding(mesh, P(None,None,"model"))
+            xs = jax.NamedSharding(mesh, P("data",None,None))
+            return jax.jit(step_u, in_shardings=((ps,ps),xs)).lower(params,x).compile()
+        f_scan = HLOModule(mk(1).as_text()).entry_costs().flops
+        f_unroll = HLOModule(mk(8).as_text()).entry_costs().flops
+        print(json.dumps({"scan": f_scan, "unroll": f_unroll}))
+    """ % os.path.abspath(SRC))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    d = json.loads(r.stdout.strip().splitlines()[-1])
+    assert d["scan"] > 0
+    assert abs(d["scan"] - d["unroll"]) / d["unroll"] < 0.1, d
+
+
+def test_host_mesh_train_and_ckpt_reshard():
+    """Real pjit train steps on an 8-device host mesh + checkpoint save /
+    elastic restore onto a different mesh shape."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, %r)
+        import dataclasses, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import base as cb
+        from repro.models import transformer as T
+        from repro.dist import sharding as SH
+        from repro.launch import steps as ST
+        from repro.ckpt.manager import CheckpointManager
+        from jax.sharding import AxisType
+
+        cfg = cb.get("chatglm3_6b").reduced()
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,)*2)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        opt_name, opt = ST.optimizer_for(cfg)
+        opt_state = opt.init(params)
+        p_sh = SH.make_param_shardings(mesh, params)
+        o_sh = ST.make_opt_shardings(mesh, params, opt_name)
+        params = jax.device_put(params, p_sh)
+        aspec = ST.make_aspec(mesh, 8)
+        fn = ST.make_train_step(cfg, opt, aspec=aspec)
+        batch = {"tokens": jnp.zeros((8, 32), jnp.int32) + 3,
+                 "labels": jnp.ones((8, 32), jnp.int32)}
+        with mesh:
+            step = jax.jit(fn, in_shardings=(p_sh, o_sh, SH.make_batch_shardings(mesh, batch)))
+            losses = []
+            for _ in range(4):
+                params, opt_state, loss = step(params, opt_state, batch)
+                losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+        # checkpoint, then elastic restore on a DIFFERENT mesh (4x2)
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d)
+        mgr.save(4, params)
+        mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                              axis_types=(AxisType.Auto,)*2)
+        p_sh2 = SH.make_param_shardings(mesh2, jax.eval_shape(lambda: params))
+        step_r, restored = mgr.restore_latest(jax.eval_shape(lambda: params), p_sh2)
+        assert step_r == 4
+        a = jax.device_get(jax.tree.leaves(params)[0])
+        b = jax.device_get(jax.tree.leaves(restored)[0])
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        print("HOSTMESH-OK")
+    """ % os.path.abspath(SRC))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "HOSTMESH-OK" in r.stdout

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import transformer as T
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": jnp.arange(B * S).reshape(B, S) % cfg.vocab,
+         "labels": (jnp.arange(B * S).reshape(B, S) + 1) % cfg.vocab}
+    if cfg.prefix_tokens:
+        b["prefix_embeds"] = jnp.full((B, 8, cfg.d_model), 0.01, jnp.float32)
+    if cfg.kind == "encdec":
+        b["enc_embeds"] = jnp.full((B, 16, cfg.d_model), 0.01, jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", cb.ASSIGNED_ARCHS)
+def test_arch_smoke_train_step(arch):
+    """One forward/train step on CPU: output shapes + no NaNs (assignment
+    brief: reduced same-family config)."""
+    cfg = cb.get(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch), has_aux=True))(params)
+    assert np.isfinite(float(loss)), arch
+    gsum = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsum) and gsum > 0, arch
+
+
+@pytest.mark.parametrize("arch", cb.ASSIGNED_ARCHS)
+def test_arch_smoke_decode_step(arch):
+    cfg = cb.get(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = T.init_cache(cfg, B, 64, enc_len=16, dtype=jnp.float32)
+    logits, cache2 = jax.jit(lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))(
+        params, cache, jnp.full((B, 1), 3, jnp.int32), jnp.asarray(0, jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", cb.ASSIGNED_ARCHS)
+def test_arch_prefill_matches_forward(arch):
+    """prefill's last-position logits == forward + unembed on the same
+    tokens (the cache-producing path computes the same function)."""
+    cfg = cb.get(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    b = _batch(cfg)
+    logits, cache = jax.jit(lambda p: T.prefill(
+        p, cfg, b["tokens"], prefix_embeds=b.get("prefix_embeds"),
+        enc_embeds=b.get("enc_embeds")))(params)
+    h, _ = jax.jit(lambda p: T.forward(
+        p, cfg, b["tokens"], prefix_embeds=b.get("prefix_embeds"),
+        enc_embeds=b.get("enc_embeds")))(params)
+    from repro.models import components as C
+    from repro.models.transformer import _norm
+    hN = _norm(cfg, params["final_norm"], h[:, -1:])
+    emb = params["embed"] if cfg.tie_embeddings else {"emb": params["lm_head"]["w"].T}
+    want = C.unembed(emb, hN)[:, 0].astype(jnp.float32)
+    if cfg.final_softcap:
+        want = cfg.final_softcap * jnp.tanh(want / cfg.final_softcap)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["chatglm3_6b", "gemma2_27b", "mixtral_8x7b",
+                                  "minicpm3_4b", "mamba2_2_7b", "zamba2_2_7b"])
+def test_decode_consistency_with_forward(arch):
+    """Teacher-forced decode: prefill tokens[:4], then step tokens[4..7];
+    final-step logits must match a full forward over tokens[:8]."""
+    cfg = cb.get(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 8
+    tokens = (jnp.arange(B * S).reshape(B, S) * 7 + 3) % cfg.vocab
+
+    full_logits, _ = jax.jit(lambda p: T.prefill(p, cfg, tokens))(params)
+
+    _, cache = jax.jit(lambda p: T.prefill(p, cfg, tokens[:, :4]))(params)
+    # pad KV caches from prefill length 4 to S so decode can append
+    def grow(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "ckv", "kr"):
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, S - a.shape[2])
+            return jnp.pad(a, pad)
+        return a
+    cache = jax.tree_util.tree_map_with_path(grow, cache)
+
+    step = jax.jit(lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+    for i in range(4, S):
+        logits, cache = step(params, cache, tokens[:, i:i + 1],
+                             jnp.asarray(i, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_param_counts_sane():
+    for arch, lo, hi in [("llama3_405b", 380e9, 430e9),
+                         ("mixtral_8x7b", 42e9, 50e9),
+                         ("mamba2_2_7b", 2.2e9, 3.2e9),
+                         ("gemma2_27b", 24e9, 30e9)]:
+        n = cb.get(arch).n_params()
+        assert lo < n < hi, (arch, n)
+    a = cb.get("qwen3_moe_30b_a3b")
+    assert 27e9 < a.n_params() < 34e9
+    assert 2.5e9 < a.n_active_params() < 4.5e9

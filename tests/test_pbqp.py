@@ -1,0 +1,84 @@
+"""PBQP solver: property tests against the brute-force oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pbqp import PBQPGraph, brute_force, evaluate, solve
+
+
+def _random_graph(rng, n, max_choices=4, p_inf=0.3, extra_edges=None):
+    g = PBQPGraph()
+    sizes = rng.integers(2, max_choices + 1, size=n)
+    for i in range(n):
+        c = rng.uniform(0, 10, sizes[i])
+        if rng.random() < p_inf:
+            c[rng.integers(0, sizes[i])] = np.inf
+        if not np.isfinite(c).any():
+            c[0] = 1.0
+        g.add_node(i, c)
+    for i in range(n - 1):
+        g.add_edge(i, i + 1, rng.uniform(0, 5, (sizes[i], sizes[i + 1])))
+    extra = rng.integers(0, n) if extra_edges is None else extra_edges
+    for _ in range(extra):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            g.add_edge(u, v, rng.uniform(0, 5, (sizes[u], sizes[v])))
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 6))
+def test_matches_brute_force(seed, n):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, n)
+    sol = solve(g)
+    ref = brute_force(g)
+    if sol.optimal:
+        assert np.isclose(sol.cost, ref.cost), (sol.cost, ref.cost)
+    else:  # heuristic RN used: never better than optimal
+        assert sol.cost >= ref.cost - 1e-9
+    assert np.isclose(evaluate(g, sol.assignment), sol.cost)
+
+
+def test_chain_is_exact_and_fast():
+    rng = np.random.default_rng(0)
+    g = PBQPGraph()
+    for i in range(200):
+        g.add_node(i, rng.uniform(0, 10, 5))
+    for i in range(199):
+        g.add_edge(i, i + 1, rng.uniform(0, 5, (5, 5)))
+    sol = solve(g)
+    assert sol.optimal
+
+
+def test_diamond_reduces_exactly():
+    """Split/join (inception-style) graphs reduce via RII + parallel-edge
+    merge — no heuristic."""
+    rng = np.random.default_rng(1)
+    g = PBQPGraph()
+    for i in range(4):
+        g.add_node(i, rng.uniform(0, 10, 3))
+    g.add_edge(0, 1, rng.uniform(0, 5, (3, 3)))
+    g.add_edge(0, 2, rng.uniform(0, 5, (3, 3)))
+    g.add_edge(1, 3, rng.uniform(0, 5, (3, 3)))
+    g.add_edge(2, 3, rng.uniform(0, 5, (3, 3)))
+    sol = solve(g)
+    ref = brute_force(g)
+    assert sol.optimal and np.isclose(sol.cost, ref.cost)
+
+
+def test_inapplicable_choice_never_selected():
+    g = PBQPGraph()
+    g.add_node("a", np.array([np.inf, 5.0]))
+    g.add_node("b", np.array([1.0, np.inf, 2.0]))
+    g.add_edge("a", "b", np.ones((2, 3)))
+    sol = solve(g)
+    assert sol.assignment["a"] == 1
+    assert sol.assignment["b"] != 1
+    assert np.isfinite(sol.cost)
+
+
+def test_all_inf_node_rejected():
+    g = PBQPGraph()
+    with pytest.raises(ValueError):
+        g.add_node("x", np.array([np.inf, np.inf]))

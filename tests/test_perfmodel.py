@@ -1,0 +1,97 @@
+"""Performance model: normalizer, masked loss, training, factor correction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.normalize import LogStandardizer, mdrae
+from repro.core.perfmodel import (PerfModel, factor_correct, fit_perf_model,
+                                  init_mlp, masked_mse)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(4, 60), d=st.integers(1, 5))
+def test_normalizer_roundtrip(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = np.exp(rng.normal(0, 2, (n, d)))
+    nrm = LogStandardizer(log=True).fit(x)
+    back = nrm.inverse(nrm.transform(x))
+    np.testing.assert_allclose(back, x, rtol=1e-5)
+
+
+def test_normalizer_handles_nan():
+    x = np.array([[1.0, np.nan], [2.0, 4.0], [4.0, 16.0]])
+    nrm = LogStandardizer().fit(x)
+    t = nrm.transform(x)
+    assert np.isnan(t[0, 1])
+    assert np.isfinite(t[:, 0]).all()
+
+
+def test_masked_loss_ignores_undefined_and_their_gradient():
+    key = jax.random.PRNGKey(0)
+    params = init_mlp(key, (3, 8, 2))
+    x = jnp.ones((4, 3))
+    y = jnp.array([[1.0, 0.0]] * 4)
+    mask_full = jnp.ones((4, 2))
+    mask_half = jnp.array([[1.0, 0.0]] * 4)
+    # gradient with the second column masked == gradient when that column's
+    # labels are garbage (masking kills value AND gradient)
+    y_garbage = y.at[:, 1].set(1e6)
+    g1 = jax.grad(masked_mse)(params, x, y, mask_half)
+    g2 = jax.grad(masked_mse)(params, x, y_garbage, mask_half)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+    # and differs from the full loss
+    g3 = jax.grad(masked_mse)(params, x, y, mask_full)
+    diff = sum(float(jnp.abs(a - b).sum()) for a, b in
+               zip(jax.tree.leaves(g1), jax.tree.leaves(g3)))
+    assert diff > 0
+
+
+def _synthetic(rng, n=400, noise=0.0):
+    """Monomial runtime surfaces: t_j = c_j * k^a * c^b (log-linear)."""
+    feats = np.exp(rng.uniform(0, 3, (n, 5)))
+    coef = rng.uniform(0.5, 2.0, (5, 3))
+    times = np.exp(np.log(feats) @ coef) * 1e-6
+    if noise:
+        times *= np.exp(rng.normal(0, noise, times.shape))
+    times[rng.random((n, 3)) < 0.1] = np.nan    # undefined entries
+    return feats, times
+
+
+def test_lin_fits_log_linear_surface_exactly():
+    rng = np.random.default_rng(0)
+    f, t = _synthetic(rng)
+    m = fit_perf_model("lin", f[:300], t[:300], f[300:], t[300:])
+    assert m.mdrae(f[300:], t[300:]) < 0.01
+
+
+def test_nn2_fits_and_beats_chance():
+    rng = np.random.default_rng(1)
+    f, t = _synthetic(rng, noise=0.02)
+    m = fit_perf_model("nn2", f[:300], t[:300], f[300:350], t[300:350],
+                       max_iters=1500, patience=150)
+    err = m.mdrae(f[350:], t[350:])
+    assert err < 0.15, err
+
+
+def test_factor_correction_fixes_constant_scale():
+    rng = np.random.default_rng(2)
+    f, t = _synthetic(rng)
+    m = fit_perf_model("lin", f[:300], t[:300], f[300:], t[300:])
+    scale = np.array([2.0, 5.0, 0.5])
+    t_target = t * scale                       # "new platform" = scaled times
+    mc = factor_correct(m, f[300:320], t_target[300:320])
+    assert mc.mdrae(f[320:], t_target[320:]) < 0.02
+    assert m.mdrae(f[320:], t_target[320:]) > 0.5
+
+
+def test_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    f, t = _synthetic(rng)
+    m = fit_perf_model("lin", f[:300], t[:300], f[300:], t[300:])
+    p = str(tmp_path / "model.pkl")
+    m.save(p)
+    m2 = PerfModel.load(p)
+    np.testing.assert_allclose(m.predict(f[:10]), m2.predict(f[:10]), rtol=1e-6)

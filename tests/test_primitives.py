@@ -1,0 +1,94 @@
+"""Conv primitives vs the lax.conv oracle + DLT + executor."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import cnn_zoo
+from repro.primitives import layouts as L
+from repro.primitives.conv import (PRIMITIVE_NAMES, REGISTRY, RUNNABLE,
+                                   reference_conv, run_primitive)
+from repro.primitives.executor import execute, make_weights
+
+_CASES = [(4, 3, 16, 1, 3), (8, 5, 14, 1, 1), (6, 4, 19, 2, 3),
+          (3, 2, 13, 1, 5), (5, 7, 16, 2, 5), (2, 3, 9, 4, 3),
+          (7, 3, 11, 1, 7)]
+
+
+@pytest.mark.parametrize("name", RUNNABLE)
+def test_primitive_matches_oracle(name, rng):
+    p = REGISTRY[name]
+    tested = 0
+    for (k, c, im, s, f) in _CASES:
+        if not p.applicable(k, c, im, s, f):
+            continue
+        x = jnp.asarray(rng.standard_normal((c, im, im)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, c, f, f)), jnp.float32)
+        ref = reference_conv(x, w, s)
+        got = run_primitive(name, x, w, s)
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-3)
+        tested += 1
+    assert tested > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 12), c=st.integers(1, 8), im=st.integers(7, 24),
+       s=st.sampled_from([1, 2, 4]), f=st.sampled_from([1, 3, 5]),
+       seed=st.integers(0, 100))
+def test_primitives_property_shapes(k, c, im, s, f, seed):
+    if f > im:
+        return
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((c, im, im)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, c, f, f)), jnp.float32)
+    ref = reference_conv(x, w, s)
+    for name in ("im2col-copy-ab-ki", "direct-sum2d", "mec-col"):
+        if REGISTRY[name].applicable(k, c, im, s, f):
+            got = run_primitive(name, x, w, s)
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_registry_covers_paper_families():
+    fams = {p.family for p in REGISTRY.values()}
+    assert fams == {"direct", "im2", "kn2", "wino3", "wino5", "c1x1", "mec"}
+    assert len(PRIMITIVE_NAMES) >= 45          # Table 6 scale
+    assert len(RUNNABLE) >= 15
+
+
+def test_dlt_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((3, 5, 5)), jnp.float32)
+    for src in L.LAYOUTS:
+        for dst in L.LAYOUTS:
+            y = L.transform(L.from_chw(x, src), src, dst)
+            np.testing.assert_allclose(L.to_chw(y, dst), x)
+
+
+def test_executor_matches_composed_reference(rng):
+    """Run AlexNet under a mixed assignment; outputs must equal the pure
+    lax.conv composition regardless of which primitives were selected."""
+    spec = cnn_zoo.get("alexnet")
+    weights = make_weights(spec, seed=0)
+    assignment = {0: "im2col-copy-ab-ki", 1: "mec-col", 2: "winograd-2x2-3x3",
+                  3: "kn2row", 4: "direct-sum2d"}
+    x0 = jnp.asarray(rng.standard_normal((3, 224, 224)), jnp.float32) * 0.1
+    rep = execute(spec, assignment, weights, x=x0)
+    # compose reference
+    h = x0
+    for i, layer in enumerate(spec.nodes):
+        h = reference_conv(h, weights[i], layer.s)
+    np.testing.assert_allclose(np.asarray(rep.outputs[4]), np.asarray(h),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_executor_handles_branching(rng):
+    spec = cnn_zoo.get("squeezenet")
+    assignment = {}
+    for i, node in enumerate(spec.nodes):
+        if hasattr(node, "k"):
+            assignment[i] = ("conv-1x1-gemm-ab-ki" if node.f == 1
+                             else "im2col-copy-ab-ki")
+        else:
+            assignment[i] = "chw"
+    rep = execute(spec, assignment)
+    out = rep.outputs[len(spec.nodes) - 1]
+    assert np.isfinite(np.asarray(out)).all()

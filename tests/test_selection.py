@@ -1,0 +1,66 @@
+"""End-to-end primitive selection (paper Fig 2 pipeline)."""
+import numpy as np
+import pytest
+
+from repro.core import pbqp
+from repro.core.selection import (ModelProvider, SimulatedProvider, build_pbqp,
+                                  network_cost, select)
+from repro.models import cnn_zoo
+from repro.primitives.conv import REGISTRY
+
+
+@pytest.fixture(scope="module")
+def provider():
+    return SimulatedProvider("intel")
+
+
+def test_selection_runs_all_paper_networks(provider):
+    for net in cnn_zoo.PAPER_SELECTION_NETS:
+        spec = cnn_zoo.get(net)
+        res = select(spec, provider)
+        assert res.optimal, net            # reductions stay exact on these DAGs
+        assert np.isfinite(res.solver_cost) and res.solver_cost > 0
+        # every conv node got an applicable primitive
+        for i, node in enumerate(spec.nodes):
+            if hasattr(node, "k"):
+                p = REGISTRY[res.assignment[i]]
+                assert p.applicable(*node.config), (net, i)
+
+
+def test_selection_beats_single_family(provider):
+    """The PBQP-selected mix must be at least as fast as forcing every layer
+    to the best single always-applicable primitive (the paper's motivation)."""
+    spec = cnn_zoo.get("alexnet")
+    res = select(spec, provider)
+    for fixed in ("im2col-copy-ab-ki", "direct-sum2d", "mec-col"):
+        assignment = {}
+        for i, node in enumerate(spec.nodes):
+            assignment[i] = fixed if hasattr(node, "k") else "chw"
+        cost_fixed = network_cost(spec, assignment, provider)
+        assert res.solver_cost <= cost_fixed + 1e-12
+
+
+def test_model_provider_selection_near_optimal():
+    """A perfect 'model' (the noiseless simulator) must reproduce the
+    measured-cost selection exactly; Fig 7's gap comes only from estimation
+    error."""
+    truth = SimulatedProvider("intel", noisy=True)
+    perfect = SimulatedProvider("intel", noisy=False)
+    spec = cnn_zoo.get("alexnet")
+    sel = select(spec, perfect)
+    c_model = network_cost(spec, sel.assignment, truth)
+    c_truth = select(spec, truth).solver_cost
+    assert c_model <= c_truth * 1.05
+
+
+def test_build_pbqp_edge_costs_are_dlt_times(provider):
+    spec = cnn_zoo.get("alexnet")
+    g = build_pbqp(spec, provider)
+    # identity layout transitions must cost 0 on some edge pair
+    m = g.adj[0][1]
+    names = provider.columns
+    i = names.index("im2col-copy-ab-ki")     # chw -> chw
+    j = names.index("im2col-scan-ab-ki")     # chw in
+    assert m[i, j] == 0.0
+    k = names.index("im2col-copy-atb-ik")    # hwc out
+    assert m[k, j] > 0.0                     # hwc -> chw costs time
