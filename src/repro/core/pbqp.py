@@ -106,19 +106,50 @@ def solve(graph: PBQPGraph) -> Solution:
     stack: List[tuple] = []
     optimal = True
 
-    def degree(n):
-        return len(g.adj[n])
+    # Degree-bucketed worklist: buckets[d] is an insertion-ordered set of the
+    # nodes of current degree d, so picking the next reduction is O(1)
+    # amortised instead of a scan over all remaining nodes per round.
+    deg: Dict[Node, int] = {n: len(g.adj[n]) for n in g.costs}
+    buckets: Dict[int, Dict[Node, None]] = {}
+    for n, d in deg.items():
+        buckets.setdefault(d, {})[n] = None
+
+    def _requeue(n: Node) -> None:
+        d = len(g.adj[n])
+        if d == deg[n]:
+            return
+        b = buckets[deg[n]]
+        del b[n]
+        if not b:
+            del buckets[deg[n]]
+        deg[n] = d
+        buckets.setdefault(d, {})[n] = None
+
+    def _pop(n: Node) -> None:
+        b = buckets[deg[n]]
+        del b[n]
+        if not b:
+            del buckets[deg[n]]
+        del deg[n]
+        neighbours = list(g.adj[n])
+        _remove_node(g, n)
+        for v in neighbours:
+            _requeue(v)
+
+    def _take(d: int) -> Optional[Node]:
+        b = buckets.get(d)
+        return next(iter(b)) if b else None
 
     while g.costs:
         # Prefer the cheapest applicable reduction each round.
-        n0 = next((n for n in g.costs if degree(n) == 0), None)
+        n0 = _take(0)
         if n0 is not None:
             # Record the *reduced* vector: later folds only add to nodes
             # still present, so at removal time this vector is final.
             stack.append(("R0", n0, int(np.argmin(g.costs[n0])), None))
-            _remove_node(g, n0)
+            _pop(n0)
             continue
-        n1 = next((n for n in g.costs if degree(n) == 1), None)
+        n1 = _take(1)
         if n1 is not None:
             (v, m), = g.adj[n1].items()
             # fold: cost_v[sv] += min_su cost_u[su] + m[su, sv]
@@ -126,9 +157,9 @@ def solve(graph: PBQPGraph) -> Solution:
             back = np.argmin(tot, axis=0)
             g.costs[v] = g.costs[v] + tot[back, np.arange(tot.shape[1])]
             stack.append(("RI", n1, v, back))
-            _remove_node(g, n1)
+            _pop(n1)
             continue
-        n2 = next((n for n in g.costs if degree(n) == 2), None)
+        n2 = _take(2)
         if n2 is not None:
             (v, mv), (w, mw) = g.adj[n2].items()
             # D[sv, sw] = min_su cost_u[su] + mv[su, sv] + mw[su, sw]
@@ -136,7 +167,7 @@ def solve(graph: PBQPGraph) -> Solution:
             back = np.argmin(tot, axis=0)           # (sv, sw)
             d = np.min(tot, axis=0)
             stack.append(("RII", n2, (v, w), back))
-            _remove_node(g, n2)
+            _pop(n2)
             # merge with existing v-w edge if any (parallel-edge addition)
             if w in g.adj[v]:
                 g.adj[v][w] = g.adj[v][w] + d
@@ -144,12 +175,14 @@ def solve(graph: PBQPGraph) -> Solution:
             else:
                 g.adj[v][w] = d
                 g.adj[w][v] = d.T
+            _requeue(v)
+            _requeue(w)
             continue
         # RN heuristic: pick max-degree node, choose the selection that
         # minimises node cost + sum of row minima over incident edges, then
         # fold the chosen row into each neighbour's vector.
         optimal = False
-        n = max(g.costs, key=degree)
+        n = next(iter(buckets[max(buckets)]))
         score = g.costs[n].copy()
         for v, m in g.adj[n].items():
             score = score + np.min(m + g.costs[v][None, :], axis=1)
@@ -157,7 +190,7 @@ def solve(graph: PBQPGraph) -> Solution:
         for v, m in list(g.adj[n].items()):
             g.costs[v] = g.costs[v] + m[su]
         stack.append(("RN", n, su, None))
-        _remove_node(g, n)
+        _pop(n)
 
     # Back-substitution in reverse reduction order.
     assignment: Dict[Node, int] = {}

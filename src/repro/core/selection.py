@@ -20,7 +20,7 @@ import numpy as np
 from repro.core import pbqp
 from repro.core.perfmodel import PerfModel
 from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
-from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY
+from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY, compile_traits
 from repro.primitives import layouts as L
 
 
@@ -48,31 +48,25 @@ class SimulatedProvider:
 
     def __init__(self, platform: str, noisy: bool = True,
                  columns: Optional[Sequence[str]] = None):
-        from repro.profiler.simulators import PLATFORMS, dlt_time, primitive_time
+        from repro.profiler.simulators import (PLATFORMS, dlt_time_batch,
+                                               primitive_time_batch)
         self._plat = PLATFORMS[platform]
-        self._ptime = primitive_time
-        self._dtime = dlt_time
+        self._ptime_batch = primitive_time_batch
+        self._dtime_batch = dlt_time_batch
         self.noisy = noisy
         self.columns = list(columns) if columns is not None else list(PRIMITIVE_NAMES)
 
     def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
-        out = np.full((len(configs), len(self.columns)), np.nan)
-        for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
-            for j, name in enumerate(self.columns):
-                out[i, j] = self._ptime(self._plat, REGISTRY[name], k, c, im, s, f,
-                                        noisy=self.noisy)
-        return out
+        if len(configs) == 0:
+            return np.zeros((0, len(self.columns)))
+        return self._ptime_batch(self._plat, np.asarray(configs, np.int64),
+                                 noisy=self.noisy, columns=tuple(self.columns))
 
     def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
-        out = np.zeros((len(pairs), len(_DLT_COLS)))
-        for i, (c, im) in enumerate(np.asarray(pairs, int)):
-            j = 0
-            for (s, d) in L.dlt_pairs():
-                if s == d:
-                    continue
-                out[i, j] = self._dtime(self._plat, s, d, c, im, noisy=self.noisy)
-                j += 1
-        return out
+        if len(pairs) == 0:
+            return np.zeros((0, len(_DLT_COLS)))
+        return self._dtime_batch(self._plat, np.asarray(pairs, np.int64),
+                                 noisy=self.noisy)
 
 
 class ModelProvider:
@@ -87,11 +81,10 @@ class ModelProvider:
     def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
         pred = self.prim_model.predict(np.asarray(configs, np.float64))
         # applicability is structural knowledge, not predicted
-        for j, name in enumerate(self.columns):
-            p = REGISTRY[name]
-            for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
-                if not p.applicable(k, c, im, s, f):
-                    pred[i, j] = np.nan
+        cfg = np.asarray(configs, np.int64)
+        mask = compile_traits(tuple(self.columns)).applicable_mask(
+            cfg[:, 0], cfg[:, 1], cfg[:, 2], cfg[:, 3], cfg[:, 4])
+        pred[~mask] = np.nan
         return pred
 
     def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
@@ -109,24 +102,12 @@ class MeasuredProvider:
         self.columns = list(columns) if columns is not None else list(RUNNABLE)
 
     def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
-        out = np.full((len(configs), len(self.columns)), np.nan)
-        for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
-            for j, name in enumerate(self.columns):
-                out[i, j] = self._host.profile_primitive(name, k, c, im, s, f,
-                                                         repeats=self.repeats)
-        return out
+        return self._host.profile_primitive_batch(
+            np.asarray(configs, int), self.columns, repeats=self.repeats)
 
     def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
-        out = np.zeros((len(pairs), len(_DLT_COLS)))
-        for i, (c, im) in enumerate(np.asarray(pairs, int)):
-            j = 0
-            for (s, d) in L.dlt_pairs():
-                if s == d:
-                    continue
-                out[i, j] = self._host.profile_dlt(s, d, int(c), int(im),
-                                                   repeats=self.repeats)
-                j += 1
-        return out
+        return self._host.profile_dlt_batch(np.asarray(pairs, int),
+                                            repeats=self.repeats)
 
 
 # ---------------------------------------------------------------------------
@@ -171,24 +152,35 @@ class SelectionResult:
         return self.estimate_seconds + self.solver_seconds
 
 
+# (src, dst) layout indices of the 6 non-identity DLT columns, for scattering
+# a provider DLT row into a dense (layouts × layouts) table
+_DLT_SRC_IDX = np.array([L.LAYOUTS.index(s) for (s, d) in L.dlt_pairs() if s != d])
+_DLT_DST_IDX = np.array([L.LAYOUTS.index(d) for (s, d) in L.dlt_pairs() if s != d])
+
+
 def build_pbqp(spec: CNNSpec, provider: CostProvider) -> pbqp.PBQPGraph:
     columns = list(provider.columns)
     convs = [(i, n) for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)]
     configs = np.array([n.config for _, n in convs], np.float64)
     cost_mat = provider.primitive_cost_matrix(configs) if len(convs) else np.zeros((0, len(columns)))
 
-    # batched DLT prediction for every distinct produced tensor
+    # batched DLT prediction for every distinct produced tensor, scattered
+    # into dense (layouts × layouts) tables: tables[p, src, dst]
     pair_list = sorted({_edge_tensor(spec.nodes[u]) for (u, v) in spec.edges})
     pair_idx = {p: i for i, p in enumerate(pair_list)}
     dlt_mat = (provider.dlt_cost_matrix(np.array(pair_list, np.float64))
                if pair_list else np.zeros((0, len(_DLT_COLS))))
-    dlt_col = {name: j for j, name in enumerate(_DLT_COLS)}
+    tables = np.zeros((len(pair_list), len(L.LAYOUTS), len(L.LAYOUTS)))
+    tables[:, _DLT_SRC_IDX, _DLT_DST_IDX] = np.maximum(dlt_mat, 0.0)
 
-    def dlt(src: str, dst: str, c: int, im: int) -> float:
-        if src == dst:
-            return 0.0
-        v = dlt_mat[pair_idx[(c, im)], dlt_col[L.dlt_name(src, dst)]]
-        return float(max(v, 0.0))
+    # per-choice layout index vectors: conv nodes from the compiled registry
+    # traits of the provider's columns, join nodes choose a layout directly
+    traits = compile_traits(tuple(columns))
+    join_idx = np.arange(len(L.LAYOUTS))
+    out_idx = {i: (traits.out_layout if isinstance(n, ConvLayer) else join_idx)
+               for i, n in enumerate(spec.nodes)}
+    in_idx = {i: (traits.in_layout if isinstance(n, ConvLayer) else join_idx)
+              for i, n in enumerate(spec.nodes)}
 
     g = pbqp.PBQPGraph()
     conv_cost = {i: cost_mat[r] for r, (i, _) in enumerate(convs)}
@@ -202,14 +194,10 @@ def build_pbqp(spec: CNNSpec, provider: CostProvider) -> pbqp.PBQPGraph:
         g.add_node(i, vec, labels=choices)
 
     for (u, v) in spec.edges:
-        nu, nv = spec.nodes[u], spec.nodes[v]
-        cu = _node_choices(nu, columns)
-        cv = _node_choices(nv, columns)
-        c, im = _edge_tensor(nu)
-        m = np.zeros((len(cu), len(cv)))
-        for a, pa in enumerate(cu):
-            for b, pb in enumerate(cv):
-                m[a, b] = dlt(_out_layout(nu, pa), _in_layout(nv, pb), c, im)
+        tab = tables[pair_idx[_edge_tensor(spec.nodes[u])]]
+        # every edge matrix is one gather: (producer out-layout, consumer
+        # in-layout) per choice pair — no Python loop over primitive pairs
+        m = tab[out_idx[u][:, None], in_idx[v][None, :]]
         g.add_edge(u, v, m)
     return g
 

@@ -18,7 +18,8 @@ import numpy as np
 from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY
 from repro.primitives import layouts as L
 from repro.profiler import pools
-from repro.profiler.simulators import PLATFORMS, Platform, dlt_time, primitive_time
+from repro.profiler.simulators import (PLATFORMS, Platform, dlt_time_batch,
+                                       primitive_time_batch)
 
 
 @dataclasses.dataclass
@@ -71,11 +72,8 @@ def simulate_primitive_dataset(platform: str,
     plat = PLATFORMS[platform]
     cfgs = pools.config_pool(max_triplets=max_triplets)
     feats = np.array(cfgs, np.float64)
-    times = np.full((len(cfgs), len(PRIMITIVE_NAMES)), np.nan)
-    prims = [REGISTRY[n] for n in PRIMITIVE_NAMES]
-    for i, (k, c, im, s, f) in enumerate(cfgs):
-        for j, p in enumerate(prims):
-            times[i, j] = primitive_time(plat, p, k, c, im, s, f, noisy=noisy)
+    # one vectorised pass over all configs × all registry columns
+    times = primitive_time_batch(plat, np.array(cfgs, np.int64), noisy=noisy)
     return PerfDataset(feats, times, list(PRIMITIVE_NAMES),
                        ["k", "c", "im", "s", "f"], platform)
 
@@ -87,12 +85,5 @@ def simulate_dlt_dataset(platform: str,
     pairs = pools.dlt_pool(max_pairs=max_pairs)
     names = [L.dlt_name(s, d) for (s, d) in L.dlt_pairs() if s != d]
     feats = np.array(pairs, np.float64)
-    times = np.zeros((len(pairs), len(names)))
-    for i, (c, im) in enumerate(pairs):
-        j = 0
-        for (s, d) in L.dlt_pairs():
-            if s == d:
-                continue
-            times[i, j] = dlt_time(plat, s, d, c, im, noisy=noisy)
-            j += 1
+    times = dlt_time_batch(plat, np.array(pairs, np.int64), noisy=noisy)
     return PerfDataset(feats, times, names, ["c", "im"], platform)

@@ -77,6 +77,35 @@ def profile_dlt(src: str, dst: str, c: int, im: int, repeats: int = 25) -> float
     return time_callable(_jitted_dlt(src, dst), x, repeats=repeats)
 
 
+def profile_primitive_batch(configs: Sequence[Tuple[int, int, int, int, int]],
+                            columns: Optional[Sequence[str]] = None,
+                            repeats: int = 25) -> np.ndarray:
+    """(L, P) measured runtimes over ``configs`` × ``columns`` — the batch
+    counterpart of ``profile_primitive`` (same matrix contract as the
+    simulator's ``primitive_time_batch``). Measurement is inherently serial,
+    but jitted callables and the input RNG are shared across the batch."""
+    cols = list(columns) if columns is not None else list(RUNNABLE)
+    out = np.full((len(configs), len(cols)), np.nan)
+    rng = np.random.default_rng(0)
+    for i, (k, c, im, s, f) in enumerate(np.asarray(configs, int)):
+        for j, name in enumerate(cols):
+            out[i, j] = profile_primitive(name, int(k), int(c), int(im), int(s),
+                                          int(f), repeats=repeats, rng=rng)
+    return out
+
+
+def profile_dlt_batch(pairs: Sequence[Tuple[int, int]],
+                      repeats: int = 25) -> np.ndarray:
+    """(M, 6) measured DLT runtimes in ``layouts.dlt_pairs()`` order with
+    identity pairs excluded — batch counterpart of ``profile_dlt``."""
+    ni = [(s, d) for (s, d) in L.dlt_pairs() if s != d]
+    out = np.zeros((len(pairs), len(ni)))
+    for i, (c, im) in enumerate(np.asarray(pairs, int)):
+        for j, (s, d) in enumerate(ni):
+            out[i, j] = profile_dlt(s, d, int(c), int(im), repeats=repeats)
+    return out
+
+
 def profile_primitive_dataset(configs: Sequence[Tuple[int, int, int, int, int]],
                               primitives: Optional[Sequence[str]] = None,
                               repeats: int = 9) -> PerfDataset:
@@ -84,23 +113,12 @@ def profile_primitive_dataset(configs: Sequence[Tuple[int, int, int, int, int]],
     only. This is the expensive stage the paper replaces — we keep it small."""
     prims = list(primitives) if primitives is not None else list(RUNNABLE)
     feats = np.array(configs, np.float64)
-    times = np.full((len(configs), len(prims)), np.nan)
-    rng = np.random.default_rng(0)
-    for i, (k, c, im, s, f) in enumerate(configs):
-        for j, name in enumerate(prims):
-            times[i, j] = profile_primitive(name, k, c, im, s, f, repeats=repeats, rng=rng)
+    times = profile_primitive_batch(configs, prims, repeats=repeats)
     return PerfDataset(feats, times, prims, ["k", "c", "im", "s", "f"], "host-cpu")
 
 
 def profile_dlt_dataset(pairs: Sequence[Tuple[int, int]], repeats: int = 9) -> PerfDataset:
     names = [L.dlt_name(s, d) for (s, d) in L.dlt_pairs() if s != d]
     feats = np.array(pairs, np.float64)
-    times = np.zeros((len(pairs), len(names)))
-    for i, (c, im) in enumerate(pairs):
-        j = 0
-        for (s, d) in L.dlt_pairs():
-            if s == d:
-                continue
-            times[i, j] = profile_dlt(s, d, c, im, repeats=repeats)
-            j += 1
+    times = profile_dlt_batch(pairs, repeats=repeats)
     return PerfDataset(feats, times, names, ["c", "im"], "host-cpu")

@@ -23,18 +23,30 @@ trained on one platform transfers imperfectly — a constant per-primitive
 factor helps (paper's "Factor Intel") but fine-tuning is required to close
 the gap. This is the structure the paper's transfer study measures.
 
+Batched estimation (DESIGN.md §2.4): ``primitive_time_batch`` and
+``dlt_time_batch`` evaluate the family models for *all* configs × *all*
+registry columns in one numpy broadcast pass, with the registry traits
+pre-compiled into per-column arrays (``repro.primitives.conv.compile_traits``).
+The lognormal noise is a counter-based hash stream (splitmix64 finaliser over
+the integer key fields) rather than a per-call sha256, so a whole noise
+matrix is one vectorised evaluation; the scalar APIs ``primitive_time`` /
+``dlt_time`` delegate to 1×1 batches and are therefore bit-compatible with
+the batched path.
+
 Times are in seconds.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import math
-from typing import Dict, Optional
+from functools import lru_cache
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.primitives.conv import REGISTRY, Primitive, out_size
+from repro.primitives.conv import (FAMILIES, PRIMITIVE_NAMES, REGISTRY,
+                                   T_VARIANTS, Primitive, compile_traits,
+                                   name_hash64, out_size)
 from repro.primitives import layouts as L
 
 
@@ -90,10 +102,10 @@ PLATFORMS: Dict[str, Platform] = {"intel": INTEL, "amd": AMD, "arm": ARM}
 
 
 # ---------------------------------------------------------------------------
-# Building blocks
+# Building blocks (broadcasting — accept scalars or arrays)
 # ---------------------------------------------------------------------------
 
-def _bw(plat: Platform, working_set_bytes: float) -> float:
+def _bw(plat: Platform, working_set_bytes) -> np.ndarray:
     """Cache staircase, GB/s (smoothed cliffs)."""
     kb = working_set_bytes / 1024.0
     levels = [(plat.l1_kb, plat.bw_l1), (plat.l2_kb, plat.bw_l2)]
@@ -102,14 +114,18 @@ def _bw(plat: Platform, working_set_bytes: float) -> float:
     bw = plat.bw_dram
     for size, level_bw in reversed(levels):
         # logistic blend around each cliff
-        frac = 1.0 / (1.0 + math.exp(4.0 * (math.log(kb + 1e-9) - math.log(size))))
+        frac = 1.0 / (1.0 + np.exp(4.0 * (np.log(kb + 1e-9) - math.log(size))))
         bw = bw + frac * (level_bw - bw)
     return bw
 
 
-def _gemm_time(plat: Platform, M: float, N: float, K: float,
-               vec: Optional[int], trans_penalty: float = 1.0) -> float:
-    """Seconds for a (M,K)x(K,N) fp32 GEMM on this platform."""
+def _gemm_time(plat: Platform, M, N, K, vec, trans_penalty=1.0) -> np.ndarray:
+    """Seconds for a (M,K)x(K,N) fp32 GEMM on this platform.
+
+    ``vec`` is a per-column float array of explicit SIMD widths with 0.0
+    meaning "unspecified" (no adjustment); ``trans_penalty`` broadcasts the
+    same way. Operation order mirrors the original scalar model exactly.
+    """
     flops = 2.0 * M * N * K
     eff = (plat.gemm_eff
            * M / (M + plat.sat_m)
@@ -117,6 +133,302 @@ def _gemm_time(plat: Platform, M: float, N: float, K: float,
            * K / (K + plat.sat_k))
     # SIMD-width variants: perfect fit gives a bonus, overwide ops are
     # emulated (severe), narrow explicit vec under-uses wide units (mild).
+    vec = np.asarray(vec, np.float64)
+    safe = np.where(vec == 0.0, 1.0, vec)
+    factor = np.where(vec == 0.0, 1.0,
+                      np.where(vec > plat.vec_width,
+                               0.30 * plat.vec_width / safe,
+                               np.where(vec == plat.vec_width, 1.12,
+                                        0.72 + 0.28 * vec / plat.vec_width)))
+    eff = eff * factor
+    eff = eff / trans_penalty
+    t_compute = flops / (plat.peak_gflops * 1e9 * np.maximum(eff, 1e-3))
+    ws = 4.0 * (M * K + K * N + M * N)
+    t_mem = ws / (_bw(plat, ws) * 1e9)
+    return np.maximum(t_compute, t_mem)
+
+
+def _stream_time(plat: Platform, bytes_moved, footprint, eff=1.0) -> np.ndarray:
+    return bytes_moved / (_bw(plat, footprint) * 1e9 * eff)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based noise stream (splitmix64 finaliser over integer key fields)
+# ---------------------------------------------------------------------------
+
+_MASK64 = (1 << 64) - 1
+_MASK52 = (1 << 52) - 1
+_MIX_A = 0xBF58476D1CE4E5B9
+_MIX_B = 0x94D049BB133111EB
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """Vectorised splitmix64 finaliser on uint64 arrays."""
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(_MIX_A)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(_MIX_B)
+    return x ^ (x >> np.uint64(31))
+
+
+def _mix64_int(x: int) -> int:
+    x &= _MASK64
+    x = ((x ^ (x >> 30)) * _MIX_A) & _MASK64
+    x = ((x ^ (x >> 27)) * _MIX_B) & _MASK64
+    return x ^ (x >> 31)
+
+
+@lru_cache(maxsize=64)
+def _plat_key(name: str) -> int:
+    return name_hash64("plat|" + name)
+
+
+def _noise_from_hash(plat: Platform, h: np.ndarray) -> np.ndarray:
+    u = (h & np.uint64(_MASK52)).astype(np.float64) / float(1 << 52)
+    v = ((h >> np.uint64(8)) & np.uint64(_MASK52)).astype(np.float64) / float(1 << 52)
+    # Box-Muller
+    z = np.sqrt(-2.0 * np.log(np.maximum(u, 1e-12))) * np.cos(2 * np.pi * v)
+    return np.exp(plat.noise_sigma * z)
+
+
+def _noise_matrix(plat: Platform, col_keys: np.ndarray, *fields) -> np.ndarray:
+    """(L, P) lognormal noise: one hash stream per (column, field-tuple)."""
+    h = _mix64(np.uint64(_plat_key(plat.name)) ^ col_keys.astype(np.uint64)[None, :])
+    for f in fields:
+        h = _mix64(h ^ np.asarray(f, np.uint64)[:, None])
+    return _noise_from_hash(plat, h)
+
+
+def _noise_scalar(plat: Platform, col_key: int, *fields: int) -> float:
+    """Scalar twin of ``_noise_matrix`` (same stream, python-int hashing)."""
+    h = _mix64_int(_plat_key(plat.name) ^ col_key)
+    for f in fields:
+        h = _mix64_int(h ^ int(f))
+    u = (h & _MASK52) / float(1 << 52)
+    v = ((h >> 8) & _MASK52) / float(1 << 52)
+    z = math.sqrt(-2.0 * math.log(max(u, 1e-12))) * math.cos(2 * math.pi * v)
+    return math.exp(plat.noise_sigma * z)
+
+
+_TRANS_PENALTY = {None: 1.0, "atb": 1.06, "abt": 1.06, "atbt": 1.16}
+
+# transpose penalty per T_VARIANTS code, for vectorised lookup
+_TRANS_TABLE = np.array([_TRANS_PENALTY[v] for v in T_VARIANTS], np.float64)
+
+_DLT_PAIRS_NI: Tuple[Tuple[str, str], ...] = tuple(
+    (s, d) for (s, d) in L.dlt_pairs() if s != d)
+_DLT_FULL = np.array([{s, d} == {"chw", "hwc"} for (s, d) in _DLT_PAIRS_NI])
+_DLT_KEYS = np.array([name_hash64("dlt|" + L.dlt_name(s, d))
+                      for (s, d) in _DLT_PAIRS_NI], np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# Batched per-family time models
+# ---------------------------------------------------------------------------
+
+def primitive_time_batch(plat: Platform, configs: np.ndarray,
+                         noisy: bool = True,
+                         columns: Optional[Sequence[str]] = None) -> np.ndarray:
+    """Simulated execution times for every (config, registry column) pair.
+
+    ``configs`` is (L, 5) integer rows (k, c, im, s, f); returns an (L, P)
+    float matrix in ``columns`` order (default: the full registry), NaN where
+    a primitive is inapplicable. One broadcast pass over the family models —
+    no Python loop over layers or primitives.
+    """
+    cfg = np.asarray(configs)
+    if cfg.ndim != 2 or cfg.shape[1] != 5:
+        raise ValueError(f"configs must be (L, 5), got {cfg.shape}")
+    names = tuple(columns) if columns is not None else tuple(PRIMITIVE_NAMES)
+    tr = compile_traits(names)
+    cfg = cfg.astype(np.int64)
+    ki, ci, imi, si, fi = (cfg[:, j] for j in range(5))
+    app = tr.applicable_mask(ki, ci, imi, si, fi)            # (L, P)
+
+    k, c, im, s, f = (a.astype(np.float64)[:, None] for a in (ki, ci, imi, si, fi))
+    o_int = ((imi - fi) // si + 1)[:, None]                  # (L, 1) int
+    o = o_int.astype(np.float64)
+    P = o * o
+    in_bytes = 4.0 * c * im * im
+    w_bytes = 4.0 * k * c * f * f
+    out_bytes = 4.0 * k * P
+    base = plat.overhead_us * 1e-6
+
+    out = np.empty((cfg.shape[0], len(names)), np.float64)
+    fam = tr.fam
+    with np.errstate(all="ignore"):
+        cols = np.nonzero(fam == FAMILIES.index("direct"))[0]
+        if cols.size:
+            # no lowering; poor compute efficiency (no blocking), input
+            # re-read f*f times when it does not fit cache.
+            flops = 2.0 * k * c * f * f * P
+            eff = 0.22 * (plat.vec_width / 8.0) ** 0.25
+            t_cmp = flops / (plat.peak_gflops * 1e9 * eff)
+            reread = np.where(in_bytes > plat.l2_kb * 1024, f * f, 1.0)
+            t_mem = _stream_time(plat, in_bytes * reread + w_bytes + out_bytes,
+                                 in_bytes)
+            out[:, cols] = base + np.maximum(t_cmp, t_mem)
+
+        cols = np.nonzero(fam == FAMILIES.index("im2"))[0]
+        if cols.size:
+            vec = tr.vec[cols]
+            trans = _TRANS_TABLE[tr.t_idx[cols]]
+            lower_bytes = 4.0 * c * f * f * P
+            # copy materialises the patch matrix (write+read), scan gathers
+            # with poorer locality but half the traffic.
+            t_scan = _stream_time(plat, lower_bytes, in_bytes, eff=0.45)
+            t_copy = _stream_time(plat, 2.0 * lower_bytes, lower_bytes, eff=0.85)
+            t_lower = np.where(tr.scan[cols][None, :], t_scan, t_copy)
+            t_g = _gemm_time(plat, k, P, c * f * f, vec, trans)
+            # ki (chw) output from pixel-major GEMM pays a strided-write factor
+            eff_out = np.where(tr.order_ki[cols], 0.8, 1.0)[None, :]
+            t_out = _stream_time(plat, out_bytes, out_bytes, eff=eff_out)
+            out[:, cols] = base + t_lower + t_g + t_out
+
+        cols = np.nonzero(fam == FAMILIES.index("kn2"))[0]
+        if cols.size:
+            vec = tr.vec[cols]
+            trans = _TRANS_TABLE[tr.t_idx[cols]]
+            # f*f GEMMs over the FULL image + shifted accumulation traffic.
+            t_g = f * f * _gemm_time(plat, k, im * im, c, vec, trans)
+            acc_bytes = 4.0 * k * P * f * f * 2.0
+            t_acc = _stream_time(plat, acc_bytes, 4.0 * k * im * im, eff=0.7)
+            # "-as" variants: single fused reduction
+            t_acc = t_acc * np.where(tr.variant_as[cols], 0.8, 1.0)[None, :]
+            out[:, cols] = base + t_g + t_acc
+
+        cols = np.nonzero((fam == FAMILIES.index("wino3"))
+                          | (fam == FAMILIES.index("wino5")))[0]
+        if cols.size:
+            vec = tr.vec[cols]
+            m = tr.tile_m[cols][None, :]                     # (1, W) int
+            r = fi[:, None]                                  # (L, 1) int
+            n = m + r - 1                                    # (L, W) int
+            oned = tr.oned[cols][None, :]
+            # 1-D: rows x row-tiles; 2-D: tile quantisation waste
+            tiles1 = o_int * (-(-o_int // m))
+            th = -(-o_int // m)
+            tiles2 = th * th
+            tiles = np.where(oned, tiles1, tiles2)
+            tr_flops = np.where(
+                oned,
+                2.0 * (c + k) * tiles1 * n * n + 2.0 * k * tiles1 * m * n,
+                (2.0 * c * tiles2 * 2 * n * n * n        # input transform
+                 + 2.0 * k * c * 2 * n * n * r           # kernel transform
+                 + 2.0 * k * tiles2 * 2 * n * n * m))    # output transform
+            gemms1 = r * n                                # r kernel-rows x n points
+            t_g = np.where(
+                oned,
+                gemms1 * _gemm_time(plat, k, tiles1 / np.maximum(1, n), c, vec),
+                n * n * _gemm_time(plat, k, tiles2, c, vec))
+            t_tr = tr_flops / (plat.peak_gflops * 1e9 * 0.35)
+            t_mem = _stream_time(plat, in_bytes + out_bytes + 4.0 * c * tiles * n * n,
+                                 4.0 * c * tiles * n * n, eff=0.8)
+            out[:, cols] = base + t_g + t_tr + t_mem
+
+        cols = np.nonzero(fam == FAMILIES.index("c1x1"))[0]
+        if cols.size:
+            vec = tr.vec[cols]
+            trans = _TRANS_TABLE[tr.t_idx[cols]]
+            t_g = _gemm_time(plat, k, P, c, vec, trans)
+            strided = np.where(s == 1.0, 1.0, 0.6)
+            t_mem = _stream_time(plat, in_bytes / (s * s) + out_bytes, in_bytes,
+                                 eff=strided)
+            out[:, cols] = base + t_g + t_mem
+
+        cols = np.nonzero(fam == FAMILIES.index("mec"))[0]
+        if cols.size:
+            vec = tr.vec[cols]
+            # partial lowering: ow strips of (h x f) columns; f partitioned
+            # GEMMs, each seeing a smaller K (worse efficiency) and a small
+            # per-partition call overhead — MEC trades time for memory.
+            lower_bytes = 4.0 * c * im * f * o
+            t_lower = _stream_time(plat, 2.0 * lower_bytes, lower_bytes, eff=0.8)
+            t_g = f * _gemm_time(plat, k, P, c * f, vec)
+            t_part = f * plat.overhead_us * 0.3e-6
+            out[:, cols] = base + t_lower + t_g + t_part
+
+        if noisy:
+            out = out * _noise_matrix(plat, tr.key, ki, ci, imi, si, fi)
+    out[~app] = np.nan
+    return out
+
+
+def dlt_time_batch(plat: Platform, pairs: np.ndarray,
+                   noisy: bool = True) -> np.ndarray:
+    """Simulated DLT times for every ((c, im) pair, non-identity layout pair).
+
+    ``pairs`` is (M, 2) integer rows (c, im); returns (M, 6) in
+    ``layouts.dlt_pairs()`` order with identity pairs excluded.
+    """
+    pr = np.asarray(pairs)
+    if pr.ndim != 2 or pr.shape[1] != 2:
+        raise ValueError(f"pairs must be (M, 2), got {pr.shape}")
+    pr = pr.astype(np.int64)
+    ci, imi = pr[:, 0], pr[:, 1]
+    c, im = (a.astype(np.float64)[:, None] for a in (ci, imi))
+    bytes_moved = 2.0 * 4.0 * c * im * im
+    # chw<->hwc moves the innermost axis (worst); others swap adjacent axes.
+    eff = np.where(_DLT_FULL, plat.transpose_eff["full"],
+                   plat.transpose_eff["adjacent"])[None, :]
+    tm = plat.overhead_us * 0.5e-6 + _stream_time(plat, bytes_moved,
+                                                  bytes_moved / 2, eff=eff)
+    if noisy:
+        tm = tm * _noise_matrix(plat, _DLT_KEYS, ci, imi)
+    return tm
+
+
+# ---------------------------------------------------------------------------
+# Scalar API (delegates to 1×1 batches — bit-compatible with the batch path)
+# ---------------------------------------------------------------------------
+
+def primitive_time(plat: Platform, prim: Primitive,
+                   k: int, c: int, im: int, s: int, f: int,
+                   noisy: bool = True) -> float:
+    """Simulated execution time (seconds) of ``prim`` on layer (k,c,im,s,f).
+    Returns NaN if the primitive is inapplicable."""
+    if prim.name not in REGISTRY:
+        # ad-hoc Primitive instances can't go through the compiled-trait
+        # batch path; fall back to the per-call reference model
+        return _primitive_time_scalar(plat, prim, k, c, im, s, f, noisy=noisy)
+    mat = primitive_time_batch(plat, np.array([[k, c, im, s, f]], np.int64),
+                               noisy=noisy, columns=(prim.name,))
+    return float(mat[0, 0])
+
+
+def dlt_time(plat: Platform, src: str, dst: str, c: int, im: int,
+             noisy: bool = True) -> float:
+    """Simulated data-layout-transformation time (seconds)."""
+    if src == dst:
+        return 0.0
+    col = _DLT_PAIRS_NI.index((src, dst))
+    return float(dlt_time_batch(plat, np.array([[c, im]], np.int64),
+                                noisy=noisy)[0, col])
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference models (the pre-vectorisation implementation, kept as an
+# independent oracle for equivalence tests and as the seed-equivalent
+# baseline in benchmarks/selection_throughput.py)
+# ---------------------------------------------------------------------------
+
+def _bw_scalar(plat: Platform, working_set_bytes: float) -> float:
+    kb = working_set_bytes / 1024.0
+    levels = [(plat.l1_kb, plat.bw_l1), (plat.l2_kb, plat.bw_l2)]
+    if plat.l3_kb:
+        levels.append((plat.l3_kb, plat.bw_l3))
+    bw = plat.bw_dram
+    for size, level_bw in reversed(levels):
+        frac = 1.0 / (1.0 + math.exp(4.0 * (math.log(kb + 1e-9) - math.log(size))))
+        bw = bw + frac * (level_bw - bw)
+    return bw
+
+
+def _gemm_time_scalar(plat: Platform, M: float, N: float, K: float,
+                      vec: Optional[int], trans_penalty: float = 1.0) -> float:
+    flops = 2.0 * M * N * K
+    eff = (plat.gemm_eff
+           * M / (M + plat.sat_m)
+           * N / (N + plat.sat_n)
+           * K / (K + plat.sat_k))
     if vec is not None:
         if vec > plat.vec_width:
             eff *= 0.30 * plat.vec_width / vec
@@ -127,36 +439,19 @@ def _gemm_time(plat: Platform, M: float, N: float, K: float,
     eff /= trans_penalty
     t_compute = flops / (plat.peak_gflops * 1e9 * max(eff, 1e-3))
     ws = 4.0 * (M * K + K * N + M * N)
-    t_mem = ws / (_bw(plat, ws) * 1e9)
+    t_mem = ws / (_bw_scalar(plat, ws) * 1e9)
     return max(t_compute, t_mem)
 
 
-def _stream_time(plat: Platform, bytes_moved: float, footprint: float,
-                 eff: float = 1.0) -> float:
-    return bytes_moved / (_bw(plat, footprint) * 1e9 * eff)
+def _stream_time_scalar(plat: Platform, bytes_moved: float, footprint: float,
+                        eff: float = 1.0) -> float:
+    return bytes_moved / (_bw_scalar(plat, footprint) * 1e9 * eff)
 
 
-def _noise(plat: Platform, key: str) -> float:
-    h = int.from_bytes(hashlib.sha256(key.encode()).digest()[:8], "big")
-    u = (h % (1 << 52)) / float(1 << 52)
-    v = ((h >> 8) % (1 << 52)) / float(1 << 52)
-    # Box-Muller
-    z = math.sqrt(-2.0 * math.log(max(u, 1e-12))) * math.cos(2 * math.pi * v)
-    return math.exp(plat.noise_sigma * z)
-
-
-_TRANS_PENALTY = {None: 1.0, "atb": 1.06, "abt": 1.06, "atbt": 1.16}
-
-
-# ---------------------------------------------------------------------------
-# Per-family time models
-# ---------------------------------------------------------------------------
-
-def primitive_time(plat: Platform, prim: Primitive,
-                   k: int, c: int, im: int, s: int, f: int,
-                   noisy: bool = True) -> float:
-    """Simulated execution time (seconds) of ``prim`` on layer (k,c,im,s,f).
-    Returns NaN if the primitive is inapplicable."""
+def _primitive_time_scalar(plat: Platform, prim: Primitive,
+                           k: int, c: int, im: int, s: int, f: int,
+                           noisy: bool = True) -> float:
+    """Pre-vectorisation per-call model — one (layer, primitive) at a time."""
     if not prim.applicable(k, c, im, s, f):
         return float("nan")
     o = out_size(im, f, s)
@@ -171,74 +466,64 @@ def primitive_time(plat: Platform, prim: Primitive,
     base = plat.overhead_us * 1e-6
 
     if fam == "direct":
-        # no lowering; poor compute efficiency (no blocking), input re-read
-        # f*f times when it does not fit cache.
         flops = 2.0 * k * c * f * f * P
         eff = 0.22 * (plat.vec_width / 8.0) ** 0.25
         t_cmp = flops / (plat.peak_gflops * 1e9 * eff)
         reread = f * f if in_bytes > plat.l2_kb * 1024 else 1.0
-        t_mem = _stream_time(plat, in_bytes * reread + w_bytes + out_bytes, in_bytes)
+        t_mem = _stream_time_scalar(plat, in_bytes * reread + w_bytes + out_bytes, in_bytes)
         time = base + max(t_cmp, t_mem)
 
     elif fam == "im2":
         lower_bytes = 4.0 * c * f * f * P
         scan = t.get("trav") == "scan"
-        # copy materialises the patch matrix (write+read), scan gathers with
-        # poorer locality but half the traffic.
         if scan:
-            t_lower = _stream_time(plat, lower_bytes, in_bytes, eff=0.45)
+            t_lower = _stream_time_scalar(plat, lower_bytes, in_bytes, eff=0.45)
         else:
-            t_lower = _stream_time(plat, 2.0 * lower_bytes, lower_bytes, eff=0.85)
-        t_g = _gemm_time(plat, k, P, c * f * f, vec, trans)
-        # ki (chw) output from pixel-major GEMM pays a strided-write factor
-        t_out = _stream_time(plat, out_bytes, out_bytes,
-                             eff=0.8 if t.get("order") == "ki" else 1.0)
+            t_lower = _stream_time_scalar(plat, 2.0 * lower_bytes, lower_bytes, eff=0.85)
+        t_g = _gemm_time_scalar(plat, k, P, c * f * f, vec, trans)
+        t_out = _stream_time_scalar(plat, out_bytes, out_bytes,
+                                    eff=0.8 if t.get("order") == "ki" else 1.0)
         time = base + t_lower + t_g + t_out
 
     elif fam == "kn2":
-        # f*f GEMMs over the FULL image + shifted accumulation traffic.
-        t_g = f * f * _gemm_time(plat, k, im * im, c, vec, trans)
+        t_g = f * f * _gemm_time_scalar(plat, k, im * im, c, vec, trans)
         acc_bytes = 4.0 * k * P * f * f * 2.0
-        t_acc = _stream_time(plat, acc_bytes, 4.0 * k * im * im, eff=0.7)
+        t_acc = _stream_time_scalar(plat, acc_bytes, 4.0 * k * im * im, eff=0.7)
         variant = t.get("variant", "")
         if variant.startswith("as"):
-            t_acc *= 0.8    # single fused reduction
+            t_acc *= 0.8
         time = base + t_g + t_acc
 
     elif fam in ("wino3", "wino5"):
         m = t["tile_m"]; r = f
         n = m + r - 1
         if t.get("oned"):
-            tiles = o * (-(-o // m))          # rows x row-tiles
+            tiles = o * (-(-o // m))
             tr_flops = 2.0 * (c + k) * tiles * n * n + 2.0 * k * tiles * m * n
-            gemms = r * n                      # r kernel-rows x n points
-            t_g = gemms * _gemm_time(plat, k, tiles / max(1, n), c, vec)
+            gemms = r * n
+            t_g = gemms * _gemm_time_scalar(plat, k, tiles / max(1, n), c, vec)
         else:
             th = -(-o // m)
-            tiles = th * th                    # tile quantisation waste here
-            tr_flops = (2.0 * c * tiles * 2 * n * n * n     # input transform
-                        + 2.0 * k * c * 2 * n * n * r       # kernel transform
-                        + 2.0 * k * tiles * 2 * n * n * m)  # output transform
-            t_g = n * n * _gemm_time(plat, k, tiles, c, vec)
+            tiles = th * th
+            tr_flops = (2.0 * c * tiles * 2 * n * n * n
+                        + 2.0 * k * c * 2 * n * n * r
+                        + 2.0 * k * tiles * 2 * n * n * m)
+            t_g = n * n * _gemm_time_scalar(plat, k, tiles, c, vec)
         t_tr = tr_flops / (plat.peak_gflops * 1e9 * 0.35)
-        t_mem = _stream_time(plat, in_bytes + out_bytes + 4.0 * c * tiles * n * n,
-                             4.0 * c * tiles * n * n, eff=0.8)
+        t_mem = _stream_time_scalar(plat, in_bytes + out_bytes + 4.0 * c * tiles * n * n,
+                                    4.0 * c * tiles * n * n, eff=0.8)
         time = base + t_g + t_tr + t_mem
 
     elif fam == "c1x1":
-        t_g = _gemm_time(plat, k, P, c, vec, trans)
+        t_g = _gemm_time_scalar(plat, k, P, c, vec, trans)
         strided = 1.0 if s == 1 else 0.6
-        t_mem = _stream_time(plat, in_bytes / (s * s) + out_bytes, in_bytes, eff=strided)
+        t_mem = _stream_time_scalar(plat, in_bytes / (s * s) + out_bytes, in_bytes, eff=strided)
         time = base + t_g + t_mem
 
     elif fam == "mec":
-        # partial lowering: ow strips of (h x f) columns; f partitioned GEMMs.
         lower_bytes = 4.0 * c * im * f * o
-        t_lower = _stream_time(plat, 2.0 * lower_bytes, lower_bytes, eff=0.8)
-        # f partitioned GEMMs, each (M=k, N=P, K=c*f): total flops unchanged,
-        # but each GEMM sees a smaller K (worse efficiency) and a small
-        # per-partition call overhead — MEC trades time for memory.
-        t_g = f * _gemm_time(plat, k, P, c * f, vec)
+        t_lower = _stream_time_scalar(plat, 2.0 * lower_bytes, lower_bytes, eff=0.8)
+        t_g = f * _gemm_time_scalar(plat, k, P, c * f, vec)
         t_part = f * plat.overhead_us * 0.3e-6
         time = base + t_lower + t_g + t_part
 
@@ -246,20 +531,19 @@ def primitive_time(plat: Platform, prim: Primitive,
         raise ValueError(fam)
 
     if noisy:
-        time *= _noise(plat, f"{plat.name}|{prim.name}|{k},{c},{im},{s},{f}")
+        time *= _noise_scalar(plat, name_hash64(prim.name), k, c, im, s, f)
     return time
 
 
-def dlt_time(plat: Platform, src: str, dst: str, c: int, im: int,
-             noisy: bool = True) -> float:
-    """Simulated data-layout-transformation time (seconds)."""
+def _dlt_time_scalar(plat: Platform, src: str, dst: str, c: int, im: int,
+                     noisy: bool = True) -> float:
     if src == dst:
         return 0.0
     bytes_moved = 2.0 * 4.0 * c * im * im
-    # chw<->hwc moves the innermost axis (worst); others swap adjacent axes.
     kind = "full" if {src, dst} == {"chw", "hwc"} else "adjacent"
     eff = plat.transpose_eff[kind]
-    tm = plat.overhead_us * 0.5e-6 + _stream_time(plat, bytes_moved, bytes_moved / 2, eff=eff)
+    tm = plat.overhead_us * 0.5e-6 + _stream_time_scalar(plat, bytes_moved,
+                                                         bytes_moved / 2, eff=eff)
     if noisy:
-        tm *= _noise(plat, f"{plat.name}|dlt|{src}->{dst}|{c},{im}")
+        tm *= _noise_scalar(plat, name_hash64("dlt|" + L.dlt_name(src, dst)), c, im)
     return tm

@@ -1,0 +1,32 @@
+"""Fallback for environments without the ``hypothesis`` dev extra.
+
+Lets test modules keep their deterministic tests runnable while property
+tests (@given) collect as skipped instead of breaking the whole module at
+import time. Usage:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from hypothesis_stub import given, settings, st
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    """Stand-in so module-level strategy expressions evaluate to inert None."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

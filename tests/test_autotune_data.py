@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # property tests need the dev extra
+    from hypothesis_stub import given, settings, st
 
 from repro.configs import base as cb
 from repro.core.autotune import analytic_cost, autotune_arch, matmul_sites, train_cost_model

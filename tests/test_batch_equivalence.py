@@ -1,0 +1,191 @@
+"""Batch/scalar equivalence of the vectorised estimation path (DESIGN.md §2.4).
+
+Three layers of guarantees:
+  * the public scalar APIs (``primitive_time`` / ``dlt_time``) delegate to
+    1×1 batches, so they are *bit-identical* to the batched matrices;
+  * the batched models match the independent pre-vectorisation scalar
+    reference (``_primitive_time_scalar`` / ``_dlt_time_scalar``) to float64
+    round-off (the reference computes with ``math.*``, the batch with numpy
+    ufuncs — identical operation order, last-ulp transcendental differences);
+  * ``build_pbqp`` produces graphs identical to the seed's per-pair edge
+    loops (node vectors and edge matrices compared exactly).
+"""
+import numpy as np
+import pytest
+
+from repro.core import pbqp
+from repro.core.selection import (SimulatedProvider, _DLT_COLS, _edge_tensor,
+                                  _in_layout, _node_choices, _out_layout,
+                                  build_pbqp)
+from repro.models import cnn_zoo
+from repro.models.cnn_zoo import ConvLayer
+from repro.primitives import layouts as L
+from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY, compile_traits
+from repro.profiler.simulators import (PLATFORMS, _dlt_time_scalar,
+                                       _primitive_time_scalar, dlt_time,
+                                       dlt_time_batch, primitive_time,
+                                       primitive_time_batch)
+
+_DLT_NI = [(s, d) for (s, d) in L.dlt_pairs() if s != d]
+
+
+def _random_configs(rng, n):
+    return np.stack([rng.integers(1, 512, n), rng.integers(1, 512, n),
+                     rng.integers(7, 230, n), rng.choice([1, 2, 4], n),
+                     rng.choice([1, 3, 5, 7, 9, 11], n)], axis=1)
+
+
+@pytest.mark.parametrize("platform", sorted(PLATFORMS))
+@pytest.mark.parametrize("noisy", [True, False])
+def test_primitive_batch_matches_scalar_reference(platform, noisy):
+    plat = PLATFORMS[platform]
+    cfgs = _random_configs(np.random.default_rng(hash(platform) % 2**32), 30)
+    batch = primitive_time_batch(plat, cfgs, noisy=noisy)
+    ref = np.array([[_primitive_time_scalar(plat, REGISTRY[n], *map(int, cfg),
+                                            noisy=noisy)
+                     for n in PRIMITIVE_NAMES] for cfg in cfgs])
+    # NaN pattern == applicability, everywhere
+    np.testing.assert_array_equal(np.isnan(batch), np.isnan(ref))
+    mask = ~np.isnan(ref)
+    np.testing.assert_allclose(batch[mask], ref[mask], rtol=1e-12)
+    assert (batch[mask] > 0).all()
+
+
+@pytest.mark.parametrize("platform", sorted(PLATFORMS))
+def test_primitive_scalar_api_is_bitwise_batch(platform):
+    """The public scalar API must agree with the batch matrix *exactly*."""
+    plat = PLATFORMS[platform]
+    cfgs = _random_configs(np.random.default_rng(7), 12)
+    for noisy in (True, False):
+        batch = primitive_time_batch(plat, cfgs, noisy=noisy)
+        for i, cfg in enumerate(cfgs):
+            for j, name in enumerate(PRIMITIVE_NAMES):
+                v = primitive_time(plat, REGISTRY[name], *map(int, cfg),
+                                   noisy=noisy)
+                b = batch[i, j]
+                assert (np.isnan(v) and np.isnan(b)) or v == b, (name, cfg)
+
+
+def test_primitive_batch_row_independence():
+    """Batching must not couple cells: any sub-batch reproduces the full
+    matrix bit-for-bit (catches broadcasting/indexing bugs)."""
+    plat = PLATFORMS["intel"]
+    cfgs = _random_configs(np.random.default_rng(3), 20)
+    full = primitive_time_batch(plat, cfgs)
+    for sl in (slice(0, 1), slice(3, 11), slice(7, 20, 4)):
+        part = primitive_time_batch(plat, cfgs[sl])
+        np.testing.assert_array_equal(part, full[sl])
+    # column subsets too
+    cols = ("kn2row", "mec-col", "winograd-4x4-3x3", "im2row-scan-ab-ik")
+    sub = primitive_time_batch(plat, cfgs, columns=cols)
+    idx = [PRIMITIVE_NAMES.index(c) for c in cols]
+    np.testing.assert_array_equal(sub, full[:, idx])
+
+
+@pytest.mark.parametrize("platform", sorted(PLATFORMS))
+@pytest.mark.parametrize("noisy", [True, False])
+def test_dlt_batch_matches_scalar(platform, noisy):
+    plat = PLATFORMS[platform]
+    rng = np.random.default_rng(11)
+    pairs = np.stack([rng.integers(1, 512, 25), rng.integers(7, 230, 25)], axis=1)
+    batch = dlt_time_batch(plat, pairs, noisy=noisy)
+    ref = np.array([[_dlt_time_scalar(plat, s, d, int(c), int(im), noisy=noisy)
+                     for (s, d) in _DLT_NI] for (c, im) in pairs])
+    np.testing.assert_allclose(batch, ref, rtol=1e-12)
+    # public scalar API: bitwise
+    for i, (c, im) in enumerate(pairs[:5]):
+        for j, (s, d) in enumerate(_DLT_NI):
+            assert dlt_time(plat, s, d, int(c), int(im), noisy=noisy) == batch[i, j]
+    assert dlt_time(plat, "chw", "chw", 64, 56) == 0.0
+
+
+def test_noise_deterministic_and_lognormal_scale():
+    plat = PLATFORMS["arm"]
+    cfgs = _random_configs(np.random.default_rng(5), 10)
+    a = primitive_time_batch(plat, cfgs)
+    b = primitive_time_batch(plat, cfgs)
+    np.testing.assert_array_equal(a, b)
+    clean = primitive_time_batch(plat, cfgs, noisy=False)
+    m = ~np.isnan(clean)
+    ratio = a[m] / clean[m]
+    # multiplicative noise: bounded and centred around 1 (σ = 6%)
+    assert (ratio > 0.6).all() and (ratio < 1.6).all()
+    assert abs(np.log(ratio).mean()) < 0.05
+
+
+def test_applicability_mask_matches_registry():
+    cfgs = _random_configs(np.random.default_rng(13), 40)
+    tr = compile_traits(tuple(PRIMITIVE_NAMES))
+    mask = tr.applicable_mask(cfgs[:, 0], cfgs[:, 1], cfgs[:, 2],
+                              cfgs[:, 3], cfgs[:, 4])
+    ref = np.array([[REGISTRY[n].applicable(*map(int, cfg))
+                     for n in PRIMITIVE_NAMES] for cfg in cfgs])
+    np.testing.assert_array_equal(mask, ref)
+
+
+def _build_pbqp_reference(spec, provider):
+    """The seed's scalar graph construction (per-pair Python edge loops)."""
+    columns = list(provider.columns)
+    convs = [(i, n) for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)]
+    configs = np.array([n.config for _, n in convs], np.float64)
+    cost_mat = (provider.primitive_cost_matrix(configs)
+                if len(convs) else np.zeros((0, len(columns))))
+    pair_list = sorted({_edge_tensor(spec.nodes[u]) for (u, v) in spec.edges})
+    pair_idx = {p: i for i, p in enumerate(pair_list)}
+    dlt_mat = (provider.dlt_cost_matrix(np.array(pair_list, np.float64))
+               if pair_list else np.zeros((0, len(_DLT_COLS))))
+    dlt_col = {name: j for j, name in enumerate(_DLT_COLS)}
+
+    def dlt(src, dst, c, im):
+        if src == dst:
+            return 0.0
+        return float(max(dlt_mat[pair_idx[(c, im)], dlt_col[L.dlt_name(src, dst)]], 0.0))
+
+    g = pbqp.PBQPGraph()
+    conv_cost = {i: cost_mat[r] for r, (i, _) in enumerate(convs)}
+    for i, node in enumerate(spec.nodes):
+        choices = _node_choices(node, columns)
+        if isinstance(node, ConvLayer):
+            vec = np.maximum(np.where(np.isfinite(conv_cost[i]),
+                                      conv_cost[i], np.inf), 0.0)
+        else:
+            vec = np.zeros(len(choices))
+        g.add_node(i, vec, labels=choices)
+    for (u, v) in spec.edges:
+        nu, nv = spec.nodes[u], spec.nodes[v]
+        cu, cv = _node_choices(nu, columns), _node_choices(nv, columns)
+        c, im = _edge_tensor(nu)
+        m = np.zeros((len(cu), len(cv)))
+        for a, pa in enumerate(cu):
+            for b, pb in enumerate(cv):
+                m[a, b] = dlt(_out_layout(nu, pa), _in_layout(nv, pb), c, im)
+        g.add_edge(u, v, m)
+    return g
+
+
+@pytest.mark.parametrize("net", ["alexnet", "squeezenet", "googlenet"])
+def test_build_pbqp_identical_to_seed_loops(net):
+    """Vectorised graph construction: identical node vectors and edge
+    matrices to the per-(primitive pair) Python loops, chains and joins."""
+    spec = cnn_zoo.get(net)
+    provider = SimulatedProvider("intel")
+    fast = build_pbqp(spec, provider)
+    ref = _build_pbqp_reference(spec, provider)
+    assert set(fast.costs) == set(ref.costs)
+    for n in fast.costs:
+        np.testing.assert_array_equal(fast.costs[n], ref.costs[n])
+        assert fast.labels[n] == ref.labels[n]
+        assert set(fast.adj[n]) == set(ref.adj[n])
+        for v in fast.adj[n]:
+            np.testing.assert_array_equal(fast.adj[n][v], ref.adj[n][v])
+
+
+def test_build_pbqp_solution_unchanged():
+    """Same graphs => same optimal assignment cost through the worklist
+    solver as through brute evaluation of the returned assignment."""
+    spec = cnn_zoo.get("alexnet")
+    provider = SimulatedProvider("intel", noisy=False)
+    g = build_pbqp(spec, provider)
+    sol = pbqp.solve(g)
+    assert sol.optimal
+    assert np.isclose(pbqp.evaluate(g, sol.assignment), sol.cost)

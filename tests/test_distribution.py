@@ -15,6 +15,8 @@ import numpy as np
 import pytest
 
 from repro.configs import base as cb
+
+pytest.importorskip("repro.dist")  # distribution layer not present in all builds
 from repro.dist import sharding as SH
 from repro.dist.hloanalysis import HLOModule
 from repro.launch import shapes as SHP

@@ -1,7 +1,11 @@
 """PBQP solver: property tests against the brute-force oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # property tests need the dev extra
+    from hypothesis_stub import given, settings, st
 
 from repro.core.pbqp import PBQPGraph, brute_force, evaluate, solve
 

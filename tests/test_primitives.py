@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # property tests need the dev extra
+    from hypothesis_stub import given, settings, st
 
 from repro.models import cnn_zoo
 from repro.primitives import layouts as L

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # property tests need the dev extra
+    from hypothesis_stub import given, settings, st
 
 from repro.models.moe import MoEConfig, moe_apply, moe_init
 from repro.models.ssm import SSMConfig, ssd_chunked, ssm_block, ssm_decode_step, ssm_init
