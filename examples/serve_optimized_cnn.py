@@ -1,9 +1,16 @@
 """End-to-end serving driver (the paper's deployment story): take a CNN,
 optimise it by primitive selection ON THIS MACHINE (real profiling of the
-JAX primitives), then serve batched inference requests with the optimised
-implementation and report throughput against a fixed-primitive baseline.
+JAX primitives), then serve batched inference requests through the compiled
+whole-graph plan (repro.primitives.plan) and report throughput against a
+fixed-primitive baseline.
+
+Batching knob: ``--batch N`` sets the request batch size — the compiled plan
+is one jitted function over a leading batch axis, so larger batches amortise
+dispatch and let XLA fuse across images; ``--sweep`` prints an images/s curve
+over batch sizes 1/4/16 to show throughput scaling with batch size.
 
 Run:  PYTHONPATH=src python examples/serve_optimized_cnn.py [--requests 32]
+      [--batch 8] [--sweep]
 """
 import argparse
 import time
@@ -14,30 +21,34 @@ import numpy as np
 
 from repro.core.perfmodel import fit_perf_model
 from repro.core.selection import ModelProvider, select
-from repro.models.cnn_zoo import CNNSpec, ConvLayer
-from repro.primitives.executor import execute, make_weights
+from repro.models import cnn_zoo
+from repro.models.cnn_zoo import ConvLayer
+from repro.primitives.executor import make_weights
+from repro.primitives.plan import compile_plan
 from repro.profiler import host
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="number of request batches per measurement")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="images per request batch (the batching knob)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="also sweep batch sizes 1/4/16 on the optimised net")
     args = ap.parse_args()
 
-    spec = CNNSpec("edge-cnn", [
-        ConvLayer("c1", 16, 3, 32, 1, 3), ConvLayer("c2", 32, 16, 30, 1, 3),
-        ConvLayer("c3", 32, 32, 28, 2, 3), ConvLayer("c4", 64, 32, 13, 1, 1),
-        ConvLayer("c5", 64, 64, 13, 1, 3),
-    ], [(0, 1), (1, 2), (2, 3), (3, 4)])
+    spec = cnn_zoo.get("edge_cnn")
+    convs = [(i, n) for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)]
 
     prims = ["im2col-copy-ab-ki", "im2col-scan-ab-ki", "kn2row", "mec-col",
              "winograd-2x2-3x3", "conv-1x1-gemm-ab-ki", "direct-sum2d"]
     print("== profiling primitives on this CPU (the stage the perf model replaces) ==")
     t0 = time.perf_counter()
-    pool = sorted({l.config for l in spec.conv_layers} |
+    pool = sorted({n.config for _, n in convs} |
                   {(32, 16, 28, 1, 3), (64, 32, 14, 1, 3), (16, 8, 30, 1, 3)})
     ds = host.profile_primitive_dataset(pool, primitives=prims, repeats=5)
-    dlt = host.profile_dlt_dataset([(16, 30), (32, 28), (32, 13), (64, 13)], repeats=5)
+    dlt = host.profile_dlt_dataset([(16, 30), (32, 28), (32, 26), (64, 13)], repeats=5)
     print(f"   profiled {ds.n} configs in {time.perf_counter()-t0:.1f}s")
 
     m = fit_perf_model("nn2", ds.feats, ds.times, ds.feats[:2], ds.times[:2],
@@ -45,29 +56,42 @@ def main():
     md = fit_perf_model("lin", dlt.feats, dlt.times, dlt.feats[:1], dlt.times[:1],
                         columns=dlt.columns)
     sel = select(spec, ModelProvider(m, md))
-    print("   assignment:", [sel.assignment[i] for i in range(len(spec.conv_layers))])
+    print("   assignment:", [sel.assignment[i] for i, _ in convs])
 
     weights = make_weights(spec)
-    baseline = {i: "direct-sum2d" for i in range(len(spec.conv_layers))}
+    baseline = {i: ("conv-1x1-gemm-ab-ki" if n.f == 1 else "direct-sum2d")
+                for i, n in convs}
+    baseline.update({i: "chw" for i, n in enumerate(spec.nodes)
+                     if not isinstance(n, ConvLayer)})
     rng = np.random.default_rng(0)
+    c, im = spec.nodes[0].c, spec.nodes[0].im
 
-    def serve(assignment, tag):
-        # warm up (jit compile per layer), then serve the request batch
-        execute(spec, assignment, weights)
+    def serve(assignment, tag, batch):
+        # compile the whole-graph batched plan (cached by batch shape), warm
+        # it once, then serve the request stream one dispatch per batch
+        plan = compile_plan(spec, assignment, (batch, c, im, im))
+        sink = plan.sinks[-1]
+        x = jnp.asarray(rng.standard_normal((batch, c, im, im)), jnp.float32)
+        jax.block_until_ready(plan(x, weights)[sink])
         t0 = time.perf_counter()
         for _ in range(args.requests):
-            x = jnp.asarray(rng.standard_normal((3, 32, 32)), jnp.float32)
-            rep = execute(spec, assignment, weights, x=x)
-            jax.block_until_ready(rep.outputs[len(spec.nodes) - 1])
+            x = jnp.asarray(rng.standard_normal((batch, c, im, im)), jnp.float32)
+            jax.block_until_ready(plan(x, weights)[sink])
         dt = time.perf_counter() - t0
-        print(f"   {tag:10s}: {args.requests/dt:7.1f} req/s "
-              f"({dt/args.requests*1e3:.2f} ms/req)")
+        imgs = args.requests * batch
+        print(f"   {tag:10s}: batch {batch:3d} | {imgs/dt:8.1f} img/s "
+              f"({dt/args.requests*1e3:.2f} ms/request)")
         return dt
 
-    print(f"== serving {args.requests} requests ==")
-    t_base = serve(baseline, "baseline")
-    t_opt = serve(sel.assignment, "optimised")
+    print(f"== serving {args.requests} request batches of {args.batch} ==")
+    t_base = serve(baseline, "baseline", args.batch)
+    t_opt = serve(sel.assignment, "optimised", args.batch)
     print(f"   speedup: {t_base/t_opt:.2f}x")
+
+    if args.sweep:
+        print("== throughput vs batch size (optimised assignment) ==")
+        for b in (1, 4, 16):
+            serve(sel.assignment, f"batch={b}", b)
 
 
 if __name__ == "__main__":

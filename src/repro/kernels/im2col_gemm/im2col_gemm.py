@@ -13,6 +13,11 @@ block indexing, valid on real TPU hardware (no ANY-memory-space tricks).
 
 Grid: (K blocks, output rows). Weights arrive pre-flattened (K, C*f*f) in
 (c, a, b) order — identical to the reference im2col lowering.
+
+``conv_im2col_batch`` adds the request batch as an explicit leading grid
+dimension — grid (N, K blocks, output rows), each program building one
+image's row patch block — so a compiled serving plan feeds whole batches
+through one kernel launch.
 """
 from __future__ import annotations
 
@@ -67,3 +72,50 @@ def conv_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, *,
         interpret=interpret,
     )(*([x] * f), wm)
     return out.transpose(1, 0, 2)[:K]
+
+
+def _conv_batch_kernel(*refs, stride: int, f: int, ow: int):
+    x_rows = refs[:f]            # each (1, C, 1, W)
+    w_ref = refs[f]              # (bk, C*f*f)
+    o_ref = refs[f + 1]          # (1, 1, bk, ow)
+    C = x_rows[0].shape[1]
+    cols = []
+    for a in range(f):
+        row = x_rows[a][0, :, 0, :]                       # (C, W)
+        for b in range(f):
+            end = b + (ow - 1) * stride + 1
+            cols.append(jax.lax.slice(row, (0, b), (C, end), (1, stride)))
+    pat = jnp.stack(cols, axis=1).reshape(C * f * f, ow)  # VMEM-resident
+    o_ref[0, 0] = jnp.dot(w_ref[...], pat,
+                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def conv_im2col_batch(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, *,
+                      bk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """x: (N, C, H, W); w: (K, C, f, f) -> (N, K, oh, ow), valid padding.
+    Batch is the leading grid dimension: grid (N, K blocks, output rows)."""
+    N, C, H, W = x.shape
+    K, _, f, _ = w.shape
+    oh = (H - f) // stride + 1
+    ow = (W - f) // stride + 1
+    wm = w.reshape(K, C * f * f)
+    bk = min(bk, K)
+    Kp = -(-K // bk) * bk
+    if Kp != K:                      # partial K tiles are undefined on TPU
+        wm = jnp.pad(wm, ((0, Kp - K), (0, 0)))
+    grid = (N, Kp // bk, oh)
+
+    def row_spec(a):
+        return pl.BlockSpec((1, C, 1, W),
+                            lambda n, kb, i, a=a: (n, 0, i * stride + a, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_conv_batch_kernel, stride=stride, f=f, ow=ow),
+        grid=grid,
+        in_specs=[row_spec(a) for a in range(f)]
+                 + [pl.BlockSpec((bk, C * f * f), lambda n, kb, i: (kb, 0))],
+        out_specs=pl.BlockSpec((1, 1, bk, ow), lambda n, kb, i: (n, i, kb, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, oh, grid[1] * bk, ow), x.dtype),
+        interpret=interpret,
+    )(*([x] * f), wm)
+    return out.transpose(0, 2, 1, 3)[:, :K]

@@ -6,7 +6,7 @@ from functools import partial
 import jax
 
 from repro.kernels.common import default_interpret
-from repro.kernels.im2col_gemm.im2col_gemm import conv_im2col
+from repro.kernels.im2col_gemm.im2col_gemm import conv_im2col, conv_im2col_batch
 
 VARIANTS = {"conv-bk64": 64, "conv-bk128": 128, "conv-bk256": 256}
 
@@ -16,3 +16,11 @@ def conv_im2col_op(x, w, stride: int = 1, variant: str = "conv-bk128",
                    interpret: bool | None = None):
     interp = default_interpret() if interpret is None else interpret
     return conv_im2col(x, w, stride, bk=VARIANTS[variant], interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("stride", "variant", "interpret"))
+def conv_im2col_batch_op(x, w, stride: int = 1, variant: str = "conv-bk128",
+                         interpret: bool | None = None):
+    """(N, C, H, W) batch through the fused conv — batch grid dimension."""
+    interp = default_interpret() if interpret is None else interpret
+    return conv_im2col_batch(x, w, stride, bk=VARIANTS[variant], interpret=interp)

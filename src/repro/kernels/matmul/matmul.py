@@ -33,6 +33,50 @@ def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _matmul_batch_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], y_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_batch(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128,
+                 bk: int = 128, bn: int = 128, out_dtype=None,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Batched GEMM x: (B, M, K) @ y: (B, K, N) -> (B, M, N) with the batch
+    as an explicit leading grid dimension (one (M, N, K) tile walk per image;
+    the plan executor's whole-batch GEMM shape). Same edge-tile padding rules
+    as ``matmul``."""
+    B, m, k = x.shape
+    B2, k2, n = y.shape
+    assert (B, k) == (B2, k2), (x.shape, y.shape)
+    out_dtype = out_dtype or x.dtype
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        y = jnp.pad(y, ((0, 0), (0, kp - k), (0, np_ - n)))
+    grid = (B, mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_batch_kernel, n_k=grid[3]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+                  pl.BlockSpec((1, bk, bn), lambda b, i, j, kk: (b, kk, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+    return out[:, :m, :n]
+
+
 def matmul(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128, bk: int = 128,
            bn: int = 128, out_dtype=None, interpret: bool = False) -> jnp.ndarray:
     """x: (M, K) @ y: (K, N) -> (M, N). Shapes need not divide blocks

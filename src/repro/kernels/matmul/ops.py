@@ -11,7 +11,7 @@ from typing import Dict, Tuple
 import jax
 
 from repro.kernels.common import default_interpret
-from repro.kernels.matmul.matmul import matmul
+from repro.kernels.matmul.matmul import matmul, matmul_batch
 
 # (bm, bk, bn) pool: MXU-aligned tilings trading VMEM footprint for reuse.
 VARIANTS: Dict[str, Tuple[int, int, int]] = {
@@ -31,6 +31,15 @@ def matmul_op(x, y, variant: str = "mm-128x128x128", interpret: bool | None = No
     bm, bk, bn = VARIANTS[variant]
     interp = default_interpret() if interpret is None else interpret
     return matmul(x, y, bm=bm, bk=bk, bn=bn, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("variant", "interpret"))
+def matmul_batch_op(x, y, variant: str = "mm-128x128x128",
+                    interpret: bool | None = None):
+    """(B, M, K) @ (B, K, N) with the batch as an explicit grid dimension."""
+    bm, bk, bn = VARIANTS[variant]
+    interp = default_interpret() if interpret is None else interpret
+    return matmul_batch(x, y, bm=bm, bk=bk, bn=bn, interpret=interp)
 
 
 def vmem_bytes(variant: str, dtype_bytes: int = 2) -> int:

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
-from repro.kernels.winograd.winograd import winograd_point_gemm
+from repro.kernels.winograd.winograd import (winograd_point_gemm,
+                                             winograd_point_gemm_batch)
 from repro.primitives.conv import _WINO_SETS
 
 VARIANTS = {"wino-128x128": (128, 128), "wino-256x128": (256, 128),
@@ -47,3 +48,39 @@ def winograd_conv_op(x: jnp.ndarray, w: jnp.ndarray,
     Y = jnp.einsum("ap,pqkij,qm->kiajm", AT, M, AT.T)         # (K, th, m, tw, m)
     y = Y.reshape(K, th * m, tw * m)
     return y[:, :oh, :ow].astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("variant", "interpret"))
+def winograd_conv_batch_op(x: jnp.ndarray, w: jnp.ndarray,
+                           variant: str = "wino-128x128",
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """x: (N, C, H, W); w: (K, C, 3, 3) -> (N, K, H-2, W-2). Stride 1.
+    Batched transforms around the batch-grid Pallas point-GEMM: U is
+    transformed once and shared, only V carries the batch."""
+    AT, G, BT = (jnp.asarray(a, jnp.float32) for a in _WINO_SETS[(2, 3)])
+    N, C, H, W = x.shape
+    K = w.shape[0]
+    m, n = 2, 4
+    oh, ow = H - 2, W - 2
+    th, tw = -(-oh // m), -(-ow // m)
+    ph, pw = (th - 1) * m + n, (tw - 1) * m + n
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, ph - H), (0, pw - W)))
+    rows = []
+    for a in range(n):
+        cols = [xp[:, :, a:a + (th - 1) * m + 1:m, b:b + (tw - 1) * m + 1:m]
+                for b in range(n)]
+        rows.append(jnp.stack(cols, -1))
+    tiles = jnp.stack(rows, -2)                               # (N, C, th, tw, n, n)
+    V = jnp.einsum("ap,ncijpq,qb->nabcij", BT, tiles.astype(jnp.float32), BT.T)
+    V = V.reshape(N, n * n, C, th * tw)                       # (N, 16, C, T)
+    U = jnp.einsum("ar,kcrs,sb->abkc", G, w.astype(jnp.float32), G.T)
+    U = U.reshape(n * n, K, C)
+
+    bk, bt = VARIANTS[variant]
+    interp = default_interpret() if interpret is None else interpret
+    M = winograd_point_gemm_batch(U, V.astype(U.dtype), bk=bk, bt=bt,
+                                  interpret=interp)           # (N, 16, K, T)
+    M = M.reshape(N, n, n, K, th, tw)
+    Y = jnp.einsum("ap,npqkij,qm->nkiajm", AT, M, AT.T)       # (N, K, th, m, tw, m)
+    y = Y.reshape(N, K, th * m, tw * m)
+    return y[:, :, :oh, :ow].astype(x.dtype)

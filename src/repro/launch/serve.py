@@ -11,6 +11,8 @@ from __future__ import annotations
 import argparse
 import time
 
+import numpy as np
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -65,8 +67,7 @@ def main() -> None:
     seq = jnp.concatenate(out, 1)
     print(f"[serve] decoded {N-1} x {B} tokens in {dt*1e3:.0f} ms "
           f"({B*(N-1)/dt:.1f} tok/s)")
-    print(f"[serve] sample: {np.asarray(seq[0])[:12].tolist()}"
-          if (np := __import__('numpy')) else "")
+    print(f"[serve] sample: {np.asarray(seq[0])[:12].tolist()}")
 
 
 if __name__ == "__main__":

@@ -257,6 +257,33 @@ def shufflenet_v2() -> CNNSpec:
     return b.build()
 
 
+def edge_cnn() -> CNNSpec:
+    """Small 32x32 edge-class CNN (the serve example's deployment target):
+    two stages of squeeze-style concats and residual adds — every join
+    topology, MobileNet-like depth, at a scale where per-layer dispatch
+    overhead, not FLOPs, dominates the interpreted executor."""
+    b = _Builder("edge_cnn")
+    c1 = b.conv(16, 3, 32, 1, 3)
+    c2 = b.conv(32, 16, 30, 1, 3, prev=c1)
+    a1 = b.conv(16, 32, 28, 1, 1, prev=c2, tag="exp1")
+    a3 = b.conv(16, 32, 28, 1, 3, prev=c2, tag="exp3")
+    cat = b.join("concat", 32, 26, [a1, a3])
+    d1 = b.conv(32, 32, 26, 1, 3, prev=cat)
+    d2 = b.conv(32, 32, 24, 1, 3, prev=d1)
+    sc = b.conv(32, 32, 26, 1, 1, prev=cat, tag="down")
+    add = b.join("add", 32, 22, [d2, sc])
+    e1 = b.conv(48, 32, 22, 2, 3, prev=add)
+    e2 = b.conv(48, 48, 10, 1, 3, prev=e1)
+    f1 = b.conv(64, 48, 8, 1, 1, prev=e2, tag="exp1")
+    f3 = b.conv(64, 48, 8, 1, 3, prev=e2, tag="exp3")
+    cat2 = b.join("concat", 128, 6, [f1, f3])
+    g1 = b.conv(64, 128, 6, 1, 3, prev=cat2)
+    sc2 = b.conv(64, 128, 6, 1, 1, prev=cat2, tag="down")
+    add2 = b.join("add", 64, 4, [g1, sc2])
+    b.conv(96, 64, 4, 1, 3, prev=add2, tag="head")
+    return b.build()
+
+
 def inception_v3_pool() -> CNNSpec:
     """Inception-v3 stem + representative mixed-block convs (pool contributor)."""
     b = _Builder("inception_v3")
@@ -296,6 +323,7 @@ def resnet_deep_pool(depth: int) -> CNNSpec:
 
 ZOO = {
     "alexnet": alexnet,
+    "edge_cnn": edge_cnn,
     "vgg11": lambda: vgg(11),
     "vgg13": lambda: vgg(13),
     "vgg16": lambda: vgg(16),
@@ -315,6 +343,13 @@ ZOO = {
 
 # the six networks the paper optimises (§4.3)
 PAPER_SELECTION_NETS = ("alexnet", "vgg11", "vgg19", "googlenet", "resnet18", "resnet34")
+
+# zoo entries whose DAGs are channel-consistent end to end and can be run by
+# the executor (the rest are triplet *pool contributors*: chains of conv
+# shapes whose grouped/concat plumbing is folded away, profile-only)
+EXECUTABLE_NETS = ("alexnet", "edge_cnn", "vgg11", "vgg13", "vgg16", "vgg19",
+                   "resnet18", "resnet34", "resnet50", "googlenet",
+                   "squeezenet", "mobilenet")
 
 
 def get(name: str) -> CNNSpec:

@@ -17,6 +17,13 @@ the paper's Table 6 (SIMD-width `-vec-N` and residual transpose variants —
 CPU-register-level distinctions that JAX/XLA does not expose) exist as
 *simulated-only* registry entries used by the profiler simulators
 (DESIGN.md §2.3).
+
+Every runnable implementation is rank-polymorphic over leading batch axes:
+the layout describes the trailing three axes, so a (n, c, im, im) batch goes
+through the same code path with the GEMM stages broadcasting over ``n`` —
+the batched entry point the plan compiler (DESIGN.md §6) lowers to. Use
+``batch_impl``/``run_primitive_batch`` for the batched API (vmap fallback
+for any future impl whose traits set ``batch=False``).
 """
 from __future__ import annotations
 
@@ -51,30 +58,39 @@ def out_size(im: int, f: int, s: int) -> int:
 
 # ---------------------------------------------------------------------------
 # Lowerings
+#
+# All lowerings operate on the trailing image axes; any leading axes are
+# batch and broadcast straight through the GEMM stages.
 # ---------------------------------------------------------------------------
 
+def _t(x: jnp.ndarray, perm: Tuple[int, ...]) -> jnp.ndarray:
+    """Transpose the trailing ``len(perm)`` axes, leading (batch) untouched."""
+    lead = x.ndim - len(perm)
+    return jnp.transpose(x, tuple(range(lead)) + tuple(lead + p for p in perm))
+
+
 def _patches_copy_chw(x: jnp.ndarray, f: int, s: int) -> jnp.ndarray:
-    """Slice-stacked ("copy") lowering: (c*f*f, oh*ow), (c, a, b) ordering."""
-    c, h, w = x.shape
+    """Slice-stacked ("copy") lowering: (..., c*f*f, oh*ow), (c, a, b) order."""
+    c, h, w = x.shape[-3:]
     oh, ow = out_size(h, f, s), out_size(w, f, s)
     cols = []
     for a in range(f):
         for b in range(f):
-            cols.append(x[:, a:a + (oh - 1) * s + 1:s, b:b + (ow - 1) * s + 1:s])
-    pat = jnp.stack(cols, axis=1)            # (c, f*f, oh, ow)
-    return pat.reshape(c * f * f, oh * ow)
+            cols.append(x[..., a:a + (oh - 1) * s + 1:s, b:b + (ow - 1) * s + 1:s])
+    pat = jnp.stack(cols, axis=-3)           # (..., c, f*f, oh, ow)
+    return pat.reshape(*x.shape[:-3], c * f * f, oh * ow)
 
 
 def _patches_scan_chw(x: jnp.ndarray, f: int, s: int) -> jnp.ndarray:
     """Gather-indexed ("scan") lowering — same result, different traversal."""
-    c, h, w = x.shape
+    c, h, w = x.shape[-3:]
     oh, ow = out_size(h, f, s), out_size(w, f, s)
     ih = (jnp.arange(oh) * s)[:, None] + jnp.arange(f)[None, :]   # (oh, f)
     iw = (jnp.arange(ow) * s)[:, None] + jnp.arange(f)[None, :]   # (ow, f)
-    # gather -> (c, oh, f, ow, f)
-    pat = x[:, ih][:, :, :, iw]
-    pat = jnp.transpose(pat, (0, 2, 4, 1, 3))  # (c, f, f, oh, ow)
-    return pat.reshape(c * f * f, oh * ow)
+    # gather -> (..., c, oh, f, ow, f)
+    pat = jnp.take(jnp.take(x, ih, axis=-2), iw, axis=-1)
+    pat = _t(pat, (0, 2, 4, 1, 3))           # (..., c, f, f, oh, ow)
+    return pat.reshape(*x.shape[:-3], c * f * f, oh * ow)
 
 
 def _w_mat(w: jnp.ndarray) -> jnp.ndarray:
@@ -90,21 +106,22 @@ def _w_mat_rows(w: jnp.ndarray) -> jnp.ndarray:
 
 
 def _patches_rows_hwc(x: jnp.ndarray, f: int, s: int, scan: bool) -> jnp.ndarray:
-    """Row lowering from an hwc image: (oh*ow, f*f*c), (a, b, c) ordering."""
-    h, w, c = x.shape
+    """Row lowering from an hwc image: (..., oh*ow, f*f*c), (a, b, c) order."""
+    h, w, c = x.shape[-3:]
     oh, ow = out_size(h, f, s), out_size(w, f, s)
     if scan:
         ih = (jnp.arange(oh) * s)[:, None] + jnp.arange(f)[None, :]
         iw = (jnp.arange(ow) * s)[:, None] + jnp.arange(f)[None, :]
-        pat = x[ih][:, :, iw]                       # (oh, f, ow, f, c)
-        pat = jnp.transpose(pat, (0, 2, 1, 3, 4))   # (oh, ow, f, f, c)
+        # gather -> (..., oh, f, ow, f, c)
+        pat = jnp.take(jnp.take(x, ih, axis=-3), iw, axis=-2)
+        pat = _t(pat, (0, 2, 1, 3, 4))              # (..., oh, ow, f, f, c)
     else:
         rows = []
         for a in range(f):
             for b in range(f):
-                rows.append(x[a:a + (oh - 1) * s + 1:s, b:b + (ow - 1) * s + 1:s, :])
-        pat = jnp.stack(rows, axis=2)               # (oh, ow, f*f, c)
-    return pat.reshape(oh * ow, f * f * x.shape[2])
+                rows.append(x[..., a:a + (oh - 1) * s + 1:s, b:b + (ow - 1) * s + 1:s, :])
+        pat = jnp.stack(rows, axis=-2)              # (..., oh, ow, f*f, c)
+    return pat.reshape(*x.shape[:-3], oh * ow, f * f * c)
 
 
 # ---------------------------------------------------------------------------
@@ -112,29 +129,31 @@ def _patches_rows_hwc(x: jnp.ndarray, f: int, s: int, scan: bool) -> jnp.ndarray
 # ---------------------------------------------------------------------------
 
 def im2col(x: jnp.ndarray, w: jnp.ndarray, s: int, *, scan: bool, out_ik: bool) -> jnp.ndarray:
-    c, h, wd = x.shape
+    c, h, wd = x.shape[-3:]
     f = w.shape[2]
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
     pat = (_patches_scan_chw if scan else _patches_copy_chw)(x, f, s)
     wm = _w_mat(w)
+    lead = x.shape[:-3]
     if out_ik:
-        y = pat.T @ wm.T                   # (P, k)  "atb-ik" orientation
-        return y.reshape(oh, ow, w.shape[0])       # hwc
-    y = wm @ pat                           # (k, P)  "ab-ki" orientation
-    return y.reshape(w.shape[0], oh, ow)           # chw
+        y = jnp.swapaxes(pat, -1, -2) @ wm.T       # (..., P, k)  "atb-ik"
+        return y.reshape(*lead, oh, ow, w.shape[0])        # hwc
+    y = wm @ pat                                   # (..., k, P)  "ab-ki"
+    return y.reshape(*lead, w.shape[0], oh, ow)            # chw
 
 
 def im2row(x: jnp.ndarray, w: jnp.ndarray, s: int, *, scan: bool, out_ik: bool) -> jnp.ndarray:
-    h, wd, c = x.shape
+    h, wd, c = x.shape[-3:]
     f = w.shape[2]
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
     pat = _patches_rows_hwc(x, f, s, scan)
     wm = _w_mat_rows(w)
+    lead = x.shape[:-3]
     if out_ik:
-        y = pat @ wm.T                     # (P, k)
-        return y.reshape(oh, ow, w.shape[0])       # hwc
-    y = wm @ pat.T                         # (k, P)
-    return y.reshape(w.shape[0], oh, ow)           # chw
+        y = pat @ wm.T                             # (..., P, k)
+        return y.reshape(*lead, oh, ow, w.shape[0])        # hwc
+    y = wm @ jnp.swapaxes(pat, -1, -2)             # (..., k, P)
+    return y.reshape(*lead, w.shape[0], oh, ow)            # chw
 
 
 # ---------------------------------------------------------------------------
@@ -144,34 +163,37 @@ def im2row(x: jnp.ndarray, w: jnp.ndarray, s: int, *, scan: bool, out_ik: bool) 
 def kn2row(x: jnp.ndarray, w: jnp.ndarray, s: int, *, stacked: bool = False) -> jnp.ndarray:
     """chw -> chw. One (k,c)@(c,h*w) GEMM per kernel offset on the *full*
     image, then shifted accumulation of the valid region."""
-    c, h, wd = x.shape
+    c, h, wd = x.shape[-3:]
     k, _, f, _ = w.shape
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
-    xf = x.reshape(c, h * wd)
+    lead = x.shape[:-3]
+    xf = x.reshape(*lead, c, h * wd)
     if stacked:  # "-as" variant: all offsets at once, one reduction
         g = jnp.transpose(w, (2, 3, 0, 1)).reshape(f * f * k, c)
-        full = (g @ xf).reshape(f, f, k, h, wd)
-        parts = [full[a, b, :, a:a + oh:1, b:b + ow:1] for a in range(f) for b in range(f)]
+        full = (g @ xf).reshape(*lead, f, f, k, h, wd)
+        parts = [full[..., a, b, :, a:a + oh:1, b:b + ow:1]
+                 for a in range(f) for b in range(f)]
         return jnp.sum(jnp.stack(parts), axis=0)
-    acc = jnp.zeros((k, oh, ow), x.dtype)
+    acc = jnp.zeros((*lead, k, oh, ow), x.dtype)
     for a in range(f):
         for b in range(f):
-            full = (w[:, :, a, b] @ xf).reshape(k, h, wd)
-            acc = acc + full[:, a:a + oh, b:b + ow]
+            full = (w[:, :, a, b] @ xf).reshape(*lead, k, h, wd)
+            acc = acc + full[..., a:a + oh, b:b + ow]
     return acc
 
 
 def kn2col(x: jnp.ndarray, w: jnp.ndarray, s: int) -> jnp.ndarray:
     """hwc -> hwc. Image-major GEMM per offset."""
-    h, wd, c = x.shape
+    h, wd, c = x.shape[-3:]
     k, _, f, _ = w.shape
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
-    xf = x.reshape(h * wd, c)
-    acc = jnp.zeros((oh, ow, k), x.dtype)
+    lead = x.shape[:-3]
+    xf = x.reshape(*lead, h * wd, c)
+    acc = jnp.zeros((*lead, oh, ow, k), x.dtype)
     for a in range(f):
         for b in range(f):
-            full = (xf @ w[:, :, a, b].T).reshape(h, wd, k)
-            acc = acc + full[a:a + oh, b:b + ow, :]
+            full = (xf @ w[:, :, a, b].T).reshape(*lead, h, wd, k)
+            acc = acc + full[..., a:a + oh, b:b + ow, :]
     return acc
 
 
@@ -239,27 +261,28 @@ def winograd2d(x: jnp.ndarray, w: jnp.ndarray, s: int, *, m: int, r: int) -> jnp
     """chw -> chw, F(mxm, rxr), stride 1."""
     assert s == 1
     AT, G, BT = (jnp.asarray(a, x.dtype) for a in _WINO_SETS[(m, r)])
-    c, h, wd = x.shape
+    c, h, wd = x.shape[-3:]
     k, _, f, _ = w.shape
     n = m + r - 1
     oh, ow = h - r + 1, wd - r + 1
     th, tw = -(-oh // m), -(-ow // m)
     ph, pw = (th - 1) * m + n, (tw - 1) * m + n
-    xp = jnp.pad(x, ((0, 0), (0, ph - h), (0, pw - wd)))
+    lead = x.shape[:-3]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, ph - h), (0, pw - wd)])
     # overlapping n x n tiles at stride m: slice-stack over in-tile offsets
     rows = []
     for a in range(n):
         cols = []
         for b in range(n):
-            cols.append(xp[:, a:a + (th - 1) * m + 1:m, b:b + (tw - 1) * m + 1:m])
+            cols.append(xp[..., a:a + (th - 1) * m + 1:m, b:b + (tw - 1) * m + 1:m])
         rows.append(jnp.stack(cols, -1))
-    tiles = jnp.stack(rows, -2)                       # (c, th, tw, n, n)
-    V = jnp.einsum("an,cijnb,bm->cijam", BT, tiles, BT.T)
+    tiles = jnp.stack(rows, -2)                       # (..., c, th, tw, n, n)
+    V = jnp.einsum("an,...cijnb,bm->...cijam", BT, tiles, BT.T)
     U = jnp.einsum("an,kcnb,bm->kcam", G, w, G.T)      # (k, c, n, n)
-    M = jnp.einsum("kcab,cijab->kijab", U, V)          # (k, th, tw, n, n)
-    Y = jnp.einsum("an,kijnb,bm->kijam", AT, M, AT.T)  # (k, th, tw, m, m)
-    y = jnp.transpose(Y, (0, 1, 3, 2, 4)).reshape(k, th * m, tw * m)
-    return y[:, :oh, :ow]
+    M = jnp.einsum("kcab,...cijab->...kijab", U, V)    # (..., k, th, tw, n, n)
+    Y = jnp.einsum("an,...kijnb,bm->...kijam", AT, M, AT.T)
+    y = _t(Y, (0, 1, 3, 2, 4)).reshape(*lead, k, th * m, tw * m)
+    return y[..., :oh, :ow]
 
 
 def winograd1d(x: jnp.ndarray, w: jnp.ndarray, s: int, *, m: int, r: int) -> jnp.ndarray:
@@ -267,22 +290,23 @@ def winograd1d(x: jnp.ndarray, w: jnp.ndarray, s: int, *, m: int, r: int) -> jnp
     (paper's 'winograd-2-3' / 'winograd-2-5' style)."""
     assert s == 1
     AT, G, BT = (jnp.asarray(a, x.dtype) for a in _WINO_SETS[(m, r)])
-    c, h, wd = x.shape
+    c, h, wd = x.shape[-3:]
     k, _, f, _ = w.shape
     n = m + r - 1
     oh, ow = h - r + 1, wd - r + 1
     tw = -(-ow // m)
     pw = (tw - 1) * m + n
-    acc = jnp.zeros((k, oh, ow), x.dtype)
+    lead = x.shape[:-3]
+    acc = jnp.zeros((*lead, k, oh, ow), x.dtype)
     for a in range(r):  # kernel rows handled directly
-        xrow = x[:, a:a + oh, :]                       # (c, oh, wd)
-        xrow = jnp.pad(xrow, ((0, 0), (0, 0), (0, pw - wd)))
-        segs = jnp.stack([xrow[:, :, b:b + (tw - 1) * m + 1:m] for b in range(n)], -1)
-        V = segs @ BT.T                                # (c, oh, tw, n)
+        xrow = x[..., a:a + oh, :]                     # (..., c, oh, wd)
+        xrow = jnp.pad(xrow, [(0, 0)] * (x.ndim - 1) + [(0, pw - wd)])
+        segs = jnp.stack([xrow[..., b:b + (tw - 1) * m + 1:m] for b in range(n)], -1)
+        V = segs @ BT.T                                # (..., c, oh, tw, n)
         U = jnp.einsum("nr,kcr->kcn", G, w[:, :, a, :])
-        M = jnp.einsum("kcn,citn->kitn", U, V)
-        Y = M @ AT.T                                   # (k, oh, tw, m)
-        acc = acc + Y.reshape(k, oh, tw * m)[:, :, :ow]
+        M = jnp.einsum("kcn,...citn->...kitn", U, V)
+        Y = M @ AT.T                                   # (..., k, oh, tw, m)
+        acc = acc + Y.reshape(*lead, k, oh, tw * m)[..., :ow]
     return acc
 
 
@@ -293,11 +317,12 @@ def winograd1d(x: jnp.ndarray, w: jnp.ndarray, s: int, *, m: int, r: int) -> jnp
 def conv1x1(x: jnp.ndarray, w: jnp.ndarray, s: int, *, ik: bool) -> jnp.ndarray:
     g = w[:, :, 0, 0]                                  # (k, c)
     if ik:   # hwc -> hwc
-        xs = x[::s, ::s, :]
+        xs = x[..., ::s, ::s, :]
         return xs @ g.T
-    xs = x[:, ::s, ::s]                                # chw -> chw
-    c = xs.shape[0]
-    return (g @ xs.reshape(c, -1)).reshape(g.shape[0], xs.shape[1], xs.shape[2])
+    xs = x[..., ::s, ::s]                              # chw -> chw
+    c, oh, ow = xs.shape[-3:]
+    y = g @ xs.reshape(*xs.shape[:-2], oh * ow)
+    return y.reshape(*xs.shape[:-3], g.shape[0], oh, ow)
 
 
 # ---------------------------------------------------------------------------
@@ -307,28 +332,28 @@ def conv1x1(x: jnp.ndarray, w: jnp.ndarray, s: int, *, ik: bool) -> jnp.ndarray:
 def mec_col(x: jnp.ndarray, w: jnp.ndarray, s: int) -> jnp.ndarray:
     """chw -> chw. Lower along width only (L: ow strips of f columns), then
     f partitioned small GEMMs along the height."""
-    c, h, wd = x.shape
+    c, h, wd = x.shape[-3:]
     k, _, f, _ = w.shape
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
-    strips = jnp.stack([x[:, :, j * s:j * s + f] for j in range(ow)], 0)  # (ow, c, h, f)
+    strips = jnp.stack([x[..., j * s:j * s + f] for j in range(ow)], -4)  # (..., ow, c, h, f)
     parts = []
     for a in range(f):
-        blk = strips[:, :, a:a + (oh - 1) * s + 1:s, :]   # (ow, c, oh, f)
-        parts.append(jnp.einsum("jcib,kcb->kij", blk, w[:, :, a, :]))
-    return jnp.sum(jnp.stack(parts), axis=0)              # (k, oh, ow)
+        blk = strips[..., a:a + (oh - 1) * s + 1:s, :]    # (..., ow, c, oh, f)
+        parts.append(jnp.einsum("...jcib,kcb->...kij", blk, w[:, :, a, :]))
+    return jnp.sum(jnp.stack(parts), axis=0)              # (..., k, oh, ow)
 
 
 def mec_row(x: jnp.ndarray, w: jnp.ndarray, s: int) -> jnp.ndarray:
     """hwc -> hwc. Lower along height; partitioned GEMMs along width."""
-    h, wd, c = x.shape
+    h, wd, c = x.shape[-3:]
     k, _, f, _ = w.shape
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
-    strips = jnp.stack([x[i * s:i * s + f, :, :] for i in range(oh)], 0)   # (oh, f, wd, c)
+    strips = jnp.stack([x[..., i * s:i * s + f, :, :] for i in range(oh)], -4)  # (..., oh, f, wd, c)
     parts = []
     for b in range(f):
-        blk = strips[:, :, b:b + (ow - 1) * s + 1:s, :]    # (oh, f, ow, c)
-        parts.append(jnp.einsum("iajc,kca->ijk", blk, w[:, :, :, b]))
-    return jnp.sum(jnp.stack(parts), axis=0)               # (oh, ow, k)
+        blk = strips[..., b:b + (ow - 1) * s + 1:s, :]     # (..., oh, f, ow, c)
+        parts.append(jnp.einsum("...iajc,kca->...ijk", blk, w[:, :, :, b]))
+    return jnp.sum(jnp.stack(parts), axis=0)               # (..., oh, ow, k)
 
 
 # ---------------------------------------------------------------------------
@@ -338,14 +363,14 @@ def mec_row(x: jnp.ndarray, w: jnp.ndarray, s: int) -> jnp.ndarray:
 def direct_sum2d(x: jnp.ndarray, w: jnp.ndarray, s: int) -> jnp.ndarray:
     """chw -> chw. Offset-sliced multiply-accumulate without a GEMM
     lowering — the 'six nested loops' structure, vectorised over pixels."""
-    c, h, wd = x.shape
+    c, h, wd = x.shape[-3:]
     k, _, f, _ = w.shape
     oh, ow = out_size(h, f, s), out_size(wd, f, s)
-    acc = jnp.zeros((k, oh, ow), x.dtype)
+    acc = jnp.zeros((*x.shape[:-3], k, oh, ow), x.dtype)
     for a in range(f):
         for b in range(f):
-            sl = x[:, a:a + (oh - 1) * s + 1:s, b:b + (ow - 1) * s + 1:s]
-            acc = acc + jnp.einsum("cij,kc->kij", sl, w[:, :, a, b])
+            sl = x[..., a:a + (oh - 1) * s + 1:s, b:b + (ow - 1) * s + 1:s]
+            acc = acc + jnp.einsum("...cij,kc->...kij", sl, w[:, :, a, b])
     return acc
 
 
@@ -531,3 +556,38 @@ def run_primitive(name: str, x_chw: jnp.ndarray, w: jnp.ndarray, stride: int) ->
     x = L.from_chw(x_chw, p.in_layout)
     y = p.impl(x, w, stride)
     return L.to_chw(y, p.out_layout)
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points (plan compiler, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def batch_impl(prim: Primitive) -> Callable:
+    """Batched callable ``(x (n, *in_layout), w, stride) -> (n, *out_layout)``.
+
+    Every built-in runnable impl is rank-polymorphic over leading batch axes,
+    so the single-image impl *is* the batched impl; a primitive whose traits
+    set ``batch=False`` (e.g. an impl with hard-coded rank-3 indexing) falls
+    back to ``jax.vmap`` over the single-image call.
+    """
+    if prim.impl is None:
+        raise ValueError(f"{prim.name} is a simulated-only primitive")
+    if prim.traits.get("batch", True):
+        return prim.impl
+    return jax.vmap(prim.impl, in_axes=(0, None, None))
+
+
+def run_primitive_batch(name: str, x_chw: jnp.ndarray, w: jnp.ndarray,
+                        stride: int) -> jnp.ndarray:
+    """Batched ``run_primitive``: (n, c, im, im) chw in, (n, k, oh, ow) out."""
+    p = REGISTRY[name]
+    fn = batch_impl(p)
+    y = fn(L.from_chw(x_chw, p.in_layout), w, stride)
+    return L.to_chw(y, p.out_layout)
+
+
+def reference_conv_batch(x_chw: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Batched oracle: XLA's native convolution, NCHW batch."""
+    return jax.lax.conv_general_dilated(
+        x_chw, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))

@@ -2,11 +2,21 @@
 (paper Fig 2 step iv). Supports chains and DAGs with concat/add joins;
 inserts the data-layout transformations the assignment implies and can time
 each component — the real-hardware end of the pipeline.
+
+Two paths share this entry point:
+
+* **compiled** (default for ``measure=False``): the whole assigned DAG is
+  lowered by ``repro.primitives.plan.compile_plan`` into one jitted batched
+  function — a single dispatch per call instead of ~2xN Python-level ones;
+* **interpreted**: per-node jitted callables with explicit DLT dispatches —
+  the per-component *measurement* path (``measure=True``), and the oracle
+  the compiled plan is tested against.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -16,51 +26,42 @@ import numpy as np
 from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
 from repro.primitives.conv import REGISTRY
 from repro.primitives import layouts as L
+from repro.primitives import plan as P
 
-_C_AXIS = {"chw": 0, "hcw": 1, "hwc": 2}
-_SPATIAL_AXES = {"chw": (1, 2), "hcw": (0, 2), "hwc": (0, 1)}
 
 # Jitted primitive/DLT callables cached across ``execute`` calls, keyed by
 # (primitive, input shape, stride) — repeated serving traffic over the same
-# network reuses compiled code instead of re-tracing every call.
-_JIT_CACHE: Dict[Tuple, Callable] = {}
+# network reuses compiled code instead of re-tracing every call. LRU-bounded
+# so long-running multi-network serving cannot grow it without limit.
+_JIT_CACHE: "OrderedDict[Tuple, Callable]" = OrderedDict()
+_JIT_CACHE_CAP = 256
 
 
 def clear_jit_cache() -> None:
     _JIT_CACHE.clear()
 
 
-def _cached_primitive(prim, x: jnp.ndarray, w: jnp.ndarray, stride: int) -> Callable:
-    key = ("prim", prim.name, x.shape, str(x.dtype), w.shape, stride)
+def _cached(key: Tuple, make: Callable[[], Callable]) -> Callable:
     fn = _JIT_CACHE.get(key)
     if fn is None:
-        impl = prim.impl
-        fn = jax.jit(lambda a, b: impl(a, b, stride))
+        fn = make()
         _JIT_CACHE[key] = fn
+    else:
+        _JIT_CACHE.move_to_end(key)
+    while len(_JIT_CACHE) > _JIT_CACHE_CAP:
+        _JIT_CACHE.popitem(last=False)
     return fn
+
+
+def _cached_primitive(prim, x: jnp.ndarray, w: jnp.ndarray, stride: int) -> Callable:
+    key = ("prim", prim.name, x.shape, str(x.dtype), w.shape, stride)
+    impl = prim.impl
+    return _cached(key, lambda: jax.jit(lambda a, b: impl(a, b, stride)))
 
 
 def _cached_dlt(src: str, dst: str, x: jnp.ndarray) -> Callable:
     key = ("dlt", src, dst, x.shape, str(x.dtype))
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
-        fn = jax.jit(lambda a: L.transform(a, src, dst))
-        _JIT_CACHE[key] = fn
-    return fn
-
-
-def _crop_to_common(vals, layout: str):
-    ah, aw = _SPATIAL_AXES[layout]
-    h = min(v.shape[ah] for v in vals)
-    w = min(v.shape[aw] for v in vals)
-    out = []
-    for v in vals:
-        sl = [slice(None)] * 3
-        oh, ow = (v.shape[ah] - h) // 2, (v.shape[aw] - w) // 2
-        sl[ah] = slice(oh, oh + h)
-        sl[aw] = slice(ow, ow + w)
-        out.append(v[tuple(sl)])
-    return out
+    return _cached(key, lambda: jax.jit(lambda a: L.transform(a, src, dst)))
 
 
 @dataclasses.dataclass
@@ -74,38 +75,6 @@ class ExecutionReport:
         return sum(self.primitive_seconds.values()) + sum(self.dlt_seconds.values())
 
 
-def _consumers(spec: CNNSpec) -> Dict[int, List[int]]:
-    out: Dict[int, List[int]] = {i: [] for i in range(len(spec.nodes))}
-    for u, v in spec.edges:
-        out[u].append(v)
-    return out
-
-
-def _producers(spec: CNNSpec) -> Dict[int, List[int]]:
-    out: Dict[int, List[int]] = {i: [] for i in range(len(spec.nodes))}
-    for u, v in spec.edges:
-        out[v].append(u)
-    return out
-
-
-def _topo_order(spec: CNNSpec) -> List[int]:
-    prods = _producers(spec)
-    indeg = {i: len(p) for i, p in prods.items()}
-    ready = [i for i, d in indeg.items() if d == 0]
-    order = []
-    cons = _consumers(spec)
-    while ready:
-        n = ready.pop()
-        order.append(n)
-        for v in cons[n]:
-            indeg[v] -= 1
-            if indeg[v] == 0:
-                ready.append(v)
-    if len(order) != len(spec.nodes):
-        raise ValueError("cycle in CNN spec")
-    return order
-
-
 def make_weights(spec: CNNSpec, seed: int = 0) -> Dict[int, jnp.ndarray]:
     rng = np.random.default_rng(seed)
     out = {}
@@ -116,25 +85,62 @@ def make_weights(spec: CNNSpec, seed: int = 0) -> Dict[int, jnp.ndarray]:
     return out
 
 
+def source_inputs(spec: CNNSpec, x: Optional[jnp.ndarray] = None) -> Dict[int, jnp.ndarray]:
+    """chw input per source conv node: ``x`` if given, else N(0,1) draws
+    (paper §4.1.1) — in topo order, so both executor paths see identical
+    arrays for the same spec."""
+    rng = np.random.default_rng(1)
+    out: Dict[int, jnp.ndarray] = {}
+    for i in P.source_nodes(spec):
+        node = spec.nodes[i]
+        if x is not None:
+            out[i] = jnp.asarray(x, jnp.float32)
+        else:
+            out[i] = jnp.asarray(rng.standard_normal((node.c, node.im, node.im)),
+                                 jnp.float32)
+    return out
+
+
 def execute(spec: CNNSpec, assignment: Dict[int, str],
             weights: Optional[Dict[int, jnp.ndarray]] = None,
             x: Optional[jnp.ndarray] = None,
-            measure: bool = False, repeats: int = 5) -> ExecutionReport:
+            measure: bool = False, repeats: int = 5,
+            compiled: Optional[bool] = None) -> ExecutionReport:
     """Run the network under ``assignment``. Inputs of source conv nodes are
     drawn from N(0,1) (paper §4.1.1) unless ``x`` is given (chw).
 
     With ``measure=True`` every primitive call and DLT is individually timed
-    (jitted, warmed, median of ``repeats``); otherwise times are zeros and
-    only outputs are produced (correctness path).
+    (jitted, warmed, median of ``repeats``) on the interpreted path;
+    otherwise the call is a thin wrapper over the compiled whole-graph plan
+    (``compiled=False`` forces the interpreted path without timing).
     """
     weights = weights if weights is not None else make_weights(spec)
-    order = _topo_order(spec)
-    prods = _producers(spec)
+    if compiled is None:
+        compiled = not measure
+    if measure or not compiled:
+        return _execute_interpreted(spec, assignment, weights, x, measure, repeats)
+
+    xs = source_inputs(spec, x)
+    plan = P.compile_plan(spec, assignment,
+                          tuple((1,) + v.shape for v in xs.values()),
+                          outputs="all")
+    outs = plan({i: v[None] for i, v in xs.items()}, weights)
+    outputs = {i: o[0] for i, o in outs.items()}
+    prim_secs = {i: 0.0 for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)}
+    return ExecutionReport(outputs, prim_secs, {})
+
+
+def _execute_interpreted(spec: CNNSpec, assignment: Dict[int, str],
+                         weights: Dict[int, jnp.ndarray],
+                         x: Optional[jnp.ndarray],
+                         measure: bool, repeats: int) -> ExecutionReport:
+    order = P.topo_order(spec)
+    prods = P.producers(spec)
+    xs = source_inputs(spec, x)
     tensors: Dict[int, jnp.ndarray] = {}      # node -> output in its layout
     layouts: Dict[int, str] = {}
     prim_secs: Dict[int, float] = {}
     dlt_secs: Dict[Tuple[int, int], float] = {}
-    rng = np.random.default_rng(1)
 
     def timed(jfn, *args) -> Tuple[jnp.ndarray, float]:
         y = jax.block_until_ready(jfn(*args))
@@ -169,9 +175,7 @@ def execute(spec: CNNSpec, assignment: Dict[int, str],
             if prods[i]:
                 (xin,) = fetch_input(i, prim.in_layout)
             else:
-                x0 = (x if x is not None else
-                      jnp.asarray(rng.standard_normal((node.c, node.im, node.im)), jnp.float32))
-                xin = L.from_chw(x0, prim.in_layout)
+                xin = L.from_chw(xs[i], prim.in_layout)
             y, dt = timed(_cached_primitive(prim, xin, weights[i], node.s), xin, weights[i])
             tensors[i], layouts[i] = y, prim.out_layout
             prim_secs[i] = dt
@@ -182,9 +186,9 @@ def execute(spec: CNNSpec, assignment: Dict[int, str],
             # can differ by a few pixels across branch depths; centre-crop to
             # the smallest (real deployments pad — padding does not change
             # the primitive-selection problem, see DESIGN.md §9).
-            vals = _crop_to_common(vals, lay)
+            vals = P.crop_to_common(vals, lay)
             if node.kind == "concat":
-                y = jnp.concatenate(vals, axis=_C_AXIS[lay])
+                y = jnp.concatenate(vals, axis=L.C_AXIS[lay])
             elif node.kind == "add":
                 y = vals[0]
                 for v in vals[1:]:

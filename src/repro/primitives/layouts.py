@@ -10,6 +10,12 @@ activation tensor:
 There are 9 ordered DLT pairs including identity (cost 0). A DLT's cost
 depends only on (c, im) and the pair — exactly the feature set the DLT
 performance model consumes.
+
+All transforms are rank-polymorphic: the layout describes the *last three*
+axes, so a batched (n, c, im, im) tensor — or any stack of images — goes
+through the same API. The plan compiler (repro.primitives.plan) relies on
+this to lower whole-batch DLTs, and on ``perm``/``compose`` to fuse DLT
+chains into a single transpose.
 """
 from __future__ import annotations
 
@@ -21,6 +27,10 @@ import jax.numpy as jnp
 
 LAYOUTS = ("chw", "hcw", "hwc")
 
+# channel / spatial axis positions within the trailing three (image) axes
+C_AXIS = {"chw": 0, "hcw": 1, "hwc": 2}
+SPATIAL_AXES = {"chw": (1, 2), "hcw": (0, 2), "hwc": (0, 1)}
+
 # permutation that maps a chw tensor to the given layout
 _FROM_CHW = {
     "chw": (0, 1, 2),
@@ -29,23 +39,56 @@ _FROM_CHW = {
 }
 
 
-def from_chw(x: jnp.ndarray, layout: str) -> jnp.ndarray:
-    return jnp.transpose(x, _FROM_CHW[layout])
-
-
-def to_chw(x: jnp.ndarray, layout: str) -> jnp.ndarray:
-    perm = _FROM_CHW[layout]
+def _invert(perm: Tuple[int, int, int]) -> Tuple[int, int, int]:
     inv = [0, 0, 0]
     for i, p in enumerate(perm):
         inv[p] = i
-    return jnp.transpose(x, inv)
+    return tuple(inv)
+
+
+def perm(src: str, dst: str) -> Tuple[int, int, int]:
+    """Axis permutation (over the trailing image axes) realising src -> dst."""
+    # chw -> dst applied after src -> chw
+    return compose(_invert(_FROM_CHW[src]), _FROM_CHW[dst])
+
+
+def compose(p: Tuple[int, int, int], q: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Permutation applying ``p`` then ``q`` (both as transpose arguments)."""
+    return tuple(p[a] for a in q)
+
+
+def is_identity(p: Tuple[int, int, int]) -> bool:
+    return tuple(p) == (0, 1, 2)
+
+
+def _full_perm(x: jnp.ndarray, p: Tuple[int, int, int]) -> Tuple[int, ...]:
+    """Extend an image-axis permutation over the leading (batch) axes."""
+    lead = x.ndim - 3
+    if lead < 0:
+        raise ValueError(f"layout transforms need rank >= 3, got {x.shape}")
+    return tuple(range(lead)) + tuple(lead + a for a in p)
+
+
+def apply_perm(x: jnp.ndarray, p: Tuple[int, int, int]) -> jnp.ndarray:
+    """Transpose the trailing image axes by ``p``, batch axes untouched."""
+    if is_identity(p):
+        return x
+    return jnp.transpose(x, _full_perm(x, p))
+
+
+def from_chw(x: jnp.ndarray, layout: str) -> jnp.ndarray:
+    return apply_perm(x, _FROM_CHW[layout])
+
+
+def to_chw(x: jnp.ndarray, layout: str) -> jnp.ndarray:
+    return apply_perm(x, _invert(_FROM_CHW[layout]))
 
 
 def transform(x: jnp.ndarray, src: str, dst: str) -> jnp.ndarray:
-    """Apply the DLT src -> dst."""
+    """Apply the DLT src -> dst (trailing image axes; leading axes = batch)."""
     if src == dst:
         return x
-    return from_chw(to_chw(x, src), dst)
+    return apply_perm(x, perm(src, dst))
 
 
 def dlt_pairs() -> list[Tuple[str, str]]:

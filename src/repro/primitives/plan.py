@@ -1,0 +1,291 @@
+"""Plan compiler: lower an assigned CNN DAG into ONE jitted batched function.
+
+The interpreted executor (repro.primitives.executor) dispatches ~2xN jitted
+callables per image — one per primitive plus one per materialised DLT. The
+paper's end product, though, is an *assignment* whose value is realised at
+inference time; serving wants the assigned network treated as a single
+compiled artifact (cf. Anderson & Gregg's PBQP formulation, and TASO's
+whole-graph substitution view). ``compile_plan`` does that lowering:
+
+* the topo-ordered DAG (convs, DLTs, concat/add joins, centre-crops) becomes
+  one traced function over a leading batch axis, jitted once and cached by
+  ``(spec, assignment, batch_shape)``;
+* adjacent DLT -> primitive pairs are *fused*: a DLT is an axis permutation,
+  so each edge carries a composed permutation that is (a) dropped when it is
+  the identity, (b) inlined into the consumer's traced call otherwise —
+  inside one XLA program the transpose fuses into the consumer's first read
+  and the intermediate layout copy never materialises in HBM;
+* primitives run through their batched entry points
+  (``conv.batch_impl`` — rank-polymorphic impls, vmap fallback).
+
+Lowering rules, fusion criteria and batch semantics: DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn_zoo import CNNSpec, ConvLayer
+from repro.primitives import layouts as L
+from repro.primitives.conv import REGISTRY, Primitive, batch_impl
+
+
+
+# ---------------------------------------------------------------------------
+# Graph utilities (shared with the interpreted executor)
+# ---------------------------------------------------------------------------
+
+def consumers(spec: CNNSpec) -> Dict[int, List[int]]:
+    out: Dict[int, List[int]] = {i: [] for i in range(len(spec.nodes))}
+    for u, v in spec.edges:
+        out[u].append(v)
+    return out
+
+
+def producers(spec: CNNSpec) -> Dict[int, List[int]]:
+    out: Dict[int, List[int]] = {i: [] for i in range(len(spec.nodes))}
+    for u, v in spec.edges:
+        out[v].append(u)
+    return out
+
+
+def topo_order(spec: CNNSpec) -> List[int]:
+    prods = producers(spec)
+    indeg = {i: len(p) for i, p in prods.items()}
+    ready = [i for i, d in indeg.items() if d == 0]
+    order = []
+    cons = consumers(spec)
+    while ready:
+        n = ready.pop()
+        order.append(n)
+        for v in cons[n]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                ready.append(v)
+    if len(order) != len(spec.nodes):
+        raise ValueError("cycle in CNN spec")
+    return order
+
+
+def source_nodes(spec: CNNSpec) -> List[int]:
+    """Producer-less conv nodes, in topo order (the network inputs)."""
+    prods = producers(spec)
+    return [i for i in topo_order(spec)
+            if not prods[i] and isinstance(spec.nodes[i], ConvLayer)]
+
+
+def sink_nodes(spec: CNNSpec) -> List[int]:
+    cons = consumers(spec)
+    return [i for i in range(len(spec.nodes)) if not cons[i]]
+
+
+def crop_to_common(vals: Sequence[jnp.ndarray], layout: str) -> List[jnp.ndarray]:
+    """Centre-crop a list of same-layout tensors to the smallest spatial size
+    (rank-polymorphic: layout describes the trailing three axes)."""
+    ah, aw = L.SPATIAL_AXES[layout]
+    h = min(v.shape[v.ndim - 3 + ah] for v in vals)
+    w = min(v.shape[v.ndim - 3 + aw] for v in vals)
+    out = []
+    for v in vals:
+        lead = v.ndim - 3
+        sl = [slice(None)] * v.ndim
+        oh = (v.shape[lead + ah] - h) // 2
+        ow = (v.shape[lead + aw] - w) // 2
+        sl[lead + ah] = slice(oh, oh + h)
+        sl[lead + aw] = slice(ow, ow + w)
+        out.append(v[tuple(sl)])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowered steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvStep:
+    node: int
+    prim: Primitive
+    stride: int
+    src: Optional[int]                    # None => network input
+    perm: Tuple[int, int, int]            # fused DLT into prim.in_layout
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinStep:
+    node: int
+    kind: str                             # "concat" | "add"
+    layout: str
+    ins: Tuple[Tuple[int, Tuple[int, int, int]], ...]   # (producer, fused perm)
+
+
+PlanStep = Union[ConvStep, JoinStep]
+
+
+def lower(spec: CNNSpec, assignment: Dict[int, str]) -> Tuple[List[PlanStep], Dict[int, str]]:
+    """Lower the assigned DAG to a step list with DLT fusion applied.
+
+    Returns the steps in topo order plus each node's produced layout. Every
+    edge carries at most one axis permutation (identity permutations are
+    eliminated at this stage, non-identity ones are inlined by the emitter).
+    """
+    prods = producers(spec)
+    steps: List[PlanStep] = []
+    layout_of: Dict[int, str] = {}
+    for i in topo_order(spec):
+        node = spec.nodes[i]
+        if isinstance(node, ConvLayer):
+            prim = REGISTRY[assignment[i]]
+            if prim.impl is None:
+                raise ValueError(f"assignment uses simulated-only primitive {prim.name}")
+            ps = prods[i]
+            if len(ps) > 1:
+                raise ValueError(f"conv node {i} has {len(ps)} producers")
+            if ps:
+                pm = L.perm(layout_of[ps[0]], prim.in_layout)
+                steps.append(ConvStep(i, prim, node.s, ps[0], pm))
+            else:
+                pm = L.perm("chw", prim.in_layout)     # inputs arrive chw
+                steps.append(ConvStep(i, prim, node.s, None, pm))
+            layout_of[i] = prim.out_layout
+        else:
+            lay = assignment[i]
+            if lay not in L.LAYOUTS:
+                raise ValueError(f"join node {i} assigned non-layout {lay!r}")
+            ins = tuple((p, L.perm(layout_of[p], lay)) for p in prods[i])
+            steps.append(JoinStep(i, node.kind, lay, ins))
+            layout_of[i] = lay
+    return steps, layout_of
+
+
+def heuristic_assignment(spec: CNNSpec) -> Dict[int, str]:
+    """Deterministic runnable assignment (no profiling): GEMM-lowered convs,
+    pointwise GEMM for 1x1, chw joins — the shape of a typical selection.
+    Shared by the executor benchmark and the plan tests."""
+    asg: Dict[int, str] = {}
+    for i, node in enumerate(spec.nodes):
+        if isinstance(node, ConvLayer):
+            asg[i] = "conv-1x1-gemm-ab-ki" if node.f == 1 else "im2col-copy-ab-ki"
+        else:
+            asg[i] = "chw"
+    return asg
+
+
+def fused_dlt_count(steps: Sequence[PlanStep]) -> Tuple[int, int]:
+    """(eliminated identity DLTs, inlined transposes) across the plan edges."""
+    fused = inlined = 0
+    for st in steps:
+        perms = ([st.perm] if isinstance(st, ConvStep) else [pm for _, pm in st.ins])
+        for pm in perms:
+            if L.is_identity(pm):
+                fused += 1
+            else:
+                inlined += 1
+    return fused, inlined
+
+
+# ---------------------------------------------------------------------------
+# Plan compilation + cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """One jitted function for the whole assigned network.
+
+    ``__call__(x, weights)`` takes a batched chw input (n, c, im, im) — or a
+    ``{source node: array}`` dict for multi-input specs — and returns
+    ``{node: batched output in its native layout}`` for the requested output
+    set. Steady-state serving is a single dispatch per request batch.
+    """
+    spec: CNNSpec
+    assignment: Dict[int, str]
+    steps: List[PlanStep]
+    layouts: Dict[int, str]               # node -> produced layout
+    sources: List[int]
+    sinks: List[int]
+    outputs: str                          # "sinks" | "all"
+    fn: Callable                          # jitted (xs dict, weights) -> outputs
+
+    def __call__(self, x, weights: Dict[int, jnp.ndarray]) -> Dict[int, jnp.ndarray]:
+        xs = self._as_inputs(x)
+        return self.fn(xs, weights)
+
+    def _as_inputs(self, x) -> Dict[int, jnp.ndarray]:
+        if isinstance(x, dict):
+            return {int(k): jnp.asarray(v) for k, v in x.items()}
+        if len(self.sources) != 1:
+            raise ValueError(f"spec has {len(self.sources)} inputs; pass a dict")
+        return {self.sources[0]: jnp.asarray(x)}
+
+
+def _emit(steps: List[PlanStep], want: List[int]) -> Callable:
+    """Build the traced function replaying ``steps`` over a leading batch."""
+    def fn(xs: Dict[int, jnp.ndarray], weights: Dict[int, jnp.ndarray]):
+        tensors: Dict[int, jnp.ndarray] = {}
+        for st in steps:
+            if isinstance(st, ConvStep):
+                v = xs[st.node] if st.src is None else tensors[st.src]
+                v = L.apply_perm(v, st.perm)          # fused DLT (no-op if id)
+                tensors[st.node] = batch_impl(st.prim)(v, weights[st.node], st.stride)
+            else:
+                vals = [L.apply_perm(tensors[p], pm) for p, pm in st.ins]
+                vals = crop_to_common(vals, st.layout)
+                if st.kind == "concat":
+                    axis = -3 + L.C_AXIS[st.layout]
+                    y = jnp.concatenate(vals, axis=axis)
+                elif st.kind == "add":
+                    y = vals[0]
+                    for v in vals[1:]:
+                        y = y + v
+                else:
+                    raise ValueError(st.kind)
+                tensors[st.node] = y
+        return {i: tensors[i] for i in want}
+    return fn
+
+
+def _spec_key(spec: CNNSpec) -> Tuple:
+    return (spec.name, tuple(spec.nodes), tuple(spec.edges))
+
+
+_PLAN_CACHE: "OrderedDict[Tuple, CompiledPlan]" = OrderedDict()
+_PLAN_CACHE_CAP = 64
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def compile_plan(spec: CNNSpec, assignment: Dict[int, str],
+                 batch_shape: Optional[Tuple[int, ...]] = None, *,
+                 outputs: str = "sinks") -> CompiledPlan:
+    """Compile (and cache) the whole-graph batched plan for ``assignment``.
+
+    ``batch_shape`` is the (n, c, im, im) input shape the caller will feed —
+    part of the cache key so steady-state serving of a known shape is a dict
+    lookup followed by one jitted dispatch (``None`` = shape-generic entry;
+    jax.jit re-specialises per concrete shape either way). ``outputs`` picks
+    the returned node set: "sinks" (serving) or "all" (the interpreted
+    executor's report surface).
+    """
+    if outputs not in ("sinks", "all"):
+        raise ValueError(outputs)
+    key = (_spec_key(spec), tuple(sorted(assignment.items())),
+           batch_shape, outputs)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _PLAN_CACHE.move_to_end(key)
+        return plan
+    steps, layout_of = lower(spec, assignment)
+    sinks = sink_nodes(spec)
+    want = sinks if outputs == "sinks" else list(range(len(spec.nodes)))
+    plan = CompiledPlan(spec, dict(assignment), steps, layout_of,
+                        source_nodes(spec), sinks, outputs,
+                        jax.jit(_emit(steps, want)))
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+        _PLAN_CACHE.popitem(last=False)
+    return plan

@@ -1,0 +1,182 @@
+"""Compiled whole-graph plan vs the interpreted executor (DESIGN.md §6):
+DAG equivalence on chain/concat/add topologies (incl. the centre-crop
+branch-mismatch case), batch semantics, DLT fusion, and cache bounds."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import cnn_zoo
+from repro.models.cnn_zoo import CNNSpec, JoinNode
+from repro.primitives import executor, layouts as L
+from repro.primitives.conv import REGISTRY, RUNNABLE, batch_impl, run_primitive
+from repro.primitives.executor import clear_jit_cache, execute, make_weights
+from repro.primitives.plan import (clear_plan_cache, compile_plan,
+                                   fused_dlt_count, heuristic_assignment as
+                                   heuristic, lower)
+
+
+def zoo_prefix(net: str) -> CNNSpec:
+    """Truncate a zoo spec just past its first join node — a real zoo
+    topology at testable cost (builder specs are topo-ordered by index)."""
+    spec = cnn_zoo.get(net)
+    stop = next(i for i, n in enumerate(spec.nodes) if isinstance(n, JoinNode))
+    keep = stop + 1
+    edges = [(u, v) for (u, v) in spec.edges if u < keep and v < keep]
+    return CNNSpec(f"{net}[:{keep}]", spec.nodes[:keep], edges)
+
+
+def _assert_all_nodes_close(spec, asg, weights, x=None, rtol=2e-3, atol=2e-3):
+    ri = execute(spec, asg, weights, x=x, compiled=False)
+    rc = execute(spec, asg, weights, x=x)
+    assert set(rc.outputs) == set(ri.outputs)
+    for i in ri.outputs:
+        np.testing.assert_allclose(np.asarray(rc.outputs[i]),
+                                   np.asarray(ri.outputs[i]),
+                                   rtol=rtol, atol=atol, err_msg=f"node {i}")
+
+
+def test_plan_matches_interpreted_chain(rng):
+    """alexnet (zoo chain) under a mixed assignment, reduced input size."""
+    spec = cnn_zoo.get("alexnet")
+    asg = {0: "im2col-copy-ab-ki", 1: "mec-col", 2: "winograd-2x2-3x3",
+           3: "kn2row", 4: "direct-sum2d"}
+    w = make_weights(spec)
+    x = jnp.asarray(rng.standard_normal((3, 64, 64)), jnp.float32) * 0.1
+    _assert_all_nodes_close(spec, asg, w, x=x)
+
+
+def test_plan_matches_interpreted_concat_crop(rng):
+    """squeezenet (zoo concat DAG): 1x1/3x3 fire branches shrink by
+    different amounts, exercising the centre-crop path at every join."""
+    spec = cnn_zoo.get("squeezenet")
+    asg = heuristic(spec)
+    w = make_weights(spec)
+    x = jnp.asarray(rng.standard_normal((3, 96, 96)), jnp.float32) * 0.1
+    _assert_all_nodes_close(spec, asg, w, x=x)
+
+
+def test_plan_matches_interpreted_add(rng):
+    """resnet18 prefix (zoo residual-add incl. downsample shortcut)."""
+    spec = zoo_prefix("resnet18")
+    assert any(isinstance(n, JoinNode) and n.kind == "add" for n in spec.nodes)
+    asg = heuristic(spec)
+    w = make_weights(spec)
+    x = jnp.asarray(rng.standard_normal((3, 48, 48)), jnp.float32) * 0.1
+    _assert_all_nodes_close(spec, asg, w, x=x)
+
+
+def test_plan_matches_interpreted_mixed_layouts(rng):
+    """edge_cnn with hwc-output primitives forcing non-identity fused DLTs
+    on concat, add, and conv edges."""
+    spec = cnn_zoo.get("edge_cnn")
+    asg = heuristic(spec)
+    # hwc producers into chw joins and chw consumers
+    asg[2] = "conv-1x1-gemm-atb-ik"       # exp1: hwc out
+    asg[3] = "im2col-copy-atb-ik"         # exp3: hwc out
+    asg[5] = "im2row-copy-ab-ik"          # hwc in, hwc out
+    asg[4] = "hwc"                        # concat join in hwc
+    w = make_weights(spec)
+    steps, _ = lower(spec, asg)
+    eliminated, inlined = fused_dlt_count(steps)
+    assert inlined > 0                    # the fusion path is actually hit
+    _assert_all_nodes_close(spec, asg, w)
+
+
+def test_plan_random_input_matches_interpreted():
+    """No explicit x: both paths must draw identical source inputs."""
+    spec = cnn_zoo.get("edge_cnn")
+    asg = heuristic(spec)
+    w = make_weights(spec)
+    _assert_all_nodes_close(spec, asg, w, x=None)
+
+
+def test_plan_batch_consistency(rng):
+    """A batch-n dispatch equals n stacked single-image dispatches."""
+    spec = cnn_zoo.get("edge_cnn")
+    asg = heuristic(spec)
+    w = make_weights(spec)
+    plan = compile_plan(spec, asg, outputs="sinks")
+    sink = plan.sinks[-1]
+    xb = jnp.asarray(rng.standard_normal((3, 3, 32, 32)), jnp.float32)
+    ob = plan(xb, w)[sink]
+    assert ob.shape[0] == 3
+    for b in range(3):
+        o1 = plan(xb[b:b + 1], w)[sink]
+        np.testing.assert_allclose(np.asarray(ob[b]), np.asarray(o1[0]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_plan_cache_reuse_and_keying():
+    clear_plan_cache()
+    spec = cnn_zoo.get("edge_cnn")
+    asg = heuristic(spec)
+    p1 = compile_plan(spec, asg, (4, 3, 32, 32))
+    p2 = compile_plan(spec, asg, (4, 3, 32, 32))
+    p3 = compile_plan(spec, asg, (8, 3, 32, 32))
+    assert p1 is p2                       # cache hit on identical key
+    assert p1 is not p3                   # batch shape participates in key
+    clear_plan_cache()
+    assert compile_plan(spec, asg, (4, 3, 32, 32)) is not p1
+
+
+def test_plan_rejects_simulated_only():
+    spec = cnn_zoo.get("alexnet")
+    asg = heuristic(spec)
+    asg[2] = "im2col-copy-atb-ki"         # impl=None registry entry
+    with pytest.raises(ValueError, match="simulated-only"):
+        compile_plan(spec, asg)
+
+
+def test_batched_impls_match_stacked_singles(rng):
+    """Every runnable impl is rank-polymorphic: batch call == stacked
+    single-image calls (the plan compiler's batched entry point)."""
+    cases = [(4, 3, 12, 1, 3), (5, 2, 9, 1, 1), (6, 4, 11, 2, 3),
+             (3, 2, 13, 1, 5)]
+    for name in RUNNABLE:
+        p = REGISTRY[name]
+        fn = batch_impl(p)
+        for (k, c, im, s, f) in cases:
+            if not p.applicable(k, c, im, s, f):
+                continue
+            xb = jnp.asarray(rng.standard_normal((2, c, im, im)), jnp.float32)
+            w = jnp.asarray(rng.standard_normal((k, c, f, f)), jnp.float32)
+            got = L.to_chw(fn(L.from_chw(xb, p.in_layout), w, s), p.out_layout)
+            ref = jnp.stack([run_primitive(name, xb[b], w, s) for b in range(2)])
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{name} {(k, c, im, s, f)}")
+            break                          # one applicable case per primitive
+
+
+def test_batched_layout_transforms(rng):
+    x = jnp.asarray(rng.standard_normal((2, 3, 5, 5)), jnp.float32)
+    for src in L.LAYOUTS:
+        for dst in L.LAYOUTS:
+            xb = L.from_chw(x, src)
+            yb = L.transform(xb, src, dst)
+            per_img = jnp.stack([L.transform(xb[i], src, dst) for i in range(2)])
+            np.testing.assert_allclose(yb, per_img)
+            np.testing.assert_allclose(L.to_chw(yb, dst), x)
+    # permutation algebra used by DLT fusion
+    for a in L.LAYOUTS:
+        for b in L.LAYOUTS:
+            for c in L.LAYOUTS:
+                composed = L.compose(L.perm(a, b), L.perm(b, c))
+                assert composed == L.perm(a, c)
+    assert L.is_identity(L.perm("hcw", "hcw"))
+
+
+def test_jit_cache_lru_cap():
+    clear_jit_cache()
+    for i in range(executor._JIT_CACHE_CAP + 40):
+        executor._cached(("fake", i), lambda: (lambda: None))
+    assert len(executor._JIT_CACHE) == executor._JIT_CACHE_CAP
+    # oldest entries evicted, newest retained
+    assert ("fake", 0) not in executor._JIT_CACHE
+    assert ("fake", executor._JIT_CACHE_CAP + 39) in executor._JIT_CACHE
+    # a re-touched entry survives the next evictions
+    executor._cached(("fake", 50), lambda: (lambda: None))
+    executor._cached(("fake2", 0), lambda: (lambda: None))
+    assert ("fake", 50) in executor._JIT_CACHE
+    clear_jit_cache()
+    assert len(executor._JIT_CACHE) == 0
