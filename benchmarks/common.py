@@ -1,8 +1,10 @@
-"""Shared benchmark plumbing: dataset + trained-model caches, CSV output."""
+"""Shared benchmark plumbing: dataset cache, artifact-store-backed trained
+models (repro.service.artifacts — warm-start across runs, content-addressed
+by platform/columns/dataset/kind instead of a mutable pickle per tag), and
+CSV output."""
 from __future__ import annotations
 
 import os
-import pickle
 import time
 from typing import Optional
 
@@ -11,9 +13,24 @@ import numpy as np
 from repro.core.perfmodel import PerfModel, fit_perf_model
 from repro.profiler.dataset import (PerfDataset, simulate_dlt_dataset,
                                     simulate_primitive_dataset)
+from repro.service.artifacts import ArtifactStore
 
 ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+_store_state: list = []          # lazily built: [ArtifactStore] or [None]
+
+
+def store() -> Optional[ArtifactStore]:
+    """The benchmark artifact store, created on first use (importing this
+    module must not create directories). None if the root is unwritable —
+    benchmarks then run cache-less rather than crash."""
+    if not _store_state:
+        try:
+            _store_state.append(ArtifactStore(ART))
+        except OSError:
+            _store_state.append(None)
+    return _store_state[0]
 
 _ds_cache = {}
 
@@ -31,29 +48,36 @@ def dlt_dataset(platform: str) -> PerfDataset:
     return _ds_cache[("dlt", platform)]
 
 
-def model_path(tag: str) -> str:
-    d = os.path.join(ART, "models")
-    os.makedirs(d, exist_ok=True)
-    return os.path.join(d, tag + ".pkl")
-
-
 def trained_model(tag: str, kind: str, ds: PerfDataset, *,
                   max_iters: int = 8000, seed: int = 0,
                   base: Optional[PerfModel] = None,
                   cache: bool = True) -> PerfModel:
-    path = model_path(tag)
-    if cache and base is None and os.path.exists(path):
-        return PerfModel.load(path)
-    tr, va, te = ds.split()
-    m = fit_perf_model(kind, tr.feats, tr.times, va.feats, va.times,
-                       columns=ds.columns, seed=seed, base=base,
-                       max_iters=max_iters if not FAST else min(max_iters, 2000))
-    if cache and base is None:
-        try:
-            m.save(path)
-        except Exception:
-            pass
-    return m
+    iters = max_iters if not FAST else min(max_iters, 2000)
+
+    def train() -> PerfModel:
+        tr, va, te = ds.split()
+        return fit_perf_model(kind, tr.feats, tr.times, va.feats, va.times,
+                              columns=ds.columns, seed=seed, base=base,
+                              max_iters=iters)
+
+    st = store()
+    if not cache or base is not None or st is None:
+        return train()
+    fields = {"artifact": "perfmodel", "tag": tag, "platform": ds.platform,
+              "columns": list(ds.columns), "dataset": ds.fingerprint(),
+              "model_kind": kind, "seed": seed, "max_iters": iters}
+    try:
+        model = st.get_model(fields)
+    except Exception:
+        model = None
+    if model is not None:
+        return model
+    model = train()
+    try:
+        st.put_model(fields, model)
+    except Exception:
+        pass                 # caching failures never kill a benchmark run
+    return model
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -61,6 +61,9 @@ def _warm_round_robin_s(fns: List, repeats: int) -> List[float]:
 
 
 def bench_net(net: str, batches: List[int], repeats: int) -> Dict:
+    from repro.service.pipeline import OptimisedNetwork
+    from repro.service.server import OptimisedServer
+
     spec = cnn_zoo.get(net)
     asg = heuristic_assignment(spec)
     weights = make_weights(spec)
@@ -69,7 +72,7 @@ def bench_net(net: str, batches: List[int], repeats: int) -> Dict:
     x = jnp.asarray(rng.standard_normal((n0.c, n0.im, n0.im)), jnp.float32)
     sink = len(spec.nodes) - 1
 
-    # -- warm both paths, then time everything round-robin -----------------
+    # -- warm all three paths, then time everything round-robin ------------
     execute(spec, asg, weights, x=x, compiled=False)           # warm jit cache
     plan = compile_plan(spec, asg, (batches[0], n0.c, n0.im, n0.im))
     eliminated, inlined = fused_dlt_count(plan.steps)
@@ -80,7 +83,18 @@ def bench_net(net: str, batches: List[int], repeats: int) -> Dict:
         jax.block_until_ready(plan(xb, weights)[plan.sinks[-1]])   # warm
         fns.append(lambda xb=xb: jax.block_until_ready(
             plan(xb, weights)[plan.sinks[-1]]))
+
+    # served path: the same plan dispatched through the serving front end's
+    # queue — quantifies the queue/pad/ticket overhead on top of the raw plan
+    b0 = batches[0]
+    server = OptimisedServer(max_batch=b0, latency_budget_ms=float("inf"))
+    server.register(OptimisedNetwork.from_assignment(spec, asg),
+                    weights=weights)
+    xs_served = rng.standard_normal((b0, n0.c, n0.im, n0.im)).astype(np.float32)
+    server.serve(net, xs_served)                               # warm
+    fns.append(lambda: server.serve(net, xs_served))
     times = _warm_round_robin_s(fns, repeats)
+    served_s = times.pop()
 
     interp_s = times[0]
     emit(f"executor.{net}.interpreted_us", interp_s * 1e6,
@@ -93,14 +107,19 @@ def bench_net(net: str, batches: List[int], repeats: int) -> Dict:
 
     # per-image speedup at the base batch (interpreted serves b images as
     # b sequential dispatches) — the gate metric
-    b0 = batches[0]
     speedup_base = b0 * interp_s / compiled[b0]["seconds_per_dispatch"]
     speedup_best = max(c["images_per_s"] * interp_s for c in compiled.values())
+    emit(f"executor.{net}.served_b{b0}_us", served_s * 1e6,
+         f"{b0/served_s:.1f} img/s via OptimisedServer")
     return {
         "nodes": len(spec.nodes),
         "dlt_edges": {"eliminated_identity": eliminated, "inlined_transpose": inlined},
         "interpreted_per_image_s": interp_s,
         "compiled": {str(b): c for b, c in compiled.items()},
+        "served": {"batch": b0, "seconds_per_dispatch": served_s,
+                   "images_per_s": b0 / served_s,
+                   "overhead_vs_compiled_pct": 100.0 * (
+                       served_s / compiled[b0]["seconds_per_dispatch"] - 1.0)},
         "base_batch": b0,
         "warm_speedup_base": speedup_base,
         "warm_speedup_best": speedup_best,

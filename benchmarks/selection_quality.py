@@ -3,7 +3,8 @@ performance-model estimates instead of measured (simulated) times."""
 from __future__ import annotations
 
 from benchmarks.common import dataset, dlt_dataset, emit, trained_model
-from repro.core.selection import ModelProvider, SimulatedProvider, network_cost, select
+from repro.core.selection import (ModelProvider, SimulatedProvider, build_pbqp,
+                                  network_cost, select)
 from repro.models import cnn_zoo
 
 
@@ -18,7 +19,8 @@ def main() -> dict:
             spec = cnn_zoo.get(net)
             sel_model = select(spec, model)
             sel_truth = select(spec, truth)
-            c_model = network_cost(spec, sel_model.assignment, truth)
+            c_model = network_cost(spec, sel_model.assignment,
+                                   graph=build_pbqp(spec, truth))
             c_truth = sel_truth.solver_cost
             inc = 100.0 * (c_model / c_truth - 1.0)
             results[f"{plat}.{net}"] = inc

@@ -1,0 +1,142 @@
+"""Service-layer end to end: cold vs warm optimise time, and served img/s.
+
+Cold pass: a fresh artifact store — pretrain the base platform model,
+calibrate onto the target platform, PBQP-select. Warm pass: identical calls
+against the now-populated store — every model and the selection must come
+back from disk, selecting the *same assignment*, ≥10x faster (the paper's
+Table 4 "seconds, not hours" claim as a regression gate). Then the optimised
+network is served through ``OptimisedServer`` for a throughput figure.
+
+Writes ``BENCH_service.json``. Exits nonzero if the warm pass is < 10x
+faster than cold or picks a different assignment — the CI smoke gate
+(``--smoke``).
+
+Run:  PYTHONPATH=src:. python benchmarks/service_e2e.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("REPRO_BENCH_SERVICE_JSON", "BENCH_service.json")
+
+
+def optimise_pass(store_root: str, *, net: str, platform: str, base: str,
+                  max_triplets: int, max_iters: int) -> Dict:
+    """One full optimise run against ``store_root``; fresh Platform objects
+    so nothing is warm except what the store provides."""
+    from repro.service import ArtifactStore, get_platform, optimise
+
+    store = ArtifactStore(store_root)
+    t0 = time.perf_counter()
+    base_models = get_platform(base, max_triplets=max_triplets).pretrain(
+        "nn2", store=store, max_iters=max_iters)
+    opt = optimise(net, get_platform(platform, max_triplets=max_triplets),
+                   store=store, base=base_models, mode="factor",
+                   executable=True)
+    seconds = time.perf_counter() - t0
+    return {"seconds": seconds, "opt": opt,
+            "warm": base_models.warm and opt.warm}
+
+
+def serve_pass(opt, requests: int, budget_ms: float) -> Dict:
+    from repro.service import OptimisedServer
+
+    server = OptimisedServer(latency_budget_ms=budget_ms)
+    server.register(opt)
+    n0 = opt.spec.nodes[0]
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((requests, n0.c, n0.im, n0.im)).astype(np.float32)
+    server.serve(opt.net, xs)                          # warm the plan cache
+    s0 = server.stats(opt.net)
+    t0 = time.perf_counter()
+    server.serve(opt.net, xs)
+    dt = time.perf_counter() - t0
+    s = server.stats(opt.net)                          # delta = timed pass only
+    return {"requests": requests, "seconds": dt,
+            "images_per_s": requests / dt, "batch_cap": s["batch_cap"],
+            "dispatches": s["dispatches"] - s0["dispatches"],
+            "padded": s["padded"] - s0["padded"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small pools / fewer iters (CI gate)")
+    ap.add_argument("--net", default="edge_cnn")
+    ap.add_argument("--platform", default="arm")
+    ap.add_argument("--base", default="intel")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--budget-ms", type=float, default=50.0)
+    ap.add_argument("--store", default=None,
+                    help="artifact store root (default: fresh temp dir, "
+                         "removed afterwards, so the first pass is cold)")
+    args = ap.parse_args()
+
+    max_triplets = 30 if args.smoke else 60
+    max_iters = 600 if args.smoke else 2000
+    requests = args.requests or (32 if args.smoke else 128)
+
+    root = args.store or tempfile.mkdtemp(prefix="repro-service-e2e-")
+    cleanup = args.store is None
+    try:
+        kw = dict(net=args.net, platform=args.platform, base=args.base,
+                  max_triplets=max_triplets, max_iters=max_iters)
+        cold = optimise_pass(root, **kw)
+        warm = optimise_pass(root, **kw)
+        ratio = cold["seconds"] / max(warm["seconds"], 1e-9)
+        same = cold["opt"].assignment == warm["opt"].assignment
+        emit("service.optimise_cold_us", cold["seconds"] * 1e6,
+             f"{cold['seconds']:.2f}s train+select")
+        emit("service.optimise_warm_us", warm["seconds"] * 1e6,
+             f"{warm['seconds']:.3f}s from artifacts ({ratio:.0f}x)")
+
+        served = serve_pass(warm["opt"], requests, args.budget_ms)
+        emit("service.served_img_s", 1e6 / served["images_per_s"],
+             f"{served['images_per_s']:.1f} img/s "
+             f"cap={served['batch_cap']} dispatches={served['dispatches']}")
+
+        results = {
+            "mode": "smoke" if args.smoke else "full",
+            "net": args.net, "platform": args.platform, "base": args.base,
+            "cold_seconds": cold["seconds"],
+            "warm_seconds": warm["seconds"],
+            "warm_speedup": ratio,
+            "warm_was_warm": warm["warm"],
+            "same_assignment": same,
+            "assignment": {str(k): v for k, v in
+                           sorted(warm["opt"].assignment.items())},
+            "served": served,
+        }
+        with open(OUT_PATH, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"wrote {OUT_PATH} (warm optimise {ratio:.0f}x faster than cold)")
+
+        failures = []
+        if ratio < 10.0:
+            failures.append(f"warm-start only {ratio:.1f}x faster (< 10x)")
+        if not same:
+            failures.append("warm-start selected a different assignment")
+        if not warm["warm"]:
+            failures.append("second pass retrained instead of warm-loading")
+        if failures:
+            print("FAIL: " + "; ".join(failures), file=sys.stderr)
+            return 1
+        return 0
+    finally:
+        if cleanup:
+            shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,8 @@ from __future__ import annotations
 
 from benchmarks.common import dataset, dlt_dataset, emit, trained_model
 from repro.core.perfmodel import factor_correct
-from repro.core.selection import ModelProvider, SimulatedProvider, network_cost, select
+from repro.core.selection import (ModelProvider, SimulatedProvider, build_pbqp,
+                                  network_cost, select)
 from repro.models import cnn_zoo
 
 
@@ -22,13 +23,14 @@ def main() -> dict:
         corrected = factor_correct(intel, sample.feats, sample.times)
 
         truth = SimulatedProvider(plat)
+        g_truth = build_pbqp(spec, truth)        # one build, many evaluations
         c_opt = select(spec, truth).solver_cost
         dlt_native = trained_model(f"{plat}_dlt_nn2", "nn2", dlt_dataset(plat))
         for tag, model in (("intel", intel), ("factor_intel", corrected),
                            ("native", native)):
             md = model.mdrae(te.feats, te.times)
             prov = ModelProvider(model, dlt_native)
-            c = network_cost(spec, select(spec, prov).assignment, truth)
+            c = network_cost(spec, select(spec, prov).assignment, graph=g_truth)
             inc = 100.0 * (c / c_opt - 1.0)
             results[f"{plat}.{tag}"] = {"mdrae": md, "increase_pct": inc}
             emit(f"fig8.{plat}.{tag}", md * 100,

@@ -1,15 +1,15 @@
 """Paper Figs 9/10: fine-tuning the Intel model to AMD/ARM vs training from
-scratch, across training-data fractions."""
+scratch, across training-data fractions — through the service layer's
+calibrate path (repro.service.platforms), with ground-truth scoring over a
+prebuilt PBQP graph (one O(build), many evaluations)."""
 from __future__ import annotations
-
-import os
 
 import numpy as np
 
-from benchmarks.common import FAST, dataset, dlt_dataset, emit, trained_model
-from repro.core.perfmodel import fit_perf_model
-from repro.core.selection import ModelProvider, SimulatedProvider, network_cost, select
+from benchmarks.common import FAST, dataset, emit, store, trained_model
+from repro.core.selection import build_pbqp, network_cost, select
 from repro.models import cnn_zoo
+from repro.service.platforms import SimulatedPlatform
 
 FRACTIONS = (0.001, 0.01, 0.1, 0.25) if not FAST else (0.01, 0.1)
 SEEDS = (0, 1) if not FAST else (0,)
@@ -20,26 +20,27 @@ def main() -> dict:
     intel = trained_model("intel_nn2", "nn2", dataset("intel"))
     spec = cnn_zoo.get("googlenet")
     for plat in ("amd", "arm"):
-        ds = dataset(plat)
-        tr, va, te = ds.split()
-        truth = SimulatedProvider(plat)
+        platform = SimulatedPlatform(plat,
+                                     max_triplets=60 if FAST else None)
+        ds = platform.primitive_dataset()
+        _, _, te = ds.split()
+        truth = platform.cost_provider()
+        g_truth = build_pbqp(spec, truth)    # one build, many evaluations
         c_opt = select(spec, truth).solver_cost
-        dlt_native = trained_model(f"{plat}_dlt_nn2", "nn2", dlt_dataset(plat))
         full = trained_model(f"{plat}_nn2", "nn2", ds)
         results[f"{plat}.full"] = full.mdrae(te.feats, te.times)
         for frac in FRACTIONS:
             for mode in ("scratch", "finetune"):
                 errs, incs = [], []
                 for seed in SEEDS:
-                    sub = tr.subsample(frac, seed=seed)
-                    m = fit_perf_model(
-                        "nn2", sub.feats, sub.times, va.feats, va.times,
-                        columns=ds.columns, seed=seed,
-                        base=intel if mode == "finetune" else None,
-                        max_iters=2000 if not FAST else 1200, patience=150)
-                    errs.append(m.mdrae(te.feats, te.times))
-                    prov = ModelProvider(m, dlt_native)
-                    c = network_cost(spec, select(spec, prov).assignment, truth)
+                    cal = platform.calibrate(
+                        intel, frac, mode=mode, store=store(), seed=seed,
+                        dlt_kind="nn2",
+                        dlt_max_iters=8000 if not FAST else 2000,
+                        max_iters=2000 if not FAST else 1200)
+                    errs.append(cal.prim.mdrae(te.feats, te.times))
+                    sel = select(spec, cal.provider())
+                    c = network_cost(spec, sel.assignment, graph=g_truth)
                     incs.append(100.0 * (c / c_opt - 1.0))
                 md, inc = float(np.mean(errs)), float(np.mean(incs))
                 results[f"{plat}.{mode}.{frac}"] = {"mdrae": md, "increase_pct": inc}

@@ -1,51 +1,45 @@
-"""Quickstart: the paper's pipeline end to end in one script.
+"""Quickstart: the paper's pipeline end to end through the service layer.
 
-  1. build a profiled dataset (platform simulator),
-  2. train the NN2 performance model (+ a DLT model),
-  3. PBQP-select primitives for AlexNet from *predictions*,
-  4. compare against selecting from measured costs.
+  1. a Platform profiles itself (simulated intel) and trains NN2 performance
+     models — one ``pretrain`` call,
+  2. ``optimise`` PBQP-selects primitives for AlexNet from *predictions*,
+  3. compare against selecting from measured (simulated ground-truth) costs.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
-from repro.core.perfmodel import fit_perf_model
-from repro.core.selection import ModelProvider, SimulatedProvider, network_cost, select
-from repro.models import cnn_zoo
-from repro.profiler.dataset import simulate_dlt_dataset, simulate_primitive_dataset
+from repro.core.selection import build_pbqp, network_cost, select
+from repro.service import get_platform, optimise
 
 
 def main():
-    print("== 1. profiling (simulated intel platform) ==")
-    ds = simulate_primitive_dataset("intel", max_triplets=60)
-    dlt = simulate_dlt_dataset("intel")
+    print("== 1. profiling + training (simulated intel platform) ==")
+    intel = get_platform("intel", max_triplets=60)
+    ds = intel.primitive_dataset()
     print(f"   {ds.n} layer configs x {len(ds.columns)} primitives")
+    models = intel.pretrain("nn2", max_iters=4000,
+                            dlt_kind="nn2", dlt_max_iters=2500)
+    _, _, te = ds.split()
+    _, _, dte = intel.dlt_dataset().split()
+    print(f"   primitive MdRAE: {models.prim.mdrae(te.feats, te.times)*100:.1f}%  "
+          f"DLT MdRAE: {models.dlt.mdrae(dte.feats, dte.times)*100:.1f}%  "
+          f"({models.seconds:.1f}s)")
 
-    print("== 2. training NN2 performance models ==")
-    tr, va, te = ds.split()
-    m = fit_perf_model("nn2", tr.feats, tr.times, va.feats, va.times,
-                       columns=ds.columns, max_iters=4000)
-    dtr, dva, dte = dlt.split()
-    md = fit_perf_model("nn2", dtr.feats, dtr.times, dva.feats, dva.times,
-                        columns=dlt.columns, max_iters=2500)
-    print(f"   primitive MdRAE: {m.mdrae(te.feats, te.times)*100:.1f}%  "
-          f"DLT MdRAE: {md.mdrae(dte.feats, dte.times)*100:.1f}%")
-
-    print("== 3. primitive selection from PREDICTED costs ==")
-    spec = cnn_zoo.get("alexnet")
-    model = ModelProvider(m, md)
+    print("== 2. primitive selection from PREDICTED costs ==")
     t0 = time.perf_counter()
-    sel = select(spec, model)
+    opt = optimise("alexnet", intel, models=models)
     print(f"   selection took {(time.perf_counter()-t0)*1e3:.0f} ms "
-          f"(optimal solve: {sel.optimal})")
-    for i, layer in enumerate(spec.nodes):
+          f"(optimal solve: {opt.selection.optimal})")
+    for i, layer in enumerate(opt.spec.nodes):
         print(f"   {layer.name:18s} k={layer.k:4d} c={layer.c:4d} im={layer.im:3d} "
-              f"-> {sel.assignment[i]}")
+              f"-> {opt.assignment[i]}")
 
-    print("== 4. quality vs selecting from measured costs ==")
-    truth = SimulatedProvider("intel")
-    c_model = network_cost(spec, sel.assignment, truth)
-    c_truth = select(spec, truth).solver_cost
+    print("== 3. quality vs selecting from measured costs ==")
+    truth = intel.cost_provider()
+    g_truth = build_pbqp(opt.spec, truth)
+    c_model = network_cost(opt.spec, opt.assignment, graph=g_truth)
+    c_truth = select(opt.spec, truth).solver_cost
     print(f"   measured-optimal: {c_truth*1e3:.3f} ms | model-selected: "
           f"{c_model*1e3:.3f} ms | increase {100*(c_model/c_truth-1):.2f}% "
           f"(paper: <= 1.1%)")

@@ -1,13 +1,13 @@
-"""End-to-end serving driver (the paper's deployment story): take a CNN,
-optimise it by primitive selection ON THIS MACHINE (real profiling of the
-JAX primitives), then serve batched inference requests through the compiled
-whole-graph plan (repro.primitives.plan) and report throughput against a
-fixed-primitive baseline.
+"""End-to-end serving driver (the paper's deployment story), through the
+service layer: a HostPlatform profiles the JAX primitives ON THIS MACHINE,
+``optimise`` trains a model and PBQP-selects an executable assignment, and
+an ``OptimisedServer`` serves batched requests through the compiled
+whole-graph plan — reported against a fixed-primitive baseline.
 
-Batching knob: ``--batch N`` sets the request batch size — the compiled plan
-is one jitted function over a leading batch axis, so larger batches amortise
-dispatch and let XLA fuse across images; ``--sweep`` prints an images/s curve
-over batch sizes 1/4/16 to show throughput scaling with batch size.
+Batching knob: ``--batch N`` sets the request batch size (the server batches
+up to its perf-model-predicted cap; the compiled plan is one jitted function
+over a leading batch axis); ``--sweep`` prints an images/s curve over batch
+sizes 1/4/16.
 
 Run:  PYTHONPATH=src python examples/serve_optimized_cnn.py [--requests 32]
       [--batch 8] [--sweep]
@@ -15,17 +15,11 @@ Run:  PYTHONPATH=src python examples/serve_optimized_cnn.py [--requests 32]
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.perfmodel import fit_perf_model
-from repro.core.selection import ModelProvider, select
-from repro.models import cnn_zoo
 from repro.models.cnn_zoo import ConvLayer
 from repro.primitives.executor import make_weights
-from repro.primitives.plan import compile_plan
-from repro.profiler import host
+from repro.service import HostPlatform, OptimisedServer, OptimisedNetwork, optimise
 
 
 def main():
@@ -38,45 +32,47 @@ def main():
                     help="also sweep batch sizes 1/4/16 on the optimised net")
     args = ap.parse_args()
 
-    spec = cnn_zoo.get("edge_cnn")
-    convs = [(i, n) for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)]
-
     prims = ["im2col-copy-ab-ki", "im2col-scan-ab-ki", "kn2row", "mec-col",
              "winograd-2x2-3x3", "conv-1x1-gemm-ab-ki", "direct-sum2d"]
     print("== profiling primitives on this CPU (the stage the perf model replaces) ==")
     t0 = time.perf_counter()
+    import repro.models.cnn_zoo as cnn_zoo
+    spec = cnn_zoo.get("edge_cnn")
+    convs = [(i, n) for i, n in enumerate(spec.nodes) if isinstance(n, ConvLayer)]
     pool = sorted({n.config for _, n in convs} |
                   {(32, 16, 28, 1, 3), (64, 32, 14, 1, 3), (16, 8, 30, 1, 3)})
-    ds = host.profile_primitive_dataset(pool, primitives=prims, repeats=5)
-    dlt = host.profile_dlt_dataset([(16, 30), (32, 28), (32, 26), (64, 13)], repeats=5)
-    print(f"   profiled {ds.n} configs in {time.perf_counter()-t0:.1f}s")
-
-    m = fit_perf_model("nn2", ds.feats, ds.times, ds.feats[:2], ds.times[:2],
-                       columns=ds.columns, max_iters=1200, patience=120)
-    md = fit_perf_model("lin", dlt.feats, dlt.times, dlt.feats[:1], dlt.times[:1],
-                        columns=dlt.columns)
-    sel = select(spec, ModelProvider(m, md))
-    print("   assignment:", [sel.assignment[i] for i, _ in convs])
+    platform = HostPlatform(configs=pool,
+                            dlt_pairs=[(16, 30), (32, 28), (32, 26), (64, 13)],
+                            primitives=prims, repeats=5)
+    opt = optimise(spec, platform, executable=True, max_iters=1200)
+    print(f"   profiled {platform.primitive_dataset().n} configs and "
+          f"optimised in {time.perf_counter()-t0:.1f}s")
+    print("   assignment:", [opt.assignment[i] for i, _ in convs])
 
     weights = make_weights(spec)
-    baseline = {i: ("conv-1x1-gemm-ab-ki" if n.f == 1 else "direct-sum2d")
-                for i, n in convs}
-    baseline.update({i: "chw" for i, n in enumerate(spec.nodes)
-                     if not isinstance(n, ConvLayer)})
+    baseline_asg = {i: ("conv-1x1-gemm-ab-ki" if n.f == 1 else "direct-sum2d")
+                    for i, n in convs}
+    baseline_asg.update({i: "chw" for i, n in enumerate(spec.nodes)
+                         if not isinstance(n, ConvLayer)})
+    baseline = OptimisedNetwork.from_assignment(
+        spec, baseline_asg, net="edge_cnn_baseline", platform=platform,
+        models=opt.models, columns=opt.columns)
+
     rng = np.random.default_rng(0)
     c, im = spec.nodes[0].c, spec.nodes[0].im
 
-    def serve(assignment, tag, batch):
-        # compile the whole-graph batched plan (cached by batch shape), warm
-        # it once, then serve the request stream one dispatch per batch
-        plan = compile_plan(spec, assignment, (batch, c, im, im))
-        sink = plan.sinks[-1]
-        x = jnp.asarray(rng.standard_normal((batch, c, im, im)), jnp.float32)
-        jax.block_until_ready(plan(x, weights)[sink])
+    def serve(registered: OptimisedNetwork, tag, batch):
+        # one server per measurement: register, warm the plan once, then
+        # serve the request stream batch-by-batch through the queue
+        server = OptimisedServer(max_batch=batch,
+                                 latency_budget_ms=float("inf"))
+        server.register(registered, weights=weights)
+        warm = rng.standard_normal((batch, c, im, im)).astype(np.float32)
+        server.serve(registered.net, warm)
         t0 = time.perf_counter()
         for _ in range(args.requests):
-            x = jnp.asarray(rng.standard_normal((batch, c, im, im)), jnp.float32)
-            jax.block_until_ready(plan(x, weights)[sink])
+            xs = rng.standard_normal((batch, c, im, im)).astype(np.float32)
+            server.serve(registered.net, xs)
         dt = time.perf_counter() - t0
         imgs = args.requests * batch
         print(f"   {tag:10s}: batch {batch:3d} | {imgs/dt:8.1f} img/s "
@@ -85,13 +81,13 @@ def main():
 
     print(f"== serving {args.requests} request batches of {args.batch} ==")
     t_base = serve(baseline, "baseline", args.batch)
-    t_opt = serve(sel.assignment, "optimised", args.batch)
+    t_opt = serve(opt, "optimised", args.batch)
     print(f"   speedup: {t_base/t_opt:.2f}x")
 
     if args.sweep:
         print("== throughput vs batch size (optimised assignment) ==")
         for b in (1, 4, 16):
-            serve(sel.assignment, f"batch={b}", b)
+            serve(opt, f"batch={b}", b)
 
 
 if __name__ == "__main__":

@@ -1,45 +1,58 @@
-"""Transfer learning across platforms (paper §4.4/§5.3): pre-train on intel,
-port to arm with 1% of the data — direct / factor-corrected / fine-tuned.
+"""Transfer learning across platforms (paper §4.4/§5.3) through the service
+layer: pre-train on intel, port to arm with 1% of the data — direct /
+factor-corrected / fine-tuned — and persist every trained model in the
+artifact store, so a second invocation warm-starts in milliseconds instead
+of retraining (the paper's "porting costs seconds" claim, operational).
 
 Run:  PYTHONPATH=src python examples/transfer_learning.py
+      (run it twice to see the warm-start)
 """
-from repro.core.perfmodel import factor_correct, fit_perf_model
-from repro.profiler.dataset import simulate_primitive_dataset
+import os
+
+from repro.service import ArtifactStore, get_platform
 
 
 def main():
+    store = ArtifactStore(os.environ.get("REPRO_ARTIFACTS", "artifacts"))
+
     print("== pre-training on intel ==")
-    ds_i = simulate_primitive_dataset("intel", max_triplets=60)
-    tr, va, te = ds_i.split()
-    intel = fit_perf_model("nn2", tr.feats, tr.times, va.feats, va.times,
-                           columns=ds_i.columns, max_iters=4000)
-    print(f"   intel test MdRAE: {intel.mdrae(te.feats, te.times)*100:.1f}%")
+    intel = get_platform("intel", max_triplets=60)
+    base = intel.pretrain("nn2", store=store, max_iters=4000)
+    _, _, te = intel.primitive_dataset().split()
+    print(f"   intel test MdRAE: {base.prim.mdrae(te.feats, te.times)*100:.1f}% "
+          f"({'warm' if base.warm else 'cold'}, {base.seconds:.2f}s)")
 
     print("== porting to arm ==")
-    ds_a = simulate_primitive_dataset("arm", max_triplets=60)
-    tra, vaa, tea = ds_a.split()
-    direct = intel.mdrae(tea.feats, tea.times)
+    arm = get_platform("arm", max_triplets=60)
+    _, _, tea = arm.primitive_dataset().split()
+    direct = base.prim.mdrae(tea.feats, tea.times)
     print(f"   intel model applied directly:   MdRAE {direct*100:.0f}%")
 
-    onepct = tra.subsample(0.01)
-    fc = factor_correct(intel, onepct.feats, onepct.times)
+    fc = arm.calibrate(base, 0.01, mode="factor", store=store)
     print(f"   + per-primitive factor (1% data): MdRAE "
-          f"{fc.mdrae(tea.feats, tea.times)*100:.1f}%")
+          f"{fc.prim.mdrae(tea.feats, tea.times)*100:.1f}% "
+          f"({'warm' if fc.warm else 'cold'}, {fc.seconds:.2f}s)")
 
-    ft = fit_perf_model("nn2", onepct.feats, onepct.times, vaa.feats, vaa.times,
-                        columns=ds_a.columns, base=intel, max_iters=2000)
+    ft = arm.calibrate(base, 0.01, mode="finetune", store=store, max_iters=2000)
     print(f"   + fine-tuning      (1% data): MdRAE "
-          f"{ft.mdrae(tea.feats, tea.times)*100:.1f}%")
+          f"{ft.prim.mdrae(tea.feats, tea.times)*100:.1f}% "
+          f"({'warm' if ft.warm else 'cold'}, {ft.seconds:.2f}s)")
 
-    scratch = fit_perf_model("nn2", onepct.feats, onepct.times, vaa.feats,
-                             vaa.times, columns=ds_a.columns, max_iters=2000)
+    scratch = arm.calibrate(base, 0.01, mode="scratch", store=store,
+                            max_iters=2000)
     print(f"   from scratch       (1% data): MdRAE "
-          f"{scratch.mdrae(tea.feats, tea.times)*100:.1f}%")
+          f"{scratch.prim.mdrae(tea.feats, tea.times)*100:.1f}% "
+          f"({'warm' if scratch.warm else 'cold'}, {scratch.seconds:.2f}s)")
 
-    native = fit_perf_model("nn2", tra.feats, tra.times, vaa.feats, vaa.times,
-                            columns=ds_a.columns, max_iters=4000)
+    native = arm.pretrain("nn2", store=store, max_iters=4000)
     print(f"   native (all data):            MdRAE "
-          f"{native.mdrae(tea.feats, tea.times)*100:.1f}%")
+          f"{native.prim.mdrae(tea.feats, tea.times)*100:.1f}% "
+          f"({'warm' if native.warm else 'cold'}, {native.seconds:.2f}s)")
+
+    warm = all(m.warm for m in (base, fc, ft, scratch, native))
+    print("== artifact store ==")
+    print(f"   {len(store.entries('models'))} models under {store.root!r}; "
+          f"this run was {'WARM (no training)' if warm else 'COLD (trained + stored)'}")
 
 
 if __name__ == "__main__":

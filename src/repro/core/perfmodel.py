@@ -13,8 +13,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -175,39 +177,155 @@ class PerfModel:
         from repro.core.normalize import mdrae_per_column
         return mdrae_per_column(self.predict(feats), runtimes)
 
+    def fingerprint(self) -> str:
+        """Content hash of the serialised model (header + parameter bytes) —
+        the identity used for artifact keying (repro.service.artifacts).
+        Wall-clock provenance (train_seconds) is excluded: two models with
+        identical parameters must hash identically."""
+        import hashlib
+        state = self.to_state()
+        header = {k: v for k, v in state["header"].items()
+                  if k != "train_seconds"}
+        h = hashlib.sha256(json.dumps(header, sort_keys=True).encode())
+        for name in sorted(state["arrays"]):
+            h.update(name.encode())
+            h.update(np.ascontiguousarray(state["arrays"][name]).tobytes())
+        return h.hexdigest()[:16]
+
+    def subset_columns(self, columns: Sequence[str]) -> "PerfModel":
+        """A real PerfModel predicting only ``columns`` (same kind, sliced
+        output layer / ensemble / normalizer) — used to transfer a wide base
+        model onto a platform that profiles fewer primitives (e.g. the
+        49-column simulator model onto the host's runnable subset)."""
+        model_cols = list(self.columns)
+        missing = [c for c in columns if c not in model_cols]
+        if missing:
+            raise ValueError(f"model has no columns {missing}")
+        idx = np.asarray([model_cols.index(c) for c in columns])
+        if list(columns) == model_cols:
+            return self
+
+        out_d = self.out_norm.to_dict()
+        for k in ("mean", "std"):
+            if out_d.get(k) is not None:
+                out_d[k] = np.asarray(out_d[k])[idx].tolist()
+        out_norm = type(self.out_norm).from_dict(out_d)
+
+        if isinstance(self, FactorCorrectedModel):
+            return FactorCorrectedModel(
+                base=self.base.subset_columns(columns),
+                log_factor=np.asarray(self.log_factor)[idx])
+        if self.kind == "nn1":
+            params = [self.params[j] for j in idx]
+        else:
+            head = self.params[-1]
+            params = list(self.params[:-1]) + [
+                {"w": head["w"][:, idx], "b": head["b"][idx]}]
+        return PerfModel(kind=self.kind, in_norm=self.in_norm,
+                         out_norm=out_norm, params=params,
+                         n_outputs=len(idx), columns=list(columns),
+                         train_seconds=self.train_seconds)
+
     # -- (de)serialization -------------------------------------------------
+    #
+    # On-disk format: a single ``.npz`` whose ``__header__`` entry is a JSON
+    # document (kind, columns, normalizers, format version) and whose other
+    # entries are the parameter arrays under structural names:
+    #   nn2/lin:    ``l{i}.w`` / ``l{i}.b``          (layer i)
+    #   nn1:        ``c{j}.l{i}.w`` / ``c{j}.l{i}.b`` (column j, layer i)
+    #   factor-*:   base arrays plus ``log_factor``
+    # No pickle anywhere: the file is portable, inspectable, and cannot
+    # execute code on load.
+
+    _FORMAT = "perfmodel-npz-v1"
+
+    def _named_arrays(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {}
+        kind = self.kind
+        if kind.startswith("factor-"):
+            kind = kind[len("factor-"):]
+        if kind == "nn1":
+            for j, col_params in enumerate(self.params):
+                for i, layer in enumerate(col_params):
+                    out[f"c{j}.l{i}.w"] = np.asarray(layer["w"])
+                    out[f"c{j}.l{i}.b"] = np.asarray(layer["b"])
+        else:
+            for i, layer in enumerate(self.params):
+                out[f"l{i}.w"] = np.asarray(layer["w"])
+                out[f"l{i}.b"] = np.asarray(layer["b"])
+        return out
+
     def to_state(self) -> dict:
-        flat, treedef = jax.tree.flatten(self.params)
-        return {
+        """JSON header + named arrays (the save() payload, exposed for
+        fingerprinting and tests)."""
+        header = {
+            "format": self._FORMAT,
             "kind": self.kind,
-            "n_outputs": self.n_outputs,
+            "n_outputs": int(self.n_outputs),
             "columns": list(self.columns),
             "in_norm": self.in_norm.to_dict(),
             "out_norm": self.out_norm.to_dict(),
-            "arrays": [np.asarray(a) for a in flat],
-            "treedef": str(treedef),  # informational; structure rebuilt below
-            "structure": jax.tree.structure(self.params),
+            "train_seconds": float(self.train_seconds),
         }
+        arrays = self._named_arrays()
+        if isinstance(self, FactorCorrectedModel):
+            arrays["log_factor"] = np.asarray(self.log_factor, np.float64)
+        return {"header": header, "arrays": arrays}
 
     def save(self, path: str) -> None:
-        import pickle
         state = self.to_state()
-        state.pop("structure")
-        state["params_py"] = jax.tree.map(lambda a: np.asarray(a), self.params)
-        with open(path, "wb") as f:
-            pickle.dump(state, f)
+        payload = dict(state["arrays"])
+        payload["__header__"] = np.frombuffer(
+            json.dumps(state["header"], sort_keys=True).encode(), np.uint8)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+
+    @staticmethod
+    def _params_from_arrays(kind: str, data: Dict[str, np.ndarray]) -> list:
+        def layer_count(prefix: str) -> int:
+            i = 0
+            while f"{prefix}l{i}.w" in data:
+                i += 1
+            return i
+
+        if kind == "nn1":
+            params, j = [], 0
+            while f"c{j}.l0.w" in data:
+                params.append([{"w": jnp.asarray(data[f"c{j}.l{i}.w"]),
+                                "b": jnp.asarray(data[f"c{j}.l{i}.b"])}
+                               for i in range(layer_count(f"c{j}."))])
+                j += 1
+            return params
+        return [{"w": jnp.asarray(data[f"l{i}.w"]),
+                 "b": jnp.asarray(data[f"l{i}.b"])}
+                for i in range(layer_count(""))]
 
     @classmethod
     def load(cls, path: str) -> "PerfModel":
-        import pickle
-        with open(path, "rb") as f:
-            state = pickle.load(f)
-        params = jax.tree.map(jnp.asarray, state["params_py"])
-        return cls(kind=state["kind"],
-                   in_norm=LogStandardizer.from_dict(state["in_norm"]),
-                   out_norm=LogStandardizer.from_dict(state["out_norm"]),
-                   params=params, n_outputs=state["n_outputs"],
-                   columns=state["columns"])
+        with np.load(path) as z:
+            data = {k: z[k] for k in z.files}
+        header = json.loads(bytes(data.pop("__header__")).decode())
+        if header.get("format") != cls._FORMAT:
+            raise ValueError(f"{path}: unsupported perf-model format "
+                             f"{header.get('format')!r}")
+        kind = header["kind"]
+        base_kind = kind[len("factor-"):] if kind.startswith("factor-") else kind
+        model = PerfModel(
+            kind=base_kind,
+            in_norm=LogStandardizer.from_dict(header["in_norm"]),
+            out_norm=LogStandardizer.from_dict(header["out_norm"]),
+            params=cls._params_from_arrays(base_kind, data),
+            n_outputs=header["n_outputs"],
+            columns=header["columns"],
+            train_seconds=header.get("train_seconds", 0.0))
+        if kind.startswith("factor-"):
+            # a factor-corrected model round-trips as itself, correction and
+            # all (the old pickle path silently dropped log_factor)
+            model = FactorCorrectedModel(base=model,
+                                         log_factor=data["log_factor"])
+        return model
 
 
 def _prep(feats, runtimes, in_norm=None, out_norm=None):

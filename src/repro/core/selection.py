@@ -71,15 +71,31 @@ class SimulatedProvider:
 
 class ModelProvider:
     """Performance-model provider (the paper's contribution): one batched
-    forward pass per network for primitives and one for DLTs."""
+    forward pass per network for primitives and one for DLTs.
 
-    def __init__(self, prim_model: PerfModel, dlt_model: PerfModel):
+    ``columns`` restricts selection to a subset of the model's output columns
+    (e.g. the runnable primitives when the assignment must execute on this
+    host) without retraining — predictions are sliced per call."""
+
+    def __init__(self, prim_model: PerfModel, dlt_model: PerfModel,
+                 columns: Optional[Sequence[str]] = None):
         self.prim_model = prim_model
         self.dlt_model = dlt_model
-        self.columns = list(prim_model.columns)
+        if columns is None:
+            self.columns = list(prim_model.columns)
+            self._col_idx = None
+        else:
+            model_cols = list(prim_model.columns)
+            missing = [c for c in columns if c not in model_cols]
+            if missing:
+                raise ValueError(f"model has no columns {missing}")
+            self.columns = list(columns)
+            self._col_idx = np.array([model_cols.index(c) for c in columns])
 
     def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
         pred = self.prim_model.predict(np.asarray(configs, np.float64))
+        if self._col_idx is not None:
+            pred = pred[:, self._col_idx]
         # applicability is structural knowledge, not predicted
         cfg = np.asarray(configs, np.int64)
         mask = compile_traits(tuple(self.columns)).applicable_mask(
@@ -213,12 +229,18 @@ def select(spec: CNNSpec, provider: CostProvider) -> SelectionResult:
 
 
 def network_cost(spec: CNNSpec, assignment: Dict[int, str],
-                 provider: CostProvider) -> float:
+                 provider: Optional[CostProvider] = None, *,
+                 graph: Optional[pbqp.PBQPGraph] = None) -> float:
     """Total network runtime under ``assignment`` with ``provider``'s costs —
-    used to score a model-derived assignment against ground truth (Fig 7)."""
-    g = build_pbqp(spec, provider)
-    idx_assignment = {}
-    for i, node in enumerate(spec.nodes):
-        choices = _node_choices(node, provider.columns)
-        idx_assignment[i] = choices.index(assignment[i])
-    return pbqp.evaluate(g, idx_assignment)
+    used to score a model-derived assignment against ground truth (Fig 7).
+
+    Fig-7-style loops evaluate many assignments against one ground-truth
+    provider; pass ``graph=build_pbqp(spec, provider)`` to amortise the
+    O(build) cost across evaluations instead of rebuilding per call."""
+    if graph is None:
+        if provider is None:
+            raise TypeError("network_cost needs a provider or a prebuilt graph")
+        graph = build_pbqp(spec, provider)
+    idx_assignment = {n: graph.labels[n].index(assignment[n])
+                      for n in graph.labels}
+    return pbqp.evaluate(graph, idx_assignment)

@@ -1,6 +1,9 @@
-"""Serving launcher: prefill + batched decode over any assigned arch.
+"""LM decode demo: prefill + batched decode over any assigned arch.
 
-``python -m repro.launch.serve --arch mixtral_8x7b --tokens 32``
+``python -m repro.launch.lm_decode --arch mixtral_8x7b --tokens 32``
+
+(Formerly ``repro.launch.serve``; renamed so the CNN serving front end —
+``python -m repro.service.server`` — owns the "serve" name.)
 
 Demonstrates the serve path the decode_32k/long_500k dry-run cells lower:
 prefill builds the cache, then single-token steps extend it (ring-buffered

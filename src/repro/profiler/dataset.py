@@ -65,6 +65,18 @@ class PerfDataset:
     def n(self) -> int:
         return self.feats.shape[0]
 
+    def fingerprint(self) -> str:
+        """Content hash over features, runtimes and column names — the
+        dataset identity used for artifact keying (repro.service.artifacts).
+        Simulator datasets hash identically across runs (deterministic
+        noise); host-profiled datasets hash per measurement."""
+        import hashlib
+        h = hashlib.sha256()
+        h.update(("|".join(self.columns) + "@" + self.platform).encode())
+        h.update(np.ascontiguousarray(self.feats, np.float64).tobytes())
+        h.update(np.ascontiguousarray(self.times, np.float64).tobytes())
+        return h.hexdigest()[:16]
+
 
 def simulate_primitive_dataset(platform: str,
                                max_triplets: Optional[int] = None,

@@ -1,0 +1,25 @@
+"""Service layer (DESIGN.md §7): platform abstraction, artifact store, and
+serving front end — the profile → model → select → serve pipeline as a
+subsystem instead of per-script glue.
+
+    from repro.service import ArtifactStore, OptimisedServer, get_platform, optimise
+
+    store = ArtifactStore("artifacts")
+    arm = get_platform("arm")
+    base = get_platform("intel").pretrain("nn2", store=store)
+    opt = optimise("edge_cnn", arm, store=store, base=base, executable=True)
+    server = OptimisedServer()
+    server.register(opt)
+"""
+from repro.service.artifacts import ArtifactStore, digest
+from repro.service.pipeline import OptimisedNetwork, optimise
+from repro.service.platforms import (HostPlatform, Platform, PlatformModels,
+                                     SimulatedPlatform, get_platform)
+from repro.service.server import OptimisedServer, Ticket
+
+__all__ = [
+    "ArtifactStore", "digest",
+    "HostPlatform", "OptimisedNetwork", "OptimisedServer", "Platform",
+    "PlatformModels", "SimulatedPlatform", "Ticket",
+    "get_platform", "optimise",
+]

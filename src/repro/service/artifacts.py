@@ -1,0 +1,157 @@
+"""Content-addressed artifact store — service layer L2 (DESIGN.md §7.2).
+
+Persists trained ``PerfModel``s, selections, and plan metadata so repeat
+optimisation runs warm-start in milliseconds — the paper's Table 4 claim
+("optimising a network costs seconds, not hours") made operational across
+process restarts.
+
+Addressing: an artifact's identity is a dict of key fields — canonically
+(platform fingerprint, columns, dataset fingerprint, model kind) plus
+role/mode/seed — serialised to canonical JSON and hashed (sha256, 16 hex
+chars). Same inputs => same address => warm hit; any drift in the profiled
+data or model configuration changes the address and forces a retrain. No
+cache-invalidation logic exists because none is needed.
+
+Durability (in the style of ``ckpt/manager.py``): each artifact is a
+directory written under a temp name and ``os.replace``d into place, with a
+``manifest.json`` (payload checksum + the human-readable key fields) written
+last; an entry without a valid manifest is invisible. A killed writer can
+never leave a readable-but-corrupt artifact.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.perfmodel import PerfModel
+
+_MODEL_PAYLOAD = "model.npz"
+_JSON_PAYLOAD = "data.json"
+
+
+def digest(fields: Dict[str, Any]) -> str:
+    """Canonical-JSON sha256 address of a key-field dict."""
+    blob = json.dumps(fields, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+class ArtifactStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths -------------------------------------------------------------
+    def _dir(self, category: str, key: str) -> str:
+        return os.path.join(self.root, category, key)
+
+    def path(self, category: str, fields: Dict[str, Any]) -> str:
+        return self._dir(category, digest(fields))
+
+    # -- generic put/get ---------------------------------------------------
+    def _put(self, category: str, fields: Dict[str, Any], payload_name: str,
+             write_payload: Callable[[str], None]) -> str:
+        key = digest(fields)
+        final = self._dir(category, key)
+        parent = os.path.dirname(final)
+        os.makedirs(parent, exist_ok=True)
+        tmp = os.path.join(parent, f"tmp.{key}.{os.getpid()}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        payload = os.path.join(tmp, payload_name)
+        write_payload(payload)
+        manifest = {
+            "key": key,
+            "fields": fields,
+            "payload": payload_name,
+            "checksum": _file_sha256(payload),
+            "created": time.time(),
+        }
+        # manifest written LAST: its presence marks the artifact complete
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, default=str)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+
+    def _valid(self, d: str) -> bool:
+        man = os.path.join(d, "manifest.json")
+        if not os.path.exists(man):
+            return False
+        try:
+            with open(man) as f:
+                m = json.load(f)
+            payload = os.path.join(d, m["payload"])
+            return (os.path.exists(payload)
+                    and m.get("checksum") == _file_sha256(payload))
+        except (json.JSONDecodeError, OSError, KeyError):
+            return False
+
+    # -- models ------------------------------------------------------------
+    def put_model(self, fields: Dict[str, Any], model: PerfModel) -> str:
+        return self._put("models", fields, _MODEL_PAYLOAD, model.save)
+
+    def get_model(self, fields: Dict[str, Any]) -> Optional[PerfModel]:
+        d = self.path("models", fields)
+        if not self._valid(d):
+            return None
+        return PerfModel.load(os.path.join(d, _MODEL_PAYLOAD))
+
+    def get_or_train(self, fields: Dict[str, Any],
+                     train_fn: Callable[[], PerfModel]) -> Tuple[PerfModel, bool]:
+        """(model, warm): warm-load on address hit, else train and persist."""
+        m = self.get_model(fields)
+        if m is not None:
+            return m, True
+        m = train_fn()
+        self.put_model(fields, m)
+        return m, False
+
+    # -- JSON artifacts (selections, plan metadata) -------------------------
+    def put_json(self, category: str, fields: Dict[str, Any], obj: Any) -> str:
+        def write(path: str) -> None:
+            with open(path, "w") as f:
+                json.dump(obj, f, indent=1, default=str)
+        return self._put(category, fields, _JSON_PAYLOAD, write)
+
+    def get_json(self, category: str, fields: Dict[str, Any]) -> Optional[Any]:
+        d = self.path(category, fields)
+        if not self._valid(d):
+            return None
+        with open(os.path.join(d, _JSON_PAYLOAD)) as f:
+            return json.load(f)
+
+    # -- introspection -------------------------------------------------------
+    def entries(self, category: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Manifests of all valid artifacts (debugging / GC tooling)."""
+        out = []
+        cats = [category] if category else sorted(
+            d for d in os.listdir(self.root)
+            if os.path.isdir(os.path.join(self.root, d)))
+        for cat in cats:
+            cat_dir = os.path.join(self.root, cat)
+            if not os.path.isdir(cat_dir):
+                continue
+            for key in sorted(os.listdir(cat_dir)):
+                d = os.path.join(cat_dir, key)
+                if key.startswith("tmp.") or not self._valid(d):
+                    continue
+                with open(os.path.join(d, "manifest.json")) as f:
+                    m = json.load(f)
+                m["category"] = cat
+                out.append(m)
+        return out
+
+
+def _file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()

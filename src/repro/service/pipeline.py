@@ -1,0 +1,146 @@
+"""The profile → model → select pipeline as one call (DESIGN.md §7).
+
+``optimise(net, platform)`` is the deployment loop the paper argues for:
+arrive on a platform, obtain performance models (warm-loaded, natively
+trained, or calibrated from another platform's base model), solve the PBQP,
+and hand back an assignment ready for the plan compiler / serving front end.
+Everything an example used to hand-wire in ~40 lines is this one function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.perfmodel import PerfModel
+from repro.core.selection import SelectionResult, select
+from repro.models import cnn_zoo
+from repro.models.cnn_zoo import CNNSpec
+from repro.service.artifacts import ArtifactStore
+from repro.service.platforms import (Platform, PlatformModels, get_platform)
+
+
+@dataclasses.dataclass
+class OptimisedNetwork:
+    """Everything downstream layers need about one optimised network."""
+
+    net: str
+    spec: CNNSpec
+    platform: Platform
+    models: PlatformModels
+    assignment: Dict[int, str]        # node idx -> primitive / layout
+    columns: List[str]                # columns selection chose from
+    predicted_cost_s: float           # model-predicted per-image runtime
+    selection: Optional[SelectionResult]   # None when warm-loaded
+    warm_models: bool
+    warm_selection: bool
+    seconds: float                    # total optimise() wall time
+
+    @property
+    def warm(self) -> bool:
+        return self.warm_models and self.warm_selection
+
+    @classmethod
+    def from_assignment(cls, spec: CNNSpec, assignment: Dict[int, str], *,
+                        net: Optional[str] = None,
+                        platform: Optional[Platform] = None,
+                        models: Optional[PlatformModels] = None,
+                        predicted_cost_s: float = float("nan"),
+                        columns: Optional[List[str]] = None) -> "OptimisedNetwork":
+        """Wrap an externally-produced assignment (heuristic baselines,
+        hand-written plans) so it can be registered with the server."""
+        return cls(net=net or spec.name, spec=spec, platform=platform,
+                   models=models, assignment=dict(assignment),
+                   columns=list(columns) if columns else [],
+                   predicted_cost_s=predicted_cost_s, selection=None,
+                   warm_models=False, warm_selection=False, seconds=0.0)
+
+
+def _spec_fingerprint(spec: CNNSpec) -> str:
+    """Content hash of the network topology — selection artifacts must go
+    stale when a zoo net's definition changes, not just when models do."""
+    import hashlib
+    blob = repr((spec.name, [dataclasses.astuple(n) for n in spec.nodes],
+                 sorted(spec.edges)))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _executable_columns(model: PerfModel) -> List[str]:
+    from repro.primitives.conv import RUNNABLE
+    cols = [c for c in model.columns if c in RUNNABLE]
+    if not cols:
+        raise ValueError("model has no runnable columns; cannot build an "
+                         "executable assignment")
+    return cols
+
+
+def optimise(net: Union[str, CNNSpec],
+             platform: Union[str, Platform],
+             *,
+             store: Optional[ArtifactStore] = None,
+             models: Optional[PlatformModels] = None,
+             base: Optional[Union[PerfModel, PlatformModels]] = None,
+             budget: float = 0.01,
+             mode: str = "auto",
+             kind: str = "nn2",
+             executable: bool = False,
+             seed: int = 0,
+             max_iters: Optional[int] = None,
+             **platform_kwargs) -> OptimisedNetwork:
+    """Optimise ``net`` for ``platform`` end to end.
+
+    * ``models`` given => reuse already-obtained performance models.
+    * ``base`` given => transfer path: ``platform.calibrate(base, budget,
+      mode)`` (paper §4.4) instead of native pretraining.
+    * ``store`` given => models AND the selection warm-start from disk when
+      the same (platform, columns, dataset, model) was optimised before.
+    * ``executable=True`` restricts selection to runnable primitives so the
+      assignment can be compiled and served on this host.
+    """
+    t0 = time.perf_counter()
+    platform = get_platform(platform, **platform_kwargs)
+    spec = cnn_zoo.get(net) if isinstance(net, str) else net
+    net_name = spec.name
+
+    # max_iters=None defers to each verb's own default (pretrain 4000,
+    # calibrate 2000); an explicit value is honoured verbatim
+    iters = {} if max_iters is None else {"max_iters": max_iters}
+    if models is None:
+        if base is not None:
+            models = platform.calibrate(base, budget, mode=mode, store=store,
+                                        seed=seed, **iters)
+        else:
+            models = platform.pretrain(kind, store=store, seed=seed, **iters)
+
+    columns = _executable_columns(models.prim) if executable else list(models.prim.columns)
+    provider = models.provider(columns=columns if executable else None)
+
+    sel_fields = {"artifact": "selection", "net": net_name,
+                  "spec": _spec_fingerprint(spec),
+                  "platform": platform.fingerprint(),
+                  "models": models.fingerprint(), "columns": columns}
+    stored = store.get_json("selections", sel_fields) if store else None
+    if stored is not None:
+        assignment = {int(k): v for k, v in stored["assignment"].items()}
+        return OptimisedNetwork(
+            net=net_name, spec=spec, platform=platform, models=models,
+            assignment=assignment, columns=columns,
+            predicted_cost_s=stored["predicted_cost_s"], selection=None,
+            warm_models=models.warm, warm_selection=True,
+            seconds=time.perf_counter() - t0)
+
+    sel = select(spec, provider)
+    if store is not None:
+        store.put_json("selections", sel_fields, {
+            "assignment": {str(k): v for k, v in sel.assignment.items()},
+            "predicted_cost_s": sel.solver_cost,
+            "optimal": sel.optimal,
+            "estimate_seconds": sel.estimate_seconds,
+            "solver_seconds": sel.solver_seconds,
+        })
+    return OptimisedNetwork(
+        net=net_name, spec=spec, platform=platform, models=models,
+        assignment=sel.assignment, columns=columns,
+        predicted_cost_s=sel.solver_cost, selection=sel,
+        warm_models=models.warm, warm_selection=False,
+        seconds=time.perf_counter() - t0)

@@ -1,0 +1,352 @@
+"""Platform abstraction — service layer L1 (DESIGN.md §7.1).
+
+The paper's promise is that porting a CNN to a *new* computing system costs
+seconds: profile a small sample, transfer the performance model (§4.4),
+re-solve the PBQP. Before this layer, every example and benchmark hand-wired
+``simulate_*_dataset`` → ``fit_perf_model`` → provider → ``select``; this
+module makes "a platform" a first-class object with exactly three verbs:
+
+  * ``profile(configs)`` / ``profile_dlt(pairs)`` — the expensive truth
+    source (analytic simulator or real host CPU, same matrix contract);
+  * ``cost_provider()`` — ground-truth costs for selection/scoring;
+  * ``calibrate(base_model, budget)`` — the §4.4 transfer path: profile a
+    ``budget``-sized sample, factor-correct or fine-tune ``base_model``,
+    return models ready for a ``ModelProvider``.
+
+``pretrain()`` covers the native path (train from this platform's full
+dataset). Both consult an ``ArtifactStore`` when given one, so repeat runs
+warm-start in milliseconds instead of retraining (Table 4, operational).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.perfmodel import PerfModel, factor_correct, fit_perf_model
+from repro.core.selection import (CostProvider, MeasuredProvider,
+                                  ModelProvider, SimulatedProvider)
+from repro.profiler.dataset import (PerfDataset, simulate_dlt_dataset,
+                                    simulate_primitive_dataset)
+
+
+# ---------------------------------------------------------------------------
+# Model bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlatformModels:
+    """A (primitive, DLT) performance-model pair bound to a platform —
+    everything selection needs, plus provenance for artifact keying."""
+
+    prim: PerfModel
+    dlt: PerfModel
+    platform: str                 # fingerprint of the platform they model
+    mode: str                     # "native" | "factor" | "finetune"
+    budget: Optional[float] = None   # calibration sample budget (None = full)
+    warm: bool = False            # True = loaded from the artifact store
+    seconds: float = 0.0          # wall time of pretrain()/calibrate()
+
+    def provider(self, columns: Optional[Sequence[str]] = None) -> ModelProvider:
+        return ModelProvider(self.prim, self.dlt, columns=columns)
+
+    def fingerprint(self) -> str:
+        return f"{self.prim.fingerprint()}-{self.dlt.fingerprint()}"
+
+
+# ---------------------------------------------------------------------------
+# Platform interface
+# ---------------------------------------------------------------------------
+
+class Platform(abc.ABC):
+    """One optimisation target: profile it (dearly), provide ground-truth
+    costs, and calibrate a transferred performance model onto it."""
+
+    name: str
+
+    # -- profiling ---------------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def columns(self) -> List[str]:
+        """Primitive columns this platform can profile."""
+
+    @abc.abstractmethod
+    def profile(self, configs: np.ndarray) -> np.ndarray:
+        """(L, 5) configs -> (L, P) runtimes (NaN = inapplicable)."""
+
+    @abc.abstractmethod
+    def profile_dlt(self, pairs: np.ndarray) -> np.ndarray:
+        """(M, 2) (c, im) pairs -> (M, 6) non-identity DLT runtimes."""
+
+    @abc.abstractmethod
+    def primitive_dataset(self) -> PerfDataset:
+        """Full profiled primitive dataset (cached per instance)."""
+
+    @abc.abstractmethod
+    def dlt_dataset(self) -> PerfDataset:
+        """Full profiled DLT dataset (cached per instance)."""
+
+    # -- selection ---------------------------------------------------------
+    @abc.abstractmethod
+    def cost_provider(self) -> CostProvider:
+        """Ground-truth cost provider (plays 'profiled on the device')."""
+
+    @abc.abstractmethod
+    def fingerprint(self) -> str:
+        """Stable identity for artifact keys (config, not measurements)."""
+
+    # -- model path (shared) ----------------------------------------------
+    def _model_fields(self, role: str, kind: str, **extra) -> dict:
+        ds = self.primitive_dataset() if role == "prim" else self.dlt_dataset()
+        return {"platform": self.fingerprint(), "columns": list(ds.columns),
+                "dataset": ds.fingerprint(), "model_kind": kind,
+                "role": role, **extra}
+
+    def pretrain(self, kind: str = "nn2", *, store=None, seed: int = 0,
+                 max_iters: int = 4000, patience: int = 250,
+                 dlt_kind: str = "lin", dlt_max_iters: int = 1500) -> PlatformModels:
+        """Native path: train (or warm-load) performance models from this
+        platform's full profiled dataset."""
+        t0 = time.perf_counter()
+
+        def train_prim() -> PerfModel:
+            tr, va, _ = self.primitive_dataset().split()
+            return fit_perf_model(kind, tr.feats, tr.times, va.feats, va.times,
+                                  columns=self.primitive_dataset().columns,
+                                  seed=seed, max_iters=max_iters,
+                                  patience=patience)
+
+        prim, prim_warm = _get_or_train(
+            store, self._model_fields("prim", kind, seed=seed,
+                                      max_iters=max_iters, patience=patience,
+                                      mode="native"),
+            train_prim)
+        dlt, dlt_warm = self._native_dlt(dlt_kind, seed, dlt_max_iters, store)
+        return PlatformModels(prim, dlt, self.fingerprint(), "native",
+                              warm=prim_warm and dlt_warm,
+                              seconds=time.perf_counter() - t0)
+
+    def calibrate(self, base: Union[PerfModel, PlatformModels],
+                  budget: float = 0.01, *, mode: str = "auto", store=None,
+                  seed: int = 0, max_iters: int = 2000, patience: int = 150,
+                  dlt_kind: str = "lin",
+                  dlt_max_iters: int = 1500) -> PlatformModels:
+        """Transfer path (§4.4): profile a ``budget`` sample of this platform
+        (fraction if < 1, row count if >= 1), then correct ``base`` onto it.
+
+        ``mode``: "factor" multiplies per-primitive geometric-mean ratios
+        (cheapest), "finetune" continues training at 10x-lowered LR, "auto"
+        picks finetune when the sample is big enough to not overfit, and
+        "scratch" ignores ``base`` and trains on the sample alone (the
+        paper's transfer-study control).
+        """
+        t0 = time.perf_counter()
+        base_prim = base.prim if isinstance(base, PlatformModels) else base
+        # a wide base (e.g. the 49-column simulator model) transfers onto a
+        # platform that profiles fewer primitives by slicing its output head
+        # to this platform's columns — positions must match the sample matrix
+        target_cols = list(self.primitive_dataset().columns)
+        if list(base_prim.columns) != target_cols:
+            base_prim = base_prim.subset_columns(target_cols)
+        tr, va, _ = self.primitive_dataset().split()
+        frac = budget if budget < 1 else min(1.0, budget / max(tr.n, 1))
+        sample = tr.subsample(frac, seed=seed)
+        if mode == "auto":
+            mode = "finetune" if sample.n >= 24 else "factor"
+        if mode not in ("factor", "finetune", "scratch"):
+            raise ValueError(f"unknown calibration mode {mode!r}")
+
+        def train_prim() -> PerfModel:
+            if mode == "factor":
+                return factor_correct(base_prim, sample.feats, sample.times)
+            # fine-tuning continues gradient training, so a factor-corrected
+            # base unwraps to the underlying trained network
+            from repro.core.perfmodel import FactorCorrectedModel
+            ft_base = (base_prim.base if isinstance(base_prim, FactorCorrectedModel)
+                       else base_prim)
+            return fit_perf_model(ft_base.kind, sample.feats, sample.times,
+                                  va.feats, va.times,
+                                  columns=self.primitive_dataset().columns,
+                                  seed=seed,
+                                  base=None if mode == "scratch" else ft_base,
+                                  max_iters=max_iters, patience=patience)
+
+        fields = self._model_fields(
+            "prim", base_prim.kind, seed=seed, mode=mode, budget=budget,
+            sample=sample.fingerprint(),
+            base=None if mode == "scratch" else base_prim.fingerprint(),
+            max_iters=max_iters, patience=patience)
+        prim, prim_warm = _get_or_train(store, fields, train_prim)
+        # the DLT model is 2-feature/6-column — native training is cheap, so
+        # it is not worth transferring; it is also independent of the
+        # calibration sample, hence trained at a fixed seed and memoised
+        dlt, dlt_warm = self._native_dlt(dlt_kind, 0, dlt_max_iters, store)
+        return PlatformModels(prim, dlt, self.fingerprint(), mode,
+                              budget=budget, warm=prim_warm and dlt_warm,
+                              seconds=time.perf_counter() - t0)
+
+    def _native_dlt(self, kind: str, seed: int, max_iters: int, store):
+        """Native DLT model, memoised per platform instance (one training
+        per (kind, seed, iters) no matter how many calibrations ask)."""
+        memo = getattr(self, "_dlt_models", None)
+        if memo is None:
+            memo = self._dlt_models = {}
+        key = (kind, seed, max_iters)
+        if key in memo:
+            return memo[key], True
+
+        def train() -> PerfModel:
+            ds = self.dlt_dataset()
+            tr, va, _ = ds.split()
+            return fit_perf_model(kind, tr.feats, tr.times, va.feats,
+                                  va.times, columns=ds.columns, seed=seed,
+                                  max_iters=max_iters)
+
+        model, warm = _get_or_train(
+            store, self._model_fields("dlt", kind, seed=seed,
+                                      max_iters=max_iters, mode="native"),
+            train)
+        memo[key] = model
+        return model, warm
+
+
+def _get_or_train(store, fields: dict, train_fn):
+    """(model, warm) — through the artifact store when one is given."""
+    if store is None:
+        return train_fn(), False
+    return store.get_or_train(fields, train_fn)
+
+
+# ---------------------------------------------------------------------------
+# Concrete platforms
+# ---------------------------------------------------------------------------
+
+class SimulatedPlatform(Platform):
+    """Analytic platform simulator (intel/amd/arm) behind the Platform
+    interface — full-scale datasets, deterministic noise, instant profiling."""
+
+    def __init__(self, name: str, *, noisy: bool = True,
+                 max_triplets: Optional[int] = None):
+        from repro.profiler.simulators import PLATFORMS
+        if name not in PLATFORMS:
+            raise KeyError(f"unknown simulated platform {name!r}; "
+                           f"have {sorted(PLATFORMS)}")
+        self.name = name
+        self.noisy = noisy
+        self.max_triplets = max_triplets
+        self._plat = PLATFORMS[name]
+        self._prim_ds: Optional[PerfDataset] = None
+        self._dlt_ds: Optional[PerfDataset] = None
+
+    @property
+    def columns(self) -> List[str]:
+        from repro.primitives.conv import PRIMITIVE_NAMES
+        return list(PRIMITIVE_NAMES)
+
+    def profile(self, configs: np.ndarray) -> np.ndarray:
+        from repro.profiler.simulators import primitive_time_batch
+        return primitive_time_batch(self._plat, np.asarray(configs, np.int64),
+                                    noisy=self.noisy)
+
+    def profile_dlt(self, pairs: np.ndarray) -> np.ndarray:
+        from repro.profiler.simulators import dlt_time_batch
+        return dlt_time_batch(self._plat, np.asarray(pairs, np.int64),
+                              noisy=self.noisy)
+
+    def primitive_dataset(self) -> PerfDataset:
+        if self._prim_ds is None:
+            self._prim_ds = simulate_primitive_dataset(
+                self.name, max_triplets=self.max_triplets, noisy=self.noisy)
+        return self._prim_ds
+
+    def dlt_dataset(self) -> PerfDataset:
+        if self._dlt_ds is None:
+            self._dlt_ds = simulate_dlt_dataset(self.name, noisy=self.noisy)
+        return self._dlt_ds
+
+    def cost_provider(self) -> SimulatedProvider:
+        return SimulatedProvider(self.name, noisy=self.noisy)
+
+    def fingerprint(self) -> str:
+        return f"sim/{self.name}/noisy={int(self.noisy)}/mt={self.max_triplets}"
+
+
+class HostPlatform(Platform):
+    """This container's real CPU behind the Platform interface — reduced
+    scale, genuinely expensive profiling (the cost the paper eliminates)."""
+
+    name = "host"
+
+    def __init__(self, *, configs: Optional[Sequence] = None,
+                 dlt_pairs: Optional[Sequence] = None,
+                 primitives: Optional[Sequence[str]] = None,
+                 repeats: int = 9):
+        from repro.primitives.conv import RUNNABLE
+        self.repeats = repeats
+        self._primitives = list(primitives) if primitives is not None else list(RUNNABLE)
+        self._configs = [tuple(map(int, c)) for c in configs] if configs is not None else None
+        self._dlt_pairs = [tuple(map(int, p)) for p in dlt_pairs] if dlt_pairs is not None else None
+        self._prim_ds: Optional[PerfDataset] = None
+        self._dlt_ds: Optional[PerfDataset] = None
+
+    @property
+    def columns(self) -> List[str]:
+        return list(self._primitives)
+
+    def profile(self, configs: np.ndarray) -> np.ndarray:
+        from repro.profiler import host
+        return host.profile_primitive_batch(np.asarray(configs, int),
+                                            self._primitives,
+                                            repeats=self.repeats)
+
+    def profile_dlt(self, pairs: np.ndarray) -> np.ndarray:
+        from repro.profiler import host
+        return host.profile_dlt_batch(np.asarray(pairs, int),
+                                      repeats=self.repeats)
+
+    def _default_pools(self):
+        from repro.profiler import pools
+        configs = self._configs if self._configs is not None else \
+            pools.config_pool(max_triplets=12)
+        dlt_pairs = self._dlt_pairs if self._dlt_pairs is not None else \
+            pools.dlt_pool(max_pairs=12)
+        return configs, dlt_pairs
+
+    def primitive_dataset(self) -> PerfDataset:
+        if self._prim_ds is None:
+            from repro.profiler import host
+            configs, _ = self._default_pools()
+            self._prim_ds = host.profile_primitive_dataset(
+                configs, primitives=self._primitives, repeats=self.repeats)
+        return self._prim_ds
+
+    def dlt_dataset(self) -> PerfDataset:
+        if self._dlt_ds is None:
+            from repro.profiler import host
+            _, dlt_pairs = self._default_pools()
+            self._dlt_ds = host.profile_dlt_dataset(dlt_pairs,
+                                                    repeats=self.repeats)
+        return self._dlt_ds
+
+    def cost_provider(self) -> MeasuredProvider:
+        return MeasuredProvider(repeats=self.repeats, columns=self._primitives)
+
+    def fingerprint(self) -> str:
+        import hashlib
+        cols = hashlib.sha256("|".join(self._primitives).encode()).hexdigest()[:8]
+        return f"host-cpu/r={self.repeats}/cols={cols}"
+
+
+def get_platform(spec: Union[str, Platform], **kwargs) -> Platform:
+    """'intel' / 'amd' / 'arm' -> SimulatedPlatform, 'host' -> HostPlatform;
+    a Platform instance passes through (kwargs then disallowed)."""
+    if isinstance(spec, Platform):
+        if kwargs:
+            raise TypeError("cannot re-configure an existing Platform")
+        return spec
+    if spec == "host":
+        return HostPlatform(**kwargs)
+    return SimulatedPlatform(spec, **kwargs)

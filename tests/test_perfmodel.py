@@ -93,11 +93,65 @@ def test_factor_correction_fixes_constant_scale():
     assert m.mdrae(f[320:], t_target[320:]) > 0.5
 
 
-def test_save_load_roundtrip(tmp_path):
+@pytest.mark.parametrize("kind", ["lin", "nn1", "nn2", "factor-lin", "factor-nn2"])
+def test_save_load_roundtrip(tmp_path, kind):
     rng = np.random.default_rng(3)
     f, t = _synthetic(rng)
-    m = fit_perf_model("lin", f[:300], t[:300], f[300:], t[300:])
-    p = str(tmp_path / "model.pkl")
+    base_kind = kind.removeprefix("factor-")
+    m = fit_perf_model(base_kind, f[:300], t[:300], f[300:], t[300:],
+                       max_iters=60, patience=40)
+    if kind.startswith("factor-"):
+        m = factor_correct(m, f[:40], t[:40] * 3.7)
+    p = str(tmp_path / "model.npz")
     m.save(p)
     m2 = PerfModel.load(p)
+    assert m2.kind == kind
+    assert list(m2.columns) == list(m.columns)
+    # byte-identical parameters and predictions — a factor-corrected model
+    # must round-trip as factor-corrected (log_factor preserved)
+    s1, s2 = m.to_state(), m2.to_state()
+    assert s1["header"] == s2["header"]
+    assert sorted(s1["arrays"]) == sorted(s2["arrays"])
+    for name in s1["arrays"]:
+        np.testing.assert_array_equal(s1["arrays"][name], s2["arrays"][name])
     np.testing.assert_allclose(m.predict(f[:10]), m2.predict(f[:10]), rtol=1e-6)
+
+
+def test_save_is_not_pickle(tmp_path):
+    rng = np.random.default_rng(4)
+    f, t = _synthetic(rng, n=80)
+    m = fit_perf_model("lin", f[:60], t[:60], f[60:], t[60:])
+    p = str(tmp_path / "model.npz")
+    m.save(p)
+    with open(p, "rb") as fh:
+        magic = fh.read(2)
+    assert magic == b"PK"       # npz = zip archive, not a pickle stream
+
+
+@pytest.mark.parametrize("kind", ["lin", "nn1", "nn2", "factor-lin"])
+def test_subset_columns_matches_sliced_predictions(kind):
+    rng = np.random.default_rng(5)
+    f, t = _synthetic(rng, n=120)
+    base_kind = kind.removeprefix("factor-")
+    m = fit_perf_model(base_kind, f[:90], t[:90], f[90:], t[90:],
+                       columns=["a", "b", "c"], max_iters=60, patience=40)
+    if kind.startswith("factor-"):
+        m = factor_correct(m, f[:20], t[:20] * 2.0)
+    sub = m.subset_columns(["c", "a"])
+    assert list(sub.columns) == ["c", "a"] and sub.n_outputs == 2
+    assert sub.kind == kind
+    full = m.predict(f[:12])
+    np.testing.assert_allclose(sub.predict(f[:12]), full[:, [2, 0]],
+                               rtol=1e-5)
+    assert m.subset_columns(["a", "b", "c"]) is m       # no-op passthrough
+    with pytest.raises(ValueError):
+        m.subset_columns(["a", "z"])
+
+
+def test_fingerprint_ignores_wall_clock():
+    rng = np.random.default_rng(6)
+    f, t = _synthetic(rng, n=80)
+    m = fit_perf_model("lin", f[:60], t[:60], f[60:], t[60:])
+    fp = m.fingerprint()
+    m.train_seconds = m.train_seconds + 123.0
+    assert m.fingerprint() == fp

@@ -64,3 +64,37 @@ def test_build_pbqp_edge_costs_are_dlt_times(provider):
     assert m[i, j] == 0.0
     k = names.index("im2col-copy-atb-ik")    # hwc out
     assert m[k, j] > 0.0                     # hwc -> chw costs time
+
+
+def test_network_cost_prebuilt_graph_matches_and_requires_source(provider):
+    spec = cnn_zoo.get("alexnet")
+    sel = select(spec, provider)
+    g = build_pbqp(spec, provider)
+    direct = network_cost(spec, sel.assignment, provider)
+    assert network_cost(spec, sel.assignment, graph=g) == pytest.approx(direct)
+    # a prebuilt graph amortises O(build) across a Fig-7 scoring loop
+    for _ in range(3):
+        assert network_cost(spec, sel.assignment, graph=g) == pytest.approx(direct)
+    with pytest.raises(TypeError):
+        network_cost(spec, sel.assignment)
+
+
+def test_model_provider_column_subset(provider):
+    from repro.core.perfmodel import fit_perf_model
+    from repro.profiler.dataset import simulate_primitive_dataset, simulate_dlt_dataset
+    ds = simulate_primitive_dataset("intel", max_triplets=12)
+    dlt = simulate_dlt_dataset("intel")
+    m = fit_perf_model("lin", ds.feats, ds.times, ds.feats[:4], ds.times[:4],
+                       columns=ds.columns)
+    md = fit_perf_model("lin", dlt.feats, dlt.times, dlt.feats[:2], dlt.times[:2],
+                        columns=dlt.columns)
+    sub = ["im2col-copy-ab-ki", "direct-sum2d", "winograd-2x2-3x3"]
+    prov = ModelProvider(m, md, columns=sub)
+    assert prov.columns == sub
+    cfgs = np.array([[16, 8, 14, 1, 3], [32, 16, 7, 2, 5]], float)
+    full = ModelProvider(m, md).primitive_cost_matrix(cfgs)
+    part = prov.primitive_cost_matrix(cfgs)
+    cols = [list(m.columns).index(c) for c in sub]
+    np.testing.assert_allclose(part, full[:, cols])
+    with pytest.raises(ValueError):
+        ModelProvider(m, md, columns=["no-such-primitive"])

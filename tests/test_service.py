@@ -1,0 +1,313 @@
+"""Service layer: platform abstraction, artifact store, end-to-end transfer
+loop at tiny scale, and the serving front end (DESIGN.md §7)."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.selection import (SimulatedProvider, build_pbqp, network_cost,
+                                  select)
+from repro.models import cnn_zoo
+from repro.service import (ArtifactStore, OptimisedNetwork, OptimisedServer,
+                           get_platform, optimise)
+from repro.service.platforms import HostPlatform, SimulatedPlatform
+
+
+# ---------------------------------------------------------------------------
+# Platform abstraction
+# ---------------------------------------------------------------------------
+
+def test_get_platform_dispatch():
+    assert isinstance(get_platform("intel"), SimulatedPlatform)
+    assert isinstance(get_platform("host"), HostPlatform)
+    p = get_platform("arm", max_triplets=5)
+    assert get_platform(p) is p
+    with pytest.raises(KeyError):
+        get_platform("riscv")
+    with pytest.raises(TypeError):
+        get_platform(p, max_triplets=3)
+
+
+def test_simulated_platform_profile_matches_provider():
+    plat = get_platform("amd", max_triplets=5)
+    prov = plat.cost_provider()
+    cfgs = np.array([[16, 8, 14, 1, 3], [64, 32, 7, 2, 5]])
+    np.testing.assert_array_equal(plat.profile(cfgs),
+                                  prov.primitive_cost_matrix(cfgs))
+    pairs = np.array([[16, 14], [64, 7]])
+    np.testing.assert_array_equal(plat.profile_dlt(pairs),
+                                  prov.dlt_cost_matrix(pairs))
+
+
+def test_platform_datasets_cached_and_fingerprinted():
+    plat = get_platform("intel", max_triplets=5)
+    ds1 = plat.primitive_dataset()
+    assert plat.primitive_dataset() is ds1            # per-instance cache
+    # deterministic simulator noise => identical fingerprint across instances
+    ds2 = get_platform("intel", max_triplets=5).primitive_dataset()
+    assert ds1.fingerprint() == ds2.fingerprint()
+    assert ds1.fingerprint() != plat.dlt_dataset().fingerprint()
+    assert get_platform("arm", max_triplets=5).primitive_dataset().fingerprint() \
+        != ds1.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# Artifact store
+# ---------------------------------------------------------------------------
+
+def _tiny_model(seed=0):
+    from repro.core.perfmodel import fit_perf_model
+    rng = np.random.default_rng(seed)
+    f = np.exp(rng.uniform(0, 3, (60, 5)))
+    t = np.exp(np.log(f) @ rng.uniform(0.5, 2.0, (5, 3))) * 1e-6
+    return fit_perf_model("lin", f[:40], t[:40], f[40:], t[40:])
+
+
+def test_artifact_store_model_roundtrip_and_miss(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    m = _tiny_model()
+    fields = {"platform": "test", "columns": ["a", "b", "c"],
+              "dataset": "d0", "model_kind": "lin"}
+    assert store.get_model(fields) is None
+    store.put_model(fields, m)
+    m2 = store.get_model(fields)
+    assert m2 is not None and m2.fingerprint() == m.fingerprint()
+    # different key fields => different address => miss
+    assert store.get_model({**fields, "dataset": "d1"}) is None
+
+
+def test_artifact_store_get_or_train_warm_flag(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    fields = {"k": 1}
+    calls = []
+
+    def train():
+        calls.append(1)
+        return _tiny_model()
+
+    m1, warm1 = store.get_or_train(fields, train)
+    m2, warm2 = store.get_or_train(fields, train)
+    assert (warm1, warm2) == (False, True)
+    assert len(calls) == 1
+    assert m1.fingerprint() == m2.fingerprint()
+
+
+def test_artifact_store_rejects_corrupt_payload(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    fields = {"k": "corrupt"}
+    path = store.put_model(fields, _tiny_model())
+    with open(os.path.join(path, "model.npz"), "r+b") as f:
+        f.write(b"garbage")                     # checksum now mismatches
+    assert store.get_model(fields) is None      # invisible, not an exception
+
+
+def test_artifact_store_json_and_entries(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    obj = {"assignment": {"0": "winograd-2-3"}, "cost": 1e-3}
+    store.put_json("selections", {"net": "x"}, obj)
+    assert store.get_json("selections", {"net": "x"}) == obj
+    assert store.get_json("selections", {"net": "y"}) is None
+    store.put_model({"m": 1}, _tiny_model())
+    cats = {e["category"] for e in store.entries()}
+    assert cats == {"models", "selections"}
+
+
+# ---------------------------------------------------------------------------
+# End-to-end transfer loop (tiny scale) — the paper's deployment story
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def transfer_setup(tmp_path_factory):
+    """Pretrain on intel once, calibrate onto arm with a 1% sample."""
+    store = ArtifactStore(str(tmp_path_factory.mktemp("artifacts")))
+    intel = get_platform("intel", max_triplets=40)
+    base = intel.pretrain("nn2", store=store, max_iters=800)
+    arm = get_platform("arm", max_triplets=40)
+    opt = optimise("alexnet", arm, store=store, base=base, mode="factor")
+    return store, intel, arm, base, opt
+
+
+def test_transfer_selection_quality_within_bound(transfer_setup):
+    _, _, arm, base, opt = transfer_setup
+    assert base.prim.kind == "nn2"
+    assert opt.models.prim.kind == "factor-nn2"
+    truth = SimulatedProvider("arm")
+    g = build_pbqp(opt.spec, truth)
+    c_opt = select(opt.spec, truth).solver_cost
+    c_model = network_cost(opt.spec, opt.assignment, graph=g)
+    # 1%-sample factor calibration lands within 1.25x of selecting from
+    # ground-truth costs (observed ~1.00-1.08 across seeds; the paper's
+    # full-scale result is <= 1.1% — this is the tiny-scale analogue)
+    assert c_model / c_opt < 1.25
+
+
+def test_transfer_warm_start_byte_identical(transfer_setup):
+    store, intel, arm, base, opt = transfer_setup
+    base2 = intel.pretrain("nn2", store=store, max_iters=800)
+    opt2 = optimise("alexnet", arm, store=store, base=base2, mode="factor")
+    assert base2.warm and opt2.warm_models and opt2.warm_selection
+    assert opt2.assignment == opt.assignment
+    for a, b in ((base.prim, base2.prim), (opt.models.prim, opt2.models.prim),
+                 (opt.models.dlt, opt2.models.dlt)):
+        s1, s2 = a.to_state(), b.to_state()
+        assert s1["header"] == s2["header"]
+        for name in s1["arrays"]:
+            assert s1["arrays"][name].tobytes() == s2["arrays"][name].tobytes()
+
+
+def test_calibrate_modes(transfer_setup):
+    _, _, arm, base, _ = transfer_setup
+    fc = arm.calibrate(base, 0.01, mode="factor")
+    ft = arm.calibrate(base, 0.01, mode="finetune", max_iters=50)
+    sc = arm.calibrate(base, 0.01, mode="scratch", max_iters=50)
+    assert fc.prim.kind == "factor-nn2"
+    assert ft.prim.kind == "nn2" and sc.prim.kind == "nn2"
+    _, _, te = arm.primitive_dataset().split()
+    # any calibration must beat applying the intel model unchanged
+    direct = base.prim.mdrae(te.feats, te.times)
+    assert fc.prim.mdrae(te.feats, te.times) < direct
+    with pytest.raises(ValueError):
+        arm.calibrate(base, 0.01, mode="telepathy")
+
+
+def test_calibrate_wide_base_onto_narrow_platform(transfer_setup):
+    """Transferring the 49-column simulator model onto a platform that
+    profiles fewer primitives (the host CLI path) slices the base's output
+    head instead of mispairing columns positionally."""
+    from repro.primitives.conv import RUNNABLE
+    from repro.profiler.dataset import PerfDataset
+
+    _, _, _, base, _ = transfer_setup
+    narrow_cols = list(RUNNABLE)[:6]
+
+    class Narrow(SimulatedPlatform):
+        def primitive_dataset(self):
+            ds = super().primitive_dataset()
+            idx = [ds.columns.index(c) for c in narrow_cols]
+            return PerfDataset(ds.feats, ds.times[:, idx], narrow_cols,
+                               ds.feature_names, ds.platform)
+
+    plat = Narrow("arm", max_triplets=10)
+    fc = plat.calibrate(base, 0.05, mode="factor")
+    assert list(fc.prim.columns) == narrow_cols
+    cfgs = np.array([[16, 8, 14, 1, 3]], float)
+    assert fc.prim.predict(cfgs).shape == (1, 6)
+    ft = plat.calibrate(base, 0.3, mode="finetune", max_iters=30)
+    assert ft.prim.n_outputs == 6 and ft.prim.predict(cfgs).shape == (1, 6)
+
+
+# ---------------------------------------------------------------------------
+# Serving front end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_net():
+    spec = cnn_zoo.get("edge_cnn")
+    from repro.primitives.plan import heuristic_assignment
+    asg = heuristic_assignment(spec)
+    return OptimisedNetwork.from_assignment(spec, asg,
+                                            predicted_cost_s=2e-3)
+
+
+def _requests(spec, n, seed=0):
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n0.c, n0.im, n0.im)).astype(np.float32)
+
+
+def test_server_results_match_direct_plan(served_net):
+    import jax.numpy as jnp
+    from repro.primitives.executor import make_weights
+    from repro.primitives.plan import compile_plan
+
+    weights = make_weights(served_net.spec)
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9)
+    server.register(served_net, weights=weights)
+    xs = _requests(served_net.spec, 7)       # 7 requests -> batches 4 + 3
+    results = server.serve(served_net.net, xs)
+    assert all(r is not None for r in results)
+
+    plan = compile_plan(served_net.spec, served_net.assignment,
+                        (7,) + xs.shape[1:])
+    want = np.asarray(plan(jnp.asarray(xs), weights)[plan.sinks[-1]])
+    got = np.stack(results)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    s = server.stats(served_net.net)
+    assert s["dispatches"] == 2 and s["images"] == 7
+    assert s["padded"] == 1                  # 3-request tail padded to 4
+
+
+def test_server_batch_cap_follows_latency_budget(served_net):
+    # predicted 2 ms/img, 8 ms budget -> cap 4; 100 ms -> capped at max_batch
+    server = OptimisedServer(max_batch=16, latency_budget_ms=8.0)
+    assert server.register(served_net).batch_cap == 4
+    server2 = OptimisedServer(max_batch=16, latency_budget_ms=1000.0)
+    assert server2.register(served_net).batch_cap == 16
+
+
+def test_server_hot_swap(served_net):
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9)
+    server.register(served_net)
+    out1 = server.serve(served_net.net, _requests(served_net.spec, 2))
+
+    swapped = OptimisedNetwork.from_assignment(
+        served_net.spec,
+        {i: ("im2col-copy-ab-ki" if hasattr(n, "k") else "chw")
+         for i, n in enumerate(served_net.spec.nodes)},
+        net=served_net.net, predicted_cost_s=2e-3)
+    server.hot_swap(served_net.net, swapped)
+    st = server.stats(served_net.net)
+    assert st["generation"] == 1
+    out2 = server.serve(served_net.net, _requests(served_net.spec, 2))
+    assert out1[0].shape == out2[0].shape    # same topology, new primitives
+
+    other = OptimisedNetwork.from_assignment(
+        cnn_zoo.get("alexnet"), {}, net=served_net.net)
+    with pytest.raises(ValueError):
+        server.hot_swap(served_net.net, other)
+
+
+def test_server_unknown_network():
+    server = OptimisedServer()
+    with pytest.raises(KeyError):
+        server.submit("nope", np.zeros((3, 8, 8), np.float32))
+
+
+def test_server_rejects_malformed_request_shape(served_net):
+    server = OptimisedServer()
+    server.register(served_net)
+    n0 = served_net.spec.nodes[0]
+    with pytest.raises(ValueError):
+        server.submit(served_net.net, np.zeros((n0.c, n0.im), np.float32))
+
+
+def test_server_failed_dispatch_marks_tickets_not_loses_them(served_net):
+    """A dispatch that raises must mark its batch's tickets with the error
+    and keep serving the rest of the queue."""
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9)
+    server.register(served_net)
+    state = server._nets[served_net.net]
+    good_weights = state.weights
+    state.weights = {}                        # first pump: dispatch raises
+    bad = [server.submit(served_net.net, x)
+           for x in _requests(served_net.spec, 2)]
+    server.pump()
+    assert all(t.done and t.error and t.result is None for t in bad)
+    state.weights = good_weights              # recovered: serving continues
+    ok = server.serve(served_net.net, _requests(served_net.spec, 2))
+    assert all(r is not None for r in ok)
+
+
+def test_selection_artifact_keyed_by_spec_topology(tmp_path):
+    """Editing a network definition must invalidate its stored selection."""
+    from repro.service.pipeline import _spec_fingerprint
+    spec = cnn_zoo.get("edge_cnn")
+    fp = _spec_fingerprint(spec)
+    assert fp == _spec_fingerprint(cnn_zoo.get("edge_cnn"))
+    mutated = dataclasses.replace(
+        spec, nodes=[dataclasses.replace(spec.nodes[0], k=spec.nodes[0].k * 2)]
+        + spec.nodes[1:])
+    assert _spec_fingerprint(mutated) != fp
