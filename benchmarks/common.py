@@ -1,19 +1,21 @@
-"""Shared benchmark plumbing: dataset cache, artifact-store-backed trained
-models (repro.service.artifacts — warm-start across runs, content-addressed
-by platform/columns/dataset/kind instead of a mutable pickle per tag), and
-CSV output."""
+"""Shared benchmark plumbing: cached Platform objects, artifact-store-backed
+trained models, and CSV output.
+
+One keying scheme (ROADMAP): benchmarks obtain trained models through the
+platform verbs (``Platform.pretrain_prim`` / ``pretrain_dlt``), so a model
+trained by a benchmark and the same model trained by ``Platform.pretrain``
+share ONE content address in the artifact store — there is no benchmark-only
+``tag`` field, and the FAST pool trimming happens once, at platform
+construction, instead of per helper."""
 from __future__ import annotations
 
 import os
-import time
-from typing import Optional
+from typing import Dict, Optional
 
-import numpy as np
-
-from repro.core.perfmodel import PerfModel, fit_perf_model
-from repro.profiler.dataset import (PerfDataset, simulate_dlt_dataset,
-                                    simulate_primitive_dataset)
+from repro.core.perfmodel import PerfModel
+from repro.profiler.dataset import PerfDataset
 from repro.service.artifacts import ArtifactStore
+from repro.service.platforms import SimulatedPlatform
 
 ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
@@ -32,51 +34,39 @@ def store() -> Optional[ArtifactStore]:
             _store_state.append(None)
     return _store_state[0]
 
-_ds_cache = {}
+
+_platforms: Dict[str, SimulatedPlatform] = {}
 
 
-def dataset(platform: str) -> PerfDataset:
-    if ("prim", platform) not in _ds_cache:
-        _ds_cache[("prim", platform)] = simulate_primitive_dataset(
-            platform, max_triplets=60 if FAST else None)
-    return _ds_cache[("prim", platform)]
+def platform(name: str) -> SimulatedPlatform:
+    """One cached SimulatedPlatform per name. FAST trims the profiling pool
+    here — platform construction — so every downstream dataset, model
+    address, and provider agrees on the same pool."""
+    if name not in _platforms:
+        _platforms[name] = SimulatedPlatform(
+            name, max_triplets=60 if FAST else None)
+    return _platforms[name]
 
 
-def dlt_dataset(platform: str) -> PerfDataset:
-    if ("dlt", platform) not in _ds_cache:
-        _ds_cache[("dlt", platform)] = simulate_dlt_dataset(platform)
-    return _ds_cache[("dlt", platform)]
+def dataset(name: str) -> PerfDataset:
+    return platform(name).primitive_dataset()
 
 
-def trained_model(tag: str, kind: str, ds: PerfDataset, *,
+def dlt_dataset(name: str) -> PerfDataset:
+    return platform(name).dlt_dataset()
+
+
+def trained_model(kind: str, plat: str, *, role: str = "prim",
                   max_iters: int = 8000, seed: int = 0,
-                  base: Optional[PerfModel] = None,
                   cache: bool = True) -> PerfModel:
+    """Natively trained performance model for ``plat``, through the platform
+    verbs — stored at the same artifact address ``Platform.pretrain`` would
+    use (warm-started across runs when the store is writable)."""
     iters = max_iters if not FAST else min(max_iters, 2000)
-
-    def train() -> PerfModel:
-        tr, va, te = ds.split()
-        return fit_perf_model(kind, tr.feats, tr.times, va.feats, va.times,
-                              columns=ds.columns, seed=seed, base=base,
-                              max_iters=iters)
-
-    st = store()
-    if not cache or base is not None or st is None:
-        return train()
-    fields = {"artifact": "perfmodel", "tag": tag, "platform": ds.platform,
-              "columns": list(ds.columns), "dataset": ds.fingerprint(),
-              "model_kind": kind, "seed": seed, "max_iters": iters}
-    try:
-        model = st.get_model(fields)
-    except Exception:
-        model = None
-    if model is not None:
-        return model
-    model = train()
-    try:
-        st.put_model(fields, model)
-    except Exception:
-        pass                 # caching failures never kill a benchmark run
+    st = store() if cache else None
+    p = platform(plat)
+    verb = p.pretrain_dlt if role == "dlt" else p.pretrain_prim
+    model, _ = verb(kind, store=st, seed=seed, max_iters=iters)
     return model
 
 

@@ -9,7 +9,7 @@ def main() -> dict:
     ds = dlt_dataset("intel")
     _, _, te = ds.split()
     for kind in ("lin", "nn1", "nn2"):
-        m = trained_model(f"intel_dlt_{kind}", kind, ds, max_iters=4000)
+        m = trained_model(kind, "intel", role="dlt", max_iters=4000)
         overall = m.mdrae(te.feats, te.times)
         per = m.mdrae_per_column(te.feats, te.times)
         results[kind] = {"overall": overall,

@@ -26,7 +26,7 @@ def main() -> dict:
     ds = dataset("intel")
     tr, va, te = ds.split()
     for kind, iters in (("lin", 0), ("nn1", 2500), ("nn2", 8000)):
-        m = trained_model(f"intel_{kind}", kind, ds, max_iters=max(iters, 1))
+        m = trained_model(kind, "intel", max_iters=max(iters, 1))
         fam = _family_mdrae(m, te)
         overall = m.mdrae(te.feats, te.times)
         results[f"intel_{kind}"] = {"overall": overall, **fam}
@@ -35,7 +35,7 @@ def main() -> dict:
     for plat in ("amd", "arm"):
         ds_p = dataset(plat)
         _, _, te_p = ds_p.split()
-        m = trained_model(f"{plat}_nn2", "nn2", ds_p)
+        m = trained_model("nn2", plat)
         fam = _family_mdrae(m, te_p)
         overall = m.mdrae(te_p.feats, te_p.times)
         results[f"{plat}_nn2"] = {"overall": overall, **fam}

@@ -2,7 +2,7 @@
 performance-model estimates instead of measured (simulated) times."""
 from __future__ import annotations
 
-from benchmarks.common import dataset, dlt_dataset, emit, trained_model
+from benchmarks.common import emit, trained_model
 from repro.core.selection import (ModelProvider, SimulatedProvider, build_pbqp,
                                   network_cost, select)
 from repro.models import cnn_zoo
@@ -11,8 +11,8 @@ from repro.models import cnn_zoo
 def main() -> dict:
     results = {}
     for plat in ("intel", "amd", "arm"):
-        prim_m = trained_model(f"{plat}_nn2", "nn2", dataset(plat))
-        dlt_m = trained_model(f"{plat}_dlt_nn2", "nn2", dlt_dataset(plat))
+        prim_m = trained_model("nn2", plat)
+        dlt_m = trained_model("nn2", plat, role="dlt")
         model = ModelProvider(prim_m, dlt_m)
         truth = SimulatedProvider(plat)
         for net in cnn_zoo.PAPER_SELECTION_NETS:

@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import dataset, dlt_dataset, emit, trained_model
+from benchmarks.common import emit, trained_model
 from repro.core.selection import ModelProvider, SimulatedProvider, select
 from repro.models import cnn_zoo
 from repro.primitives.conv import REGISTRY
@@ -36,8 +36,8 @@ def profiling_seconds(spec, platform: str, repeats: int = 25) -> float:
 
 
 def main() -> dict:
-    prim_m = trained_model("intel_nn2", "nn2", dataset("intel"))
-    dlt_m = trained_model("intel_dlt_nn2", "nn2", dlt_dataset("intel"))
+    prim_m = trained_model("nn2", "intel")
+    dlt_m = trained_model("nn2", "intel", role="dlt")
     provider = ModelProvider(prim_m, dlt_m)
     results = {}
     for net in cnn_zoo.PAPER_SELECTION_NETS:

@@ -3,7 +3,7 @@
 (MdRAE) and the GoogLeNet-selection level."""
 from __future__ import annotations
 
-from benchmarks.common import dataset, dlt_dataset, emit, trained_model
+from benchmarks.common import dataset, emit, trained_model
 from repro.core.perfmodel import factor_correct
 from repro.core.selection import (ModelProvider, SimulatedProvider, build_pbqp,
                                   network_cost, select)
@@ -12,20 +12,20 @@ from repro.models import cnn_zoo
 
 def main() -> dict:
     results = {}
-    intel = trained_model("intel_nn2", "nn2", dataset("intel"))
-    intel_dlt = trained_model("intel_dlt_nn2", "nn2", dlt_dataset("intel"))
+    intel = trained_model("nn2", "intel")
+    intel_dlt = trained_model("nn2", "intel", role="dlt")
     spec = cnn_zoo.get("googlenet")
     for plat in ("amd", "arm"):
         ds = dataset(plat)
         tr, va, te = ds.split()
-        native = trained_model(f"{plat}_nn2", "nn2", ds)
+        native = trained_model("nn2", plat)
         sample = tr.subsample(0.01, seed=0)
         corrected = factor_correct(intel, sample.feats, sample.times)
 
         truth = SimulatedProvider(plat)
         g_truth = build_pbqp(spec, truth)        # one build, many evaluations
         c_opt = select(spec, truth).solver_cost
-        dlt_native = trained_model(f"{plat}_dlt_nn2", "nn2", dlt_dataset(plat))
+        dlt_native = trained_model("nn2", plat, role="dlt")
         for tag, model in (("intel", intel), ("factor_intel", corrected),
                            ("native", native)):
             md = model.mdrae(te.feats, te.times)

@@ -11,7 +11,7 @@ from repro.primitives.conv import FAMILIES, REGISTRY
 
 
 def main() -> dict:
-    intel = trained_model("intel_nn2", "nn2", dataset("intel"))
+    intel = trained_model("nn2", "intel")
     ds = dataset("amd")
     tr, va, te = ds.split()
     col_fam = [REGISTRY[c].family for c in ds.columns]

@@ -6,10 +6,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import FAST, dataset, emit, store, trained_model
+from benchmarks.common import (FAST, emit, platform as sim_platform, store,
+                               trained_model)
 from repro.core.selection import build_pbqp, network_cost, select
 from repro.models import cnn_zoo
-from repro.service.platforms import SimulatedPlatform
 
 FRACTIONS = (0.001, 0.01, 0.1, 0.25) if not FAST else (0.01, 0.1)
 SEEDS = (0, 1) if not FAST else (0,)
@@ -17,17 +17,16 @@ SEEDS = (0, 1) if not FAST else (0,)
 
 def main() -> dict:
     results = {}
-    intel = trained_model("intel_nn2", "nn2", dataset("intel"))
+    intel = trained_model("nn2", "intel")
     spec = cnn_zoo.get("googlenet")
     for plat in ("amd", "arm"):
-        platform = SimulatedPlatform(plat,
-                                     max_triplets=60 if FAST else None)
+        platform = sim_platform(plat)
         ds = platform.primitive_dataset()
         _, _, te = ds.split()
         truth = platform.cost_provider()
         g_truth = build_pbqp(spec, truth)    # one build, many evaluations
         c_opt = select(spec, truth).solver_cost
-        full = trained_model(f"{plat}_nn2", "nn2", ds)
+        full = trained_model("nn2", plat)
         results[f"{plat}.full"] = full.mdrae(te.feats, te.times)
         for frac in FRACTIONS:
             for mode in ("scratch", "finetune"):

@@ -7,10 +7,12 @@ whole-graph plan — reported against a fixed-primitive baseline.
 Batching knob: ``--batch N`` sets the request batch size (the server batches
 up to its perf-model-predicted cap; the compiled plan is one jitted function
 over a leading batch axis); ``--sweep`` prints an images/s curve over batch
-sizes 1/4/16.
+sizes 1/4/16. ``--workers N`` serves baseline and optimised nets through ONE
+concurrent server (N worker threads, ``--max-wait-ms`` batch windows)
+instead of sequential per-net measurements — the DESIGN.md §8 serving core.
 
 Run:  PYTHONPATH=src python examples/serve_optimized_cnn.py [--requests 32]
-      [--batch 8] [--sweep]
+      [--batch 8] [--sweep] [--workers 2] [--max-wait-ms 5]
 """
 import argparse
 import time
@@ -30,6 +32,12 @@ def main():
                     help="images per request batch (the batching knob)")
     ap.add_argument("--sweep", action="store_true",
                     help="also sweep batch sizes 1/4/16 on the optimised net")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serve both nets concurrently through this many "
+                         "worker threads (0 = sequential pump mode)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="batch window when --workers > 0: max time a lone "
+                         "request waits for batch peers")
     args = ap.parse_args()
 
     prims = ["im2col-copy-ab-ki", "im2col-scan-ab-ki", "kn2row", "mec-col",
@@ -83,6 +91,42 @@ def main():
     t_base = serve(baseline, "baseline", args.batch)
     t_opt = serve(opt, "optimised", args.batch)
     print(f"   speedup: {t_base/t_opt:.2f}x")
+
+    if args.workers:
+        print(f"== concurrent serving core: both nets, {args.workers} "
+              f"workers, {args.max_wait_ms:.0f} ms batch window ==")
+        server = OptimisedServer(max_batch=args.batch,
+                                 latency_budget_ms=float("inf"),
+                                 workers=args.workers,
+                                 max_wait_ms=args.max_wait_ms,
+                                 queue_depth=2 * args.requests * args.batch)
+        server.register(opt, weights=weights)
+        server.register(baseline, weights=weights)
+        for net in (opt.net, baseline.net):     # warm the plan cache
+            server.serve(net, rng.standard_normal(
+                (args.batch, c, im, im)).astype(np.float32))
+        tickets = []
+        t0 = time.perf_counter()
+        for _ in range(args.requests):
+            for net in (opt.net, baseline.net):
+                xs = rng.standard_normal(
+                    (args.batch, c, im, im)).astype(np.float32)
+                tickets += [server.submit(net, x) for x in xs]
+        for t in tickets:
+            t.wait(120.0)
+        dt = time.perf_counter() - t0
+        served = sum(1 for t in tickets if t.done and t.error is None)
+        dropped = len(tickets) - served
+        for net in (opt.net, baseline.net):
+            s = server.stats(net)
+            print(f"   {net:20s}: queue p50/p99 "
+                  f"{s['queue_wait_p50_ms']:6.2f}/{s['queue_wait_p99_ms']:6.2f} ms "
+                  f"({s['dispatches']} dispatches, {s['padded']} padded, "
+                  f"{s['rejected']} rejected)")
+        print(f"   both nets: {served/dt:8.1f} img/s overlapped "
+              f"({dropped} failed/rejected) "
+              f"vs {2*args.requests*args.batch/(t_base+t_opt):8.1f} sequential")
+        server.stop()
 
     if args.sweep:
         print("== throughput vs batch size (optimised assignment) ==")

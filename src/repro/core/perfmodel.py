@@ -432,8 +432,14 @@ def factor_correct(base: PerfModel,
         m = np.isfinite(actual[:, j]) & np.isfinite(pred[:, j]) & (pred[:, j] > 0)
         if m.any():
             log_factor[j] = np.mean(np.log(actual[m, j]) - np.log(pred[m, j]))
-    corrected = FactorCorrectedModel(base=base, log_factor=log_factor)
-    return corrected
+    if isinstance(base, FactorCorrectedModel):
+        # re-correction (e.g. each drift-loop generation) composes factors on
+        # the underlying trained model instead of nesting wrapper on wrapper;
+        # the correction above was computed against the already-factored
+        # predictions, so the composed factor is their sum in log space
+        return FactorCorrectedModel(base=base.base,
+                                    log_factor=base.log_factor + log_factor)
+    return FactorCorrectedModel(base=base, log_factor=log_factor)
 
 
 @dataclasses.dataclass

@@ -77,6 +77,25 @@ class PerfDataset:
         h.update(np.ascontiguousarray(self.times, np.float64).tobytes())
         return h.hexdigest()[:16]
 
+    # -- persistence (ArtifactStore dataset warm-start) ---------------------
+    def save(self, path: str) -> None:
+        """Single-file .npz round-trip (HostPlatform persists its profiled
+        datasets so real-CPU runs warm-start instead of re-measuring)."""
+        np.savez(path,
+                 feats=np.asarray(self.feats, np.float64),
+                 times=np.asarray(self.times, np.float64),
+                 columns=np.array(self.columns, dtype=np.str_),
+                 feature_names=np.array(self.feature_names, dtype=np.str_),
+                 platform=np.array(self.platform, dtype=np.str_))
+
+    @classmethod
+    def load(cls, path: str) -> "PerfDataset":
+        with np.load(path) as z:
+            return cls(feats=z["feats"], times=z["times"],
+                       columns=[str(c) for c in z["columns"]],
+                       feature_names=[str(f) for f in z["feature_names"]],
+                       platform=str(z["platform"]))
+
 
 def simulate_primitive_dataset(platform: str,
                                max_triplets: Optional[int] = None,

@@ -1,25 +1,30 @@
-"""Service layer (DESIGN.md §7): platform abstraction, artifact store, and
-serving front end — the profile → model → select → serve pipeline as a
-subsystem instead of per-script glue.
+"""Service layer (DESIGN.md §7–§8): platform abstraction, artifact store,
+and the concurrent serving core — the profile → model → select → serve →
+observe → recalibrate pipeline as a subsystem instead of per-script glue.
 
     from repro.service import ArtifactStore, OptimisedServer, get_platform, optimise
 
-    store = ArtifactStore("artifacts")
+    store = ArtifactStore("artifacts", keep=32)
     arm = get_platform("arm")
     base = get_platform("intel").pretrain("nn2", store=store)
     opt = optimise("edge_cnn", arm, store=store, base=base, executable=True)
-    server = OptimisedServer()
+    server = OptimisedServer(workers=2, max_wait_ms=5.0)
     server.register(opt)
 """
 from repro.service.artifacts import ArtifactStore, digest
-from repro.service.pipeline import OptimisedNetwork, optimise
+from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
 from repro.service.platforms import (HostPlatform, Platform, PlatformModels,
-                                     SimulatedPlatform, get_platform)
-from repro.service.server import OptimisedServer, Ticket
+                                     SimulatedPlatform, get_platform,
+                                     host_machine_id)
+from repro.service.serving import (DriftMonitor, DriftStats, NetQueue,
+                                   OptimisedServer, Ticket, WorkerPool,
+                                   make_recalibrator)
 
 __all__ = [
     "ArtifactStore", "digest",
-    "HostPlatform", "OptimisedNetwork", "OptimisedServer", "Platform",
-    "PlatformModels", "SimulatedPlatform", "Ticket",
-    "get_platform", "optimise",
+    "DriftMonitor", "DriftStats", "HostPlatform", "NetQueue",
+    "OptimisedNetwork", "OptimisedServer", "Platform", "PlatformModels",
+    "SimulatedPlatform", "Ticket", "WorkerPool",
+    "get_platform", "host_machine_id", "make_recalibrator", "optimise",
+    "reoptimise",
 ]

@@ -31,6 +31,7 @@ from repro.core.perfmodel import PerfModel
 
 _MODEL_PAYLOAD = "model.npz"
 _JSON_PAYLOAD = "data.json"
+_DATASET_PAYLOAD = "dataset.npz"
 
 
 def digest(fields: Dict[str, Any]) -> str:
@@ -41,8 +42,19 @@ def digest(fields: Dict[str, Any]) -> str:
 
 
 class ArtifactStore:
-    def __init__(self, root: str):
+    def __init__(self, root: str, keep: Optional[int] = None):
+        """``keep`` enables opportunistic per-category GC: after every put,
+        only the newest ``keep`` artifacts of that category are retained
+        (à la ``ckpt/manager.py``) — so e.g. the serving drift loop's
+        recalibration generations cannot grow the store without bound.
+        ``None`` (default) keeps everything. Retention is by age alone:
+        ``keep`` must cover the category's live working set (e.g. at least
+        2 for a HostPlatform's prim+dlt datasets, one model pair per
+        platform in ``models``) or warm-starts silently thrash."""
+        if keep is not None and keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.root = root
+        self.keep = keep
         os.makedirs(root, exist_ok=True)
 
     # -- paths -------------------------------------------------------------
@@ -78,6 +90,8 @@ class ArtifactStore:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        if self.keep is not None:
+            self.sweep(self.keep, category=category)
         return final
 
     def _valid(self, d: str) -> bool:
@@ -105,12 +119,21 @@ class ArtifactStore:
 
     def get_or_train(self, fields: Dict[str, Any],
                      train_fn: Callable[[], PerfModel]) -> Tuple[PerfModel, bool]:
-        """(model, warm): warm-load on address hit, else train and persist."""
-        m = self.get_model(fields)
+        """(model, warm): warm-load on address hit, else train and persist.
+        A store that fails to persist (read-only root) never discards the
+        freshly trained model — caching failures cost the cache, not the
+        training."""
+        try:
+            m = self.get_model(fields)
+        except OSError:
+            m = None
         if m is not None:
             return m, True
         m = train_fn()
-        self.put_model(fields, m)
+        try:
+            self.put_model(fields, m)
+        except OSError:
+            pass
         return m, False
 
     # -- JSON artifacts (selections, plan metadata) -------------------------
@@ -126,6 +149,65 @@ class ArtifactStore:
             return None
         with open(os.path.join(d, _JSON_PAYLOAD)) as f:
             return json.load(f)
+
+    # -- datasets (HostPlatform profiled-measurement warm-start) -------------
+    def put_dataset(self, fields: Dict[str, Any], dataset) -> str:
+        return self._put("datasets", fields, _DATASET_PAYLOAD, dataset.save)
+
+    def get_dataset(self, fields: Dict[str, Any]):
+        from repro.profiler.dataset import PerfDataset
+        d = self.path("datasets", fields)
+        if not self._valid(d):
+            return None
+        return PerfDataset.load(os.path.join(d, _DATASET_PAYLOAD))
+
+    def delete(self, category: str, fields: Dict[str, Any]) -> bool:
+        """Remove one artifact (e.g. a host dataset known to be stale after
+        platform drift). True if something was deleted."""
+        d = self.path(category, fields)
+        if not os.path.isdir(d):
+            return False
+        shutil.rmtree(d, ignore_errors=True)
+        return True
+
+    # -- retention -----------------------------------------------------------
+    def sweep(self, keep: int, category: Optional[str] = None) -> int:
+        """Keep the newest ``keep`` artifacts per category (manifest
+        ``created`` time; ties broken by key for determinism), delete the
+        rest plus any stale tmp dirs from crashed writers. Returns the number
+        of artifacts removed."""
+        removed = 0
+        cats = [category] if category else sorted(
+            d for d in os.listdir(self.root)
+            if os.path.isdir(os.path.join(self.root, d)))
+        for cat in cats:
+            cat_dir = os.path.join(self.root, cat)
+            if not os.path.isdir(cat_dir):
+                continue
+            aged = []
+            for key in os.listdir(cat_dir):
+                d = os.path.join(cat_dir, key)
+                # every per-entry stat/read tolerates a concurrent sweeper
+                # (e.g. a drift-recalibration thread) deleting it under us
+                try:
+                    if key.startswith("tmp."):
+                        if time.time() - os.path.getmtime(d) > 3600:
+                            shutil.rmtree(d, ignore_errors=True)
+                        continue
+                    if not self._valid(d):   # corrupt/partial: collect
+                        shutil.rmtree(d, ignore_errors=True)
+                        removed += 1
+                        continue
+                    with open(os.path.join(d, "manifest.json")) as f:
+                        created = json.load(f).get("created", 0.0)
+                except (OSError, json.JSONDecodeError):
+                    continue
+                aged.append((created, key))
+            aged.sort()
+            for _, key in aged[:-keep] if keep > 0 else []:
+                shutil.rmtree(os.path.join(cat_dir, key), ignore_errors=True)
+                removed += 1
+        return removed
 
     # -- introspection -------------------------------------------------------
     def entries(self, category: Optional[str] = None) -> List[Dict[str, Any]]:

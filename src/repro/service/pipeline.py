@@ -144,3 +144,37 @@ def optimise(net: Union[str, CNNSpec],
         predicted_cost_s=sel.solver_cost, selection=sel,
         warm_models=models.warm, warm_selection=False,
         seconds=time.perf_counter() - t0)
+
+
+def reoptimise(opt: OptimisedNetwork,
+               *,
+               sample=None,
+               budget: float = 0.05,
+               mode: str = "auto",
+               store: Optional[ArtifactStore] = None,
+               seed: int = 0,
+               max_iters: Optional[int] = None,
+               executable: Optional[bool] = None) -> OptimisedNetwork:
+    """Re-optimise an already-optimised network from fresh measurements —
+    the serving drift loop's entry point (DESIGN.md §8.3).
+
+    ``sample``: a ``PerfDataset`` of *fresh* target measurements (e.g.
+    ``platform.measure_sample()`` taken after drift was detected); when
+    given, ``platform.calibrate`` corrects the current models onto it
+    without touching any cached profiling pool. Without a sample this is a
+    plain re-calibration at ``budget`` against the platform's dataset.
+
+    ``executable``: None infers it from ``opt`` (a selection restricted to
+    fewer columns than its models was an ``executable=True`` optimise).
+    """
+    if opt.platform is None or opt.models is None:
+        raise ValueError("reoptimise needs an OptimisedNetwork produced by "
+                         "optimise() — platform and models must be attached")
+    iters = {} if max_iters is None else {"max_iters": max_iters}
+    models = opt.platform.calibrate(opt.models, budget, mode=mode,
+                                    sample=sample, store=store, seed=seed,
+                                    **iters)
+    if executable is None:
+        executable = list(opt.columns) != list(opt.models.prim.columns)
+    return optimise(opt.spec, opt.platform, models=models, store=store,
+                    executable=executable)

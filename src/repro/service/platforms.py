@@ -22,7 +22,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -105,34 +105,52 @@ class Platform(abc.ABC):
                 "dataset": ds.fingerprint(), "model_kind": kind,
                 "role": role, **extra}
 
-    def pretrain(self, kind: str = "nn2", *, store=None, seed: int = 0,
-                 max_iters: int = 4000, patience: int = 250,
-                 dlt_kind: str = "lin", dlt_max_iters: int = 1500) -> PlatformModels:
-        """Native path: train (or warm-load) performance models from this
-        platform's full profiled dataset."""
-        t0 = time.perf_counter()
+    def pretrain_prim(self, kind: str = "nn2", *, store=None, seed: int = 0,
+                      max_iters: int = 4000,
+                      patience: int = 250) -> "Tuple[PerfModel, bool]":
+        """Native primitive model: (model, warm). This is THE artifact
+        address for a natively trained primitive model on this platform —
+        benchmarks and ``pretrain`` route through it, so the same logical
+        model is stored exactly once (ROADMAP "one keying scheme")."""
 
-        def train_prim() -> PerfModel:
+        def train() -> PerfModel:
             tr, va, _ = self.primitive_dataset().split()
             return fit_perf_model(kind, tr.feats, tr.times, va.feats, va.times,
                                   columns=self.primitive_dataset().columns,
                                   seed=seed, max_iters=max_iters,
                                   patience=patience)
 
-        prim, prim_warm = _get_or_train(
+        return _get_or_train(
             store, self._model_fields("prim", kind, seed=seed,
                                       max_iters=max_iters, patience=patience,
                                       mode="native"),
-            train_prim)
-        dlt, dlt_warm = self._native_dlt(dlt_kind, seed, dlt_max_iters, store)
+            train)
+
+    def pretrain_dlt(self, kind: str = "lin", *, store=None, seed: int = 0,
+                     max_iters: int = 1500) -> "Tuple[PerfModel, bool]":
+        """Native DLT model: (model, warm) — same single-address contract as
+        ``pretrain_prim``."""
+        return self._native_dlt(kind, seed, max_iters, store)
+
+    def pretrain(self, kind: str = "nn2", *, store=None, seed: int = 0,
+                 max_iters: int = 4000, patience: int = 250,
+                 dlt_kind: str = "lin", dlt_max_iters: int = 1500) -> PlatformModels:
+        """Native path: train (or warm-load) performance models from this
+        platform's full profiled dataset."""
+        t0 = time.perf_counter()
+        prim, prim_warm = self.pretrain_prim(kind, store=store, seed=seed,
+                                             max_iters=max_iters,
+                                             patience=patience)
+        dlt, dlt_warm = self.pretrain_dlt(dlt_kind, store=store, seed=seed,
+                                          max_iters=dlt_max_iters)
         return PlatformModels(prim, dlt, self.fingerprint(), "native",
                               warm=prim_warm and dlt_warm,
                               seconds=time.perf_counter() - t0)
 
     def calibrate(self, base: Union[PerfModel, PlatformModels],
                   budget: float = 0.01, *, mode: str = "auto", store=None,
-                  seed: int = 0, max_iters: int = 2000, patience: int = 150,
-                  dlt_kind: str = "lin",
+                  sample=None, seed: int = 0, max_iters: int = 2000,
+                  patience: int = 150, dlt_kind: str = "lin",
                   dlt_max_iters: int = 1500) -> PlatformModels:
         """Transfer path (§4.4): profile a ``budget`` sample of this platform
         (fraction if < 1, row count if >= 1), then correct ``base`` onto it.
@@ -142,18 +160,32 @@ class Platform(abc.ABC):
         picks finetune when the sample is big enough to not overfit, and
         "scratch" ignores ``base`` and trains on the sample alone (the
         paper's transfer-study control).
+
+        ``sample``: a caller-supplied ``PerfDataset`` of fresh measurements
+        — the serving drift loop calibrates from what it just observed (see
+        ``measure_sample``) instead of re-profiling the platform's cached
+        pool, so a drifted platform is corrected from *post-drift* truth.
+        ``budget`` is ignored when a sample is given.
         """
         t0 = time.perf_counter()
         base_prim = base.prim if isinstance(base, PlatformModels) else base
         # a wide base (e.g. the 49-column simulator model) transfers onto a
         # platform that profiles fewer primitives by slicing its output head
         # to this platform's columns — positions must match the sample matrix
-        target_cols = list(self.primitive_dataset().columns)
+        target_cols = (list(sample.columns) if sample is not None
+                       else list(self.primitive_dataset().columns))
         if list(base_prim.columns) != target_cols:
             base_prim = base_prim.subset_columns(target_cols)
-        tr, va, _ = self.primitive_dataset().split()
-        frac = budget if budget < 1 else min(1.0, budget / max(tr.n, 1))
-        sample = tr.subsample(frac, seed=seed)
+        if sample is None:
+            tr, va, _ = self.primitive_dataset().split()
+            frac = budget if budget < 1 else min(1.0, budget / max(tr.n, 1))
+            sample = tr.subsample(frac, seed=seed)
+            va_feats, va_times = va.feats, va.times
+        else:
+            # fresh-measurement path: the sample doubles as the early-stop
+            # set (re-profiling a validation pool would defeat its cheapness)
+            budget = None
+            va_feats, va_times = sample.feats, sample.times
         if mode == "auto":
             mode = "finetune" if sample.n >= 24 else "factor"
         if mode not in ("factor", "finetune", "scratch"):
@@ -168,17 +200,24 @@ class Platform(abc.ABC):
             ft_base = (base_prim.base if isinstance(base_prim, FactorCorrectedModel)
                        else base_prim)
             return fit_perf_model(ft_base.kind, sample.feats, sample.times,
-                                  va.feats, va.times,
-                                  columns=self.primitive_dataset().columns,
+                                  va_feats, va_times,
+                                  columns=target_cols,
                                   seed=seed,
                                   base=None if mode == "scratch" else ft_base,
                                   max_iters=max_iters, patience=patience)
 
-        fields = self._model_fields(
-            "prim", base_prim.kind, seed=seed, mode=mode, budget=budget,
-            sample=sample.fingerprint(),
-            base=None if mode == "scratch" else base_prim.fingerprint(),
-            max_iters=max_iters, patience=patience)
+        extra = dict(seed=seed, mode=mode, budget=budget,
+                     sample=sample.fingerprint(),
+                     base=None if mode == "scratch" else base_prim.fingerprint(),
+                     max_iters=max_iters, patience=patience)
+        if budget is None:
+            # caller-supplied sample: key off the sample itself — touching
+            # primitive_dataset() here would re-profile the platform pool
+            fields = {"platform": self.fingerprint(), "columns": target_cols,
+                      "dataset": sample.fingerprint(),
+                      "model_kind": base_prim.kind, "role": "prim", **extra}
+        else:
+            fields = self._model_fields("prim", base_prim.kind, **extra)
         prim, prim_warm = _get_or_train(store, fields, train_prim)
         # the DLT model is 2-feature/6-column — native training is cheap, so
         # it is not worth transferring; it is also independent of the
@@ -187,6 +226,37 @@ class Platform(abc.ABC):
         return PlatformModels(prim, dlt, self.fingerprint(), mode,
                               budget=budget, warm=prim_warm and dlt_warm,
                               seconds=time.perf_counter() - t0)
+
+    def _sample_pool(self) -> Sequence:
+        """Configs ``measure_sample`` may draw from — the platform's own
+        profiling pool, so drift samples stay in-distribution for the model
+        being corrected."""
+        from repro.profiler import pools
+        return pools.config_pool()
+
+    def measure_sample(self, n: int = 16, seed: int = 0) -> PerfDataset:
+        """Freshly profile ``n`` layer configs drawn from this platform's
+        pool — bypasses every dataset cache, so the measurements reflect the
+        platform *as it is now*. This is the drift-recalibration input:
+        cheap (n ≈ 16 ≈ the paper's 1% budget) and honest about drift."""
+        cfgs = np.array(self._sample_pool(), np.int64)
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(cfgs), size=min(n, len(cfgs)), replace=False)
+        sel = cfgs[np.sort(idx)]
+        times = self.profile(sel)
+        return PerfDataset(np.asarray(sel, np.float64), times,
+                           list(self.columns), ["k", "c", "im", "s", "f"],
+                           self.name)
+
+    def invalidate_datasets(self) -> None:
+        """Drop cached profiled datasets AND the DLT-model memo so the next
+        profiling/calibration pass re-measures — e.g. after the platform is
+        known to have drifted. (The memoised DLT models were trained on the
+        pre-drift dataset; keeping them would skew the primitive-vs-DLT cost
+        balance of every re-solved PBQP.)"""
+        self._prim_ds = None
+        self._dlt_ds = None
+        self._dlt_models = {}
 
     def _native_dlt(self, kind: str, seed: int, max_iters: int, store):
         """Native DLT model, memoised per platform instance (one training
@@ -229,7 +299,8 @@ class SimulatedPlatform(Platform):
     interface — full-scale datasets, deterministic noise, instant profiling."""
 
     def __init__(self, name: str, *, noisy: bool = True,
-                 max_triplets: Optional[int] = None):
+                 max_triplets: Optional[int] = None,
+                 time_scale: float = 1.0):
         from repro.profiler.simulators import PLATFORMS
         if name not in PLATFORMS:
             raise KeyError(f"unknown simulated platform {name!r}; "
@@ -237,6 +308,12 @@ class SimulatedPlatform(Platform):
         self.name = name
         self.noisy = noisy
         self.max_triplets = max_triplets
+        # uniform slowdown applied to every simulated measurement — the
+        # drift-experiment knob ("the machine got slower"). Mutable: bump it
+        # mid-run, invalidate_datasets(), and re-profiling observes the
+        # drifted platform. Relative primitive costs (and hence the optimal
+        # assignment) are unchanged; absolute predictions scale.
+        self.time_scale = time_scale
         self._plat = PLATFORMS[name]
         self._prim_ds: Optional[PerfDataset] = None
         self._dlt_ds: Optional[PerfDataset] = None
@@ -248,30 +325,45 @@ class SimulatedPlatform(Platform):
 
     def profile(self, configs: np.ndarray) -> np.ndarray:
         from repro.profiler.simulators import primitive_time_batch
-        return primitive_time_batch(self._plat, np.asarray(configs, np.int64),
-                                    noisy=self.noisy)
+        return self.time_scale * primitive_time_batch(
+            self._plat, np.asarray(configs, np.int64), noisy=self.noisy)
 
     def profile_dlt(self, pairs: np.ndarray) -> np.ndarray:
         from repro.profiler.simulators import dlt_time_batch
-        return dlt_time_batch(self._plat, np.asarray(pairs, np.int64),
-                              noisy=self.noisy)
+        return self.time_scale * dlt_time_batch(
+            self._plat, np.asarray(pairs, np.int64), noisy=self.noisy)
 
     def primitive_dataset(self) -> PerfDataset:
         if self._prim_ds is None:
-            self._prim_ds = simulate_primitive_dataset(
+            ds = simulate_primitive_dataset(
                 self.name, max_triplets=self.max_triplets, noisy=self.noisy)
+            if self.time_scale != 1.0:
+                ds = dataclasses.replace(ds, times=ds.times * self.time_scale)
+            self._prim_ds = ds
         return self._prim_ds
 
     def dlt_dataset(self) -> PerfDataset:
         if self._dlt_ds is None:
-            self._dlt_ds = simulate_dlt_dataset(self.name, noisy=self.noisy)
+            ds = simulate_dlt_dataset(self.name, noisy=self.noisy)
+            if self.time_scale != 1.0:
+                ds = dataclasses.replace(ds, times=ds.times * self.time_scale)
+            self._dlt_ds = ds
         return self._dlt_ds
 
+    def _sample_pool(self):
+        from repro.profiler import pools
+        return pools.config_pool(max_triplets=self.max_triplets)
+
     def cost_provider(self) -> SimulatedProvider:
+        # note: unscaled — a uniform time_scale does not move the argmin, so
+        # ground-truth *selection* is scale-invariant
         return SimulatedProvider(self.name, noisy=self.noisy)
 
     def fingerprint(self) -> str:
-        return f"sim/{self.name}/noisy={int(self.noisy)}/mt={self.max_triplets}"
+        fp = f"sim/{self.name}/noisy={int(self.noisy)}/mt={self.max_triplets}"
+        if self.time_scale != 1.0:        # keep pre-drift addresses stable
+            fp += f"/ts={self.time_scale:g}"
+        return fp
 
 
 class HostPlatform(Platform):
@@ -283,9 +375,13 @@ class HostPlatform(Platform):
     def __init__(self, *, configs: Optional[Sequence] = None,
                  dlt_pairs: Optional[Sequence] = None,
                  primitives: Optional[Sequence[str]] = None,
-                 repeats: int = 9):
+                 repeats: int = 9, store=None):
         from repro.primitives.conv import RUNNABLE
         self.repeats = repeats
+        # datasets persist through this store keyed by (pool, repeats,
+        # machine id): real-CPU runs warm-start across process restarts
+        # instead of re-measuring every primitive (ROADMAP)
+        self.store = store
         self._primitives = list(primitives) if primitives is not None else list(RUNNABLE)
         self._configs = [tuple(map(int, c)) for c in configs] if configs is not None else None
         self._dlt_pairs = [tuple(map(int, p)) for p in dlt_pairs] if dlt_pairs is not None else None
@@ -315,21 +411,55 @@ class HostPlatform(Platform):
             pools.dlt_pool(max_pairs=12)
         return configs, dlt_pairs
 
+    def _sample_pool(self):
+        return self._default_pools()[0]
+
+    def _dataset_fields(self, role: str, pool) -> dict:
+        """Measurement-independent dataset address: the pool that would be
+        profiled, the repeat count, and the machine identity — NOT the
+        measured times (those are what the address retrieves)."""
+        return {"artifact": "perf_dataset", "role": role,
+                "machine": host_machine_id(), "repeats": self.repeats,
+                "pool": [list(map(int, p)) for p in pool],
+                "primitives": self._primitives if role == "prim" else None}
+
+    def _measured_dataset(self, role: str, pool) -> PerfDataset:
+        from repro.profiler import host
+        fields = self._dataset_fields(role, pool) if self.store else None
+        if self.store is not None:
+            ds = self.store.get_dataset(fields)
+            if ds is not None:
+                return ds
+        if role == "prim":
+            ds = host.profile_primitive_dataset(
+                pool, primitives=self._primitives, repeats=self.repeats)
+        else:
+            ds = host.profile_dlt_dataset(pool, repeats=self.repeats)
+        if self.store is not None:
+            self.store.put_dataset(fields, ds)
+        return ds
+
     def primitive_dataset(self) -> PerfDataset:
         if self._prim_ds is None:
-            from repro.profiler import host
             configs, _ = self._default_pools()
-            self._prim_ds = host.profile_primitive_dataset(
-                configs, primitives=self._primitives, repeats=self.repeats)
+            self._prim_ds = self._measured_dataset("prim", configs)
         return self._prim_ds
 
     def dlt_dataset(self) -> PerfDataset:
         if self._dlt_ds is None:
-            from repro.profiler import host
             _, dlt_pairs = self._default_pools()
-            self._dlt_ds = host.profile_dlt_dataset(dlt_pairs,
-                                                    repeats=self.repeats)
+            self._dlt_ds = self._measured_dataset("dlt", dlt_pairs)
         return self._dlt_ds
+
+    def invalidate_datasets(self) -> None:
+        """Also drop the PERSISTED datasets: their address is
+        measurement-independent, so without this the next profiling pass
+        would warm-load the stale pre-drift measurements from the store."""
+        super().invalidate_datasets()
+        if self.store is not None:
+            configs, dlt_pairs = self._default_pools()
+            self.store.delete("datasets", self._dataset_fields("prim", configs))
+            self.store.delete("datasets", self._dataset_fields("dlt", dlt_pairs))
 
     def cost_provider(self) -> MeasuredProvider:
         return MeasuredProvider(repeats=self.repeats, columns=self._primitives)
@@ -338,6 +468,16 @@ class HostPlatform(Platform):
         import hashlib
         cols = hashlib.sha256("|".join(self._primitives).encode()).hexdigest()[:8]
         return f"host-cpu/r={self.repeats}/cols={cols}"
+
+
+def host_machine_id() -> str:
+    """Stable identity of THIS machine for host-dataset addressing: a
+    profiled dataset is only valid on hardware that looks like the one that
+    measured it (hostname + core count + machine arch)."""
+    import platform as _stdlib_platform
+    u = _stdlib_platform.uname()
+    import os as _os
+    return f"{u.node}/{u.machine}/cpus={_os.cpu_count()}"
 
 
 def get_platform(spec: Union[str, Platform], **kwargs) -> Platform:

@@ -1,273 +1,21 @@
-"""Multi-network serving front end — service layer L3 (DESIGN.md §7.3).
-
-``OptimisedServer`` owns a request queue over any number of registered
-networks and dispatches through the whole-graph compiled plan cache
-(``repro.primitives.plan``). Two policies make it a serving system rather
-than a loop:
-
-  * **Perf-model-predicted batching.** Each network's batch cap is derived
-    from its model-predicted per-image runtime and a latency budget:
-    ``cap = budget / predicted_per_image`` (clamped to [1, max_batch] and
-    rounded down to a power of two so the plan cache stays small). Partial
-    batches are padded up to the next power-of-two bucket; the pad rows are
-    sliced off before results are delivered.
-  * **Hot swap.** When a platform recalibrates (new measurements arrive, the
-    model is corrected, the PBQP re-solved), ``hot_swap`` atomically replaces
-    a network's assignment between dispatches. In-flight queue entries are
-    unaffected; the next dispatch compiles (or cache-hits) the new plan.
-
-CLI — the documented CNN serving command (the LM decode demo lives at
-``repro.launch.lm_decode``):
+"""Back-compat shim — the serving front end grew into the concurrent serving
+core at ``repro.service.serving`` (DESIGN.md §8: per-network queues with
+timed batch windows, worker-pool dispatch, drift-triggered recalibration).
+This module keeps the documented entry points stable:
 
     python -m repro.service.server --net edge_cnn --platform arm
+    from repro.service.server import OptimisedServer, Ticket
 """
-from __future__ import annotations
+from repro.service.serving.drift import DriftMonitor, DriftStats
+from repro.service.serving.queues import NetQueue, Ticket
+from repro.service.serving.server import (OptimisedServer, main,
+                                          make_recalibrator)
+from repro.service.serving.workers import WorkerPool
 
-import argparse
-import dataclasses
-import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
-
-import numpy as np
-
-from repro.service.pipeline import OptimisedNetwork, optimise
-
-
-def _pow2_floor(n: int) -> int:
-    return 1 << (max(n, 1).bit_length() - 1)
-
-
-def _pow2_ceil(n: int) -> int:
-    return 1 << (max(n, 1) - 1).bit_length()
-
-
-@dataclasses.dataclass
-class Ticket:
-    """One queued inference request; ``result`` (or ``error``) is set by the
-    pump — a failed dispatch marks its tickets instead of losing them."""
-    net: str
-    x: np.ndarray                      # (c, im, im)
-    result: Optional[np.ndarray] = None
-    done: bool = False
-    error: Optional[str] = None
-
-
-@dataclasses.dataclass
-class _NetState:
-    opt: OptimisedNetwork
-    weights: Dict
-    batch_cap: int
-    generation: int = 0                # bumped by hot_swap
-    dispatches: int = 0
-    images: int = 0
-    padded: int = 0
-    busy_s: float = 0.0
-
-
-class OptimisedServer:
-    def __init__(self, *, max_batch: int = 32,
-                 latency_budget_ms: float = 50.0):
-        self.max_batch = max_batch
-        self.latency_budget_ms = latency_budget_ms
-        self._nets: Dict[str, _NetState] = {}
-        self._queue: Deque[Ticket] = deque()
-
-    # -- registration ------------------------------------------------------
-    def _batch_cap(self, predicted_cost_s: float,
-                   budget_ms: Optional[float]) -> int:
-        budget_s = (budget_ms if budget_ms is not None
-                    else self.latency_budget_ms) * 1e-3
-        if not np.isfinite(predicted_cost_s) or predicted_cost_s <= 0:
-            return _pow2_floor(self.max_batch)
-        cap = int(np.clip(budget_s / predicted_cost_s, 1, self.max_batch))
-        return _pow2_floor(cap)
-
-    def register(self, opt: OptimisedNetwork, *, weights: Optional[Dict] = None,
-                 latency_budget_ms: Optional[float] = None) -> _NetState:
-        """Register an optimised network for serving. ``weights`` defaults to
-        fresh ``make_weights(spec)`` (serving demo weights)."""
-        from repro.primitives.executor import make_weights
-        state = _NetState(
-            opt=opt,
-            weights=weights if weights is not None else make_weights(opt.spec),
-            batch_cap=self._batch_cap(opt.predicted_cost_s, latency_budget_ms))
-        self._nets[opt.net] = state
-        return state
-
-    def hot_swap(self, net: str, opt: OptimisedNetwork, *,
-                 latency_budget_ms: Optional[float] = None) -> None:
-        """Atomically replace ``net``'s assignment (platform recalibrated).
-        Weights are kept; the next dispatch uses the new plan."""
-        state = self._nets[net]
-        if opt.spec.name != state.opt.spec.name:
-            raise ValueError(f"hot_swap topology mismatch: {opt.spec.name!r} "
-                             f"vs {state.opt.spec.name!r}")
-        state.opt = opt
-        state.batch_cap = self._batch_cap(opt.predicted_cost_s,
-                                          latency_budget_ms)
-        state.generation += 1
-
-    # -- request path ------------------------------------------------------
-    def submit(self, net: str, x: np.ndarray) -> Ticket:
-        if net not in self._nets:
-            raise KeyError(f"network {net!r} not registered")
-        x = np.asarray(x, np.float32)
-        n0 = self._nets[net].opt.spec.nodes[0]
-        if x.shape != (n0.c, n0.im, n0.im):
-            raise ValueError(f"{net!r} expects one ({n0.c}, {n0.im}, "
-                             f"{n0.im}) image per request, got {x.shape}")
-        t = Ticket(net=net, x=x)
-        self._queue.append(t)
-        return t
-
-    def pump(self) -> int:
-        """Drain the queue: group by network, dispatch perf-model-sized
-        batches through the compiled plan. Returns the dispatch count."""
-        import jax
-        import jax.numpy as jnp
-        from repro.primitives.plan import compile_plan
-
-        by_net: Dict[str, List[Ticket]] = {}
-        while self._queue:
-            t = self._queue.popleft()
-            by_net.setdefault(t.net, []).append(t)
-
-        dispatches = 0
-        for net, tickets in by_net.items():
-            state = self._nets[net]
-            spec, asg = state.opt.spec, state.opt.assignment
-            i = 0
-            while i < len(tickets):
-                take = min(len(tickets) - i, state.batch_cap)
-                group = tickets[i:i + take]
-                i += take
-                b = _pow2_ceil(take)           # pad to the plan-cache bucket
-                xs = np.stack([t.x for t in group])
-                if b != take:
-                    pad = np.broadcast_to(xs[-1:], (b - take,) + xs.shape[1:])
-                    xs = np.concatenate([xs, pad])
-                t0 = time.perf_counter()
-                try:
-                    plan = compile_plan(spec, asg, (b,) + xs.shape[1:])
-                    out = plan(jnp.asarray(xs), state.weights)[plan.sinks[-1]]
-                    out = np.asarray(jax.block_until_ready(out))
-                except Exception as e:   # mark this batch failed, keep going
-                    for t in group:
-                        t.error, t.done = str(e), True
-                    continue
-                state.busy_s += time.perf_counter() - t0
-                for j, t in enumerate(group):
-                    t.result = out[j]
-                    t.done = True
-                state.dispatches += 1
-                state.images += take
-                state.padded += b - take
-                dispatches += 1
-        return dispatches
-
-    def serve(self, net: str, xs: Sequence[np.ndarray]) -> List[np.ndarray]:
-        """Submit a burst of requests and pump until done (sync convenience).
-        Raises if any dispatch failed."""
-        tickets = [self.submit(net, x) for x in xs]
-        self.pump()
-        failed = [t.error for t in tickets if t.error]
-        if failed:
-            raise RuntimeError(f"{len(failed)} request(s) failed: {failed[0]}")
-        return [t.result for t in tickets]
-
-    # -- introspection -----------------------------------------------------
-    def stats(self, net: str) -> Dict:
-        s = self._nets[net]
-        return {"batch_cap": s.batch_cap, "generation": s.generation,
-                "dispatches": s.dispatches, "images": s.images,
-                "padded": s.padded, "busy_s": s.busy_s,
-                "images_per_s": (s.images / s.busy_s if s.busy_s else 0.0)}
-
-    @property
-    def networks(self) -> List[str]:
-        return sorted(self._nets)
-
-
-# ---------------------------------------------------------------------------
-# CLI: optimise-on-arrival, then serve
-# ---------------------------------------------------------------------------
-
-def main(argv: Optional[Sequence[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        description="Optimise a CNN for a platform and serve it.")
-    ap.add_argument("--net", default="edge_cnn")
-    ap.add_argument("--platform", default="arm",
-                    help="intel | amd | arm (simulated) | host (real CPU)")
-    ap.add_argument("--transfer-from", default=None, metavar="PLATFORM",
-                    help="calibrate from this platform's pretrained model "
-                         "(the paper's §4.4 path) instead of native training")
-    ap.add_argument("--calib-budget", type=float, default=0.01,
-                    help="calibration sample budget (fraction or row count)")
-    ap.add_argument("--store", default="artifacts",
-                    help="artifact store root ('' disables warm-start)")
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--budget-ms", type=float, default=50.0,
-                    help="per-dispatch latency budget (sets the batch cap)")
-    ap.add_argument("--max-triplets", type=int, default=60,
-                    help="simulated profiling pool size")
-    ap.add_argument("--max-iters", type=int, default=2000)
-    ap.add_argument("--hot-swap", action="store_true",
-                    help="recalibrate mid-run and hot-swap the assignment")
-    args = ap.parse_args(argv)
-
-    from repro.service.artifacts import ArtifactStore
-    from repro.service.platforms import get_platform
-
-    store = ArtifactStore(args.store) if args.store else None
-    plat_kw = {} if args.platform == "host" else \
-        {"max_triplets": args.max_triplets}
-    platform = get_platform(args.platform, **plat_kw)
-
-    base = None
-    if args.transfer_from:
-        base_plat = get_platform(args.transfer_from,
-                                 max_triplets=args.max_triplets)
-        base = base_plat.pretrain("nn2", store=store,
-                                  max_iters=args.max_iters)
-        print(f"[serve] base model: {args.transfer_from} "
-              f"({'warm' if base.warm else 'cold'}, {base.seconds:.2f}s)")
-
-    opt = optimise(args.net, platform, store=store, base=base,
-                   budget=args.calib_budget, executable=True,
-                   max_iters=args.max_iters)
-    print(f"[serve] optimised {opt.net} for {platform.fingerprint()}: "
-          f"{'warm' if opt.warm else 'cold'} in {opt.seconds:.2f}s, "
-          f"predicted {opt.predicted_cost_s*1e3:.3f} ms/img")
-
-    server = OptimisedServer(latency_budget_ms=args.budget_ms)
-    server.register(opt)
-    print(f"[serve] batch cap {server.stats(opt.net)['batch_cap']} "
-          f"(budget {args.budget_ms:.0f} ms)")
-
-    n0 = opt.spec.nodes[0]
-    rng = np.random.default_rng(0)
-    xs = rng.standard_normal((args.requests, n0.c, n0.im, n0.im)).astype(np.float32)
-    server.serve(opt.net, xs[: min(4, args.requests)])   # warm the plan
-    t0 = time.perf_counter()
-    server.serve(opt.net, xs)
-    dt = time.perf_counter() - t0
-    s = server.stats(opt.net)
-    print(f"[serve] {args.requests} requests in {dt*1e3:.0f} ms "
-          f"({args.requests/dt:.1f} img/s, {s['dispatches']} dispatches, "
-          f"{s['padded']} padded)")
-
-    if args.hot_swap:
-        recal = optimise(args.net, platform, store=store, base=opt.models,
-                         budget=max(args.calib_budget * 5, 0.05),
-                         mode="finetune", executable=True,
-                         max_iters=args.max_iters)
-        server.hot_swap(opt.net, recal)
-        server.serve(opt.net, xs[:8])
-        print(f"[serve] hot-swapped to recalibrated assignment "
-              f"(generation {server.stats(opt.net)['generation']})")
-    return 0
-
+__all__ = [
+    "DriftMonitor", "DriftStats", "NetQueue", "OptimisedServer", "Ticket",
+    "WorkerPool", "main", "make_recalibrator",
+]
 
 if __name__ == "__main__":
     raise SystemExit(main())

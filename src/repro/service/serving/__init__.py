@@ -1,0 +1,23 @@
+"""Concurrent serving core (DESIGN.md §8): per-network queues with timed
+batch windows, a worker pool overlapping plan execution across networks, and
+drift-triggered recalibration closing the profile → model → select → serve →
+observe → recalibrate loop.
+
+    from repro.service.serving import OptimisedServer, make_recalibrator
+
+    server = OptimisedServer(workers=2, max_wait_ms=5.0,
+                             recalibrate=make_recalibrator(store=store))
+    server.register(opt)
+    ticket = server.submit(opt.net, image)
+    ticket.wait()
+"""
+from repro.service.serving.drift import DriftMonitor, DriftStats
+from repro.service.serving.queues import NetQueue, Ticket
+from repro.service.serving.server import (OptimisedServer, main,
+                                          make_recalibrator)
+from repro.service.serving.workers import WorkerPool
+
+__all__ = [
+    "DriftMonitor", "DriftStats", "NetQueue", "OptimisedServer", "Ticket",
+    "WorkerPool", "main", "make_recalibrator",
+]

@@ -1,0 +1,114 @@
+"""Calibration-drift detection from served latencies (DESIGN.md §8.3).
+
+The perf model predicts per-image runtime on the platform it was calibrated
+for; the server observes per-image runtime on the machine actually executing
+plans. Those live on different absolute scales (a simulated-arm model serves
+on a real CPU), so raw observed/predicted ratios mean nothing — what carries
+signal is the ratio *moving*. Per (network, generation) the monitor:
+
+  1. learns a **reference** log-ratio from the first ``calib_obs``
+     observations (the platform-to-host scale at calibration time),
+  2. tracks an **EWMA** of the log-ratio afterwards,
+  3. flags an **excursion** when ``|ewma - reference| > log(threshold)``.
+
+``observe`` returns True exactly once per excursion — the trigger for one
+background recalibration (``platform.calibrate`` on fresh measurements +
+re-select + ``hot_swap``). The excursion latch clears only when the ratio
+returns inside threshold/2 (hysteresis) or the generation changes (the swap
+resets the stats, because the new model has a new prediction scale).
+
+Per-observation log-ratios are clamped to ±``clamp`` so a single pathological
+dispatch (GC pause, page fault storm) cannot fake a sustained drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class DriftStats:
+    """EWMA state for one (network, generation)."""
+    generation: int
+    n: int = 0                         # observations consumed
+    ref_log: float = 0.0               # reference log-ratio (after calib)
+    ewma_log: float = 0.0
+    in_excursion: bool = False
+    triggers: int = 0                  # excursions flagged
+
+    def ratio(self) -> float:
+        """Current drift ratio: 1.0 = serving exactly as calibrated."""
+        if self.n == 0:
+            return 1.0
+        return math.exp(self.ewma_log - self.ref_log)
+
+
+class DriftMonitor:
+    """Thread-safe served-vs-predicted latency tracker for many networks."""
+
+    def __init__(self, *, threshold: float = 1.5, alpha: float = 0.25,
+                 calib_obs: int = 3, clamp: float = math.log(8.0)):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must be > 1, got {threshold}")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.threshold = threshold
+        self.alpha = alpha
+        self.calib_obs = max(int(calib_obs), 1)
+        self.clamp = clamp
+        self._stats: Dict[str, DriftStats] = {}
+        self._lock = threading.Lock()
+
+    def reset(self, net: str, generation: int) -> DriftStats:
+        """Start fresh stats for ``net`` at ``generation`` (register /
+        hot_swap: the model — and so the prediction scale — changed)."""
+        with self._lock:
+            s = DriftStats(generation=generation)
+            self._stats[net] = s
+            return s
+
+    def stats(self, net: str) -> Optional[DriftStats]:
+        with self._lock:
+            return self._stats.get(net)
+
+    def observe(self, net: str, generation: int, observed_s: float,
+                predicted_s: float) -> bool:
+        """Feed one dispatch's per-image (observed, predicted) runtimes.
+        Returns True exactly when a new excursion starts — i.e. at most once
+        between resets, the moment recalibration should be scheduled."""
+        if (not math.isfinite(observed_s) or observed_s <= 0.0
+                or not math.isfinite(predicted_s) or predicted_s <= 0.0):
+            return False
+        with self._lock:
+            s = self._stats.get(net)
+            if s is None or s.generation != generation:
+                return False           # stale: a swap raced this dispatch
+            log_r = math.log(observed_s / predicted_s)
+            s.n += 1
+            if s.n <= self.calib_obs:  # learning the reference scale
+                if s.n > 1:            # clamp here too: one pathological
+                    # dispatch must not poison the reference either
+                    log_r = min(max(log_r, s.ref_log - self.clamp),
+                                s.ref_log + self.clamp)
+                s.ref_log += (log_r - s.ref_log) / s.n
+                s.ewma_log = s.ref_log
+                return False
+            log_r = min(max(log_r, s.ref_log - self.clamp),
+                        s.ref_log + self.clamp)
+            s.ewma_log += self.alpha * (log_r - s.ewma_log)
+            excess = abs(s.ewma_log - s.ref_log)
+            if s.in_excursion:
+                if excess < math.log(self.threshold) / 2:
+                    s.in_excursion = False      # recovered without recal
+                return False
+            if excess > math.log(self.threshold):
+                s.in_excursion = True
+                s.triggers += 1
+                return True
+            return False
+
+    def ratio(self, net: str) -> float:
+        s = self.stats(net)
+        return s.ratio() if s is not None else 1.0

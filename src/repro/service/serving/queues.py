@@ -1,0 +1,120 @@
+"""Tickets and per-network request queues with timed batch windows
+(DESIGN.md §8.1).
+
+A ``Ticket`` is one queued inference request. It carries a ``threading.Event``
+so a submitting thread can block on exactly its own result while worker
+threads dispatch batches concurrently.
+
+A ``NetQueue`` is a bounded FIFO for one network. It does NOT lock itself:
+the serving core serialises all queue mutation under one lock (queues are
+tiny; a single lock keeps claim/dispatch ordering trivially correct). What it
+*does* own is the batching policy:
+
+  * dispatch when ``len(queue) >= batch_cap``            (the batch is full)
+  * or when ``oldest ticket age >= max_wait``            (the window expired)
+
+so a lone request is dispatched within ``max_wait`` instead of starving while
+the server waits for peers, and a burst still fills perf-model-sized batches.
+``push`` refuses tickets beyond ``depth`` — the backpressure signal: the
+caller marks the ticket rejected rather than queueing unbounded work the
+budgeted throughput can't drain.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+def monotonic() -> float:
+    """One clock for every queue/window decision (perf_counter: monotonic,
+    high resolution)."""
+    return time.perf_counter()
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One queued inference request. ``result``/``error`` are set by the
+    dispatching worker; ``wait()`` blocks until then. A failed or rejected
+    dispatch marks its tickets instead of losing them."""
+
+    net: str
+    x: np.ndarray                      # (c, im, im)
+    result: Optional[np.ndarray] = None
+    done: bool = False
+    error: Optional[str] = None
+    rejected: bool = False             # refused at submit (backpressure)
+    submitted_s: float = 0.0           # monotonic() timestamps
+    dispatched_s: float = 0.0
+    completed_s: float = 0.0
+    _done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until this ticket is finished (True) or ``timeout`` expires
+        (False). Finished covers success, failure, and rejection."""
+        return self._done_event.wait(timeout)
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Time spent queued before a worker claimed the ticket."""
+        return max(self.dispatched_s - self.submitted_s, 0.0)
+
+    def finish(self, *, result: Optional[np.ndarray] = None,
+               error: Optional[str] = None, rejected: bool = False) -> None:
+        self.result = result
+        self.error = error
+        self.rejected = rejected
+        self.completed_s = monotonic()
+        self.done = True
+        self._done_event.set()
+
+
+class NetQueue:
+    """Bounded FIFO + timed batch window for one network. All methods must
+    be called under the serving core's lock."""
+
+    def __init__(self, *, depth: int, batch_cap: int, max_wait_s: float):
+        if depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+        self.depth = depth
+        self.batch_cap = batch_cap
+        self.max_wait_s = max_wait_s
+        self._q: Deque[Ticket] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, t: Ticket) -> bool:
+        """Enqueue; False when the queue is at depth (backpressure)."""
+        if len(self._q) >= self.depth:
+            return False
+        self._q.append(t)
+        return True
+
+    def ready(self, now: float, *, drain: bool = False) -> bool:
+        """Should a batch dispatch now? Full batch, expired window, or an
+        explicit drain (synchronous pump / shutdown)."""
+        if not self._q:
+            return False
+        if drain or len(self._q) >= self.batch_cap:
+            return True
+        return now - self._q[0].submitted_s >= self.max_wait_s
+
+    def next_deadline(self) -> Optional[float]:
+        """Monotonic time at which the oldest ticket's window expires (the
+        worker-pool wait bound); None when empty."""
+        if not self._q:
+            return None
+        return self._q[0].submitted_s + self.max_wait_s
+
+    def take(self, n: int) -> List[Ticket]:
+        """Pop up to ``n`` tickets in FIFO order."""
+        out = []
+        while self._q and len(out) < n:
+            out.append(self._q.popleft())
+        return out

@@ -1,0 +1,626 @@
+"""Concurrent serving core (DESIGN.md §8).
+
+``OptimisedServer`` serves any number of registered optimised networks
+through the whole-graph compiled plan cache (``repro.primitives.plan``),
+closing the paper's loop end to end:
+
+    profile → model → select → serve → observe → recalibrate → hot_swap
+
+Four mechanisms make it a serving system rather than a loop:
+
+  * **Perf-model-predicted batching** (§7.3, kept): each network's batch cap
+    is ``latency_budget / predicted_per_image`` rounded down to a power of
+    two; partial batches pad up to the next pow2 bucket so the plan cache
+    stays small, pad rows are sliced off before delivery.
+  * **Timed batch windows** (``queues.NetQueue``): a batch dispatches when it
+    is full OR when the oldest ticket has waited ``max_wait`` — a lone
+    request is never starved waiting for peers.
+  * **Worker pool + backpressure** (``workers.WorkerPool``): ``workers`` > 0
+    overlaps plan execution across networks (JAX releases the GIL inside
+    compiled plans) under per-network in-flight limits; queues are bounded,
+    and ``submit`` returns a *rejected* ticket instead of queueing past
+    ``queue_depth``. ``workers=0`` keeps the synchronous ``pump()`` mode.
+  * **Drift-triggered recalibration** (``drift.DriftMonitor``): served
+    per-image latency is tracked against the model's prediction (EWMA of the
+    log ratio vs a per-generation reference); when it drifts past
+    ``drift_threshold`` the server runs ``recalibrate`` (by default:
+    ``platform.calibrate`` on fresh measurements + PBQP re-select, see
+    ``make_recalibrator``) on a background thread and ``hot_swap``s the
+    result in — exactly once per excursion, without touching in-flight
+    tickets.
+
+CLI — the documented CNN serving command (the LM decode demo lives at
+``repro.launch.lm_decode``):
+
+    python -m repro.service.server --net edge_cnn --platform arm \
+        --workers 2 --max-wait-ms 5 --drift-threshold 1.5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
+from repro.service.serving.drift import DriftMonitor
+from repro.service.serving.queues import NetQueue, Ticket, monotonic
+from repro.service.serving.workers import WorkerPool
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(n, 1).bit_length() - 1)
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
+@dataclasses.dataclass
+class _Batch:
+    """One claimed dispatch: tickets already popped from the queue, the
+    network's in-flight slot already taken. Snapshots opt/weights at claim
+    time so an already-claimed batch finishes on the plan it was claimed
+    under even if a hot_swap lands before execution, and carries the
+    _NetState so accounting survives a re-register replacing the state."""
+    net: str
+    tickets: List[Ticket]
+    generation: int
+    state: "_NetState"
+    opt: OptimisedNetwork
+    weights: Dict
+
+
+@dataclasses.dataclass
+class _NetState:
+    opt: OptimisedNetwork
+    weights: Dict
+    queue: NetQueue
+    max_inflight: int
+    latency_budget_ms: Optional[float]
+    generation: int = 0                # bumped by hot_swap
+    inflight: int = 0
+    dispatches: int = 0
+    images: int = 0
+    padded: int = 0
+    rejected: int = 0
+    recalibrations: int = 0
+    last_recal_error: Optional[str] = None
+    busy_s: float = 0.0
+    # (generation, batch_bucket) -> completion time of the FIRST execution:
+    # any dispatch that STARTED before that instant may have paid (or waited
+    # on) jit compile and must not feed the drift EWMA — this also covers
+    # max_inflight > 1, where two first executions of a bucket overlap
+    bucket_ready: Dict[Tuple[int, int], float] = dataclasses.field(
+        default_factory=dict)
+    waits: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=4096))
+
+    @property
+    def batch_cap(self) -> int:
+        return self.queue.batch_cap
+
+
+class OptimisedServer:
+    """Multi-network serving front end. ``workers=0`` (default) is the
+    synchronous mode: ``submit`` then ``pump()`` drains inline on the calling
+    thread. ``workers>0`` starts a thread pool at first ``register`` and
+    ``serve``/``Ticket.wait`` block on completion events instead."""
+
+    def __init__(self, *, max_batch: int = 32,
+                 latency_budget_ms: float = 50.0,
+                 workers: int = 0,
+                 max_wait_ms: float = 5.0,
+                 queue_depth: int = 256,
+                 max_inflight: int = 1,
+                 recalibrate: Optional[Callable[[OptimisedNetwork],
+                                               OptimisedNetwork]] = None,
+                 drift_threshold: float = 1.5,
+                 drift_alpha: float = 0.25,
+                 drift_calib_obs: int = 3):
+        self.max_batch = max_batch
+        self.latency_budget_ms = latency_budget_ms
+        self.max_wait_ms = max_wait_ms
+        self.queue_depth = queue_depth
+        self.max_inflight = max_inflight
+        self._nets: Dict[str, _NetState] = {}
+        self._order: List[str] = []            # round-robin claim fairness
+        self._rr = 0
+        self._cond = threading.Condition()
+        self._drift = DriftMonitor(threshold=drift_threshold,
+                                   alpha=drift_alpha,
+                                   calib_obs=drift_calib_obs)
+        self._recalibrate = recalibrate
+        self._recal_threads: List[threading.Thread] = []
+        self._pool = WorkerPool(self, workers) if workers > 0 else None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "OptimisedServer":
+        if self._pool is not None:
+            self._pool.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Drain queued tickets, stop workers, join pending recalibrations."""
+        if self._pool is not None:
+            self._pool.stop(timeout)
+        for t in list(self._recal_threads):
+            t.join(timeout)
+        self._recal_threads = []
+
+    def wake_all(self) -> None:
+        """Wake every thread blocked in ``claim_blocking`` (WorkerPool stop)."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def __enter__(self) -> "OptimisedServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- registration ------------------------------------------------------
+    def _batch_cap(self, predicted_cost_s: float,
+                   budget_ms: Optional[float]) -> int:
+        budget_s = (budget_ms if budget_ms is not None
+                    else self.latency_budget_ms) * 1e-3
+        if not np.isfinite(predicted_cost_s) or predicted_cost_s <= 0:
+            return _pow2_floor(self.max_batch)
+        cap = int(np.clip(budget_s / predicted_cost_s, 1, self.max_batch))
+        return _pow2_floor(cap)
+
+    def register(self, opt: OptimisedNetwork, *, weights: Optional[Dict] = None,
+                 latency_budget_ms: Optional[float] = None,
+                 max_wait_ms: Optional[float] = None,
+                 queue_depth: Optional[int] = None,
+                 max_inflight: Optional[int] = None) -> _NetState:
+        """Register an optimised network for serving. ``weights`` defaults to
+        fresh ``make_weights(spec)`` (serving demo weights). Per-network
+        overrides fall back to the server-wide knobs."""
+        from repro.primitives.executor import make_weights
+        queue = NetQueue(
+            depth=queue_depth if queue_depth is not None else self.queue_depth,
+            batch_cap=self._batch_cap(opt.predicted_cost_s, latency_budget_ms),
+            max_wait_s=(max_wait_ms if max_wait_ms is not None
+                        else self.max_wait_ms) * 1e-3)
+        state = _NetState(
+            opt=opt,
+            weights=weights if weights is not None else make_weights(opt.spec),
+            queue=queue,
+            max_inflight=(max_inflight if max_inflight is not None
+                          else self.max_inflight),
+            latency_budget_ms=latency_budget_ms)
+        with self._cond:
+            old = self._nets.get(opt.net)
+            if old is None:
+                self._order.append(opt.net)
+            else:
+                # replacing a live registration must not strand its queued
+                # tickets (in-flight batches keep their own _NetState ref),
+                # and must not reuse its generation numbers — stale drift
+                # observations and pending recalibration hot_swaps carry the
+                # old generation and would otherwise pass the CAS checks
+                stranded = old.queue.take(len(old.queue))
+                state.generation = old.generation + 1
+            self._nets[opt.net] = state
+        if old is not None:
+            for t in stranded:
+                t.finish(error=f"rejected: {opt.net!r} was re-registered",
+                         rejected=True)
+        self._drift.reset(opt.net, state.generation)
+        self.start()
+        return state
+
+    def hot_swap(self, net: str, opt: OptimisedNetwork, *,
+                 latency_budget_ms: Optional[float] = None,
+                 expect_generation: Optional[int] = None) -> bool:
+        """Atomically replace ``net``'s assignment (platform recalibrated).
+        Weights are kept; already-claimed batches finish on the old plan; the
+        next dispatch compiles (or cache-hits) the new one. Drift stats reset
+        — the new model predicts on a new scale. ``expect_generation`` makes
+        the swap conditional (a background recalibration must not clobber a
+        newer manual swap); returns False when the expectation fails."""
+        with self._cond:
+            state = self._nets[net]
+            if opt.spec.name != state.opt.spec.name:
+                raise ValueError(f"hot_swap topology mismatch: {opt.spec.name!r} "
+                                 f"vs {state.opt.spec.name!r}")
+            if (expect_generation is not None
+                    and state.generation != expect_generation):
+                return False
+            if latency_budget_ms is not None:
+                state.latency_budget_ms = latency_budget_ms
+            state.opt = opt
+            state.queue.batch_cap = self._batch_cap(opt.predicted_cost_s,
+                                                    state.latency_budget_ms)
+            state.generation += 1
+            generation = state.generation
+            # superseded generations' bucket entries are never read again
+            state.bucket_ready = {k: v for k, v in state.bucket_ready.items()
+                                  if k[0] >= generation}
+            self._cond.notify_all()
+        self._drift.reset(net, generation)
+        return True
+
+    # -- request path ------------------------------------------------------
+    def submit(self, net: str, x: np.ndarray) -> Ticket:
+        """Enqueue one request. The returned ticket is already finished (and
+        ``rejected``) when the network's queue is full — backpressure instead
+        of unbounded memory."""
+        x = np.asarray(x, np.float32)
+        with self._cond:
+            # validate against the state the ticket will actually land in —
+            # a concurrent re-register may have changed the topology
+            if net not in self._nets:
+                raise KeyError(f"network {net!r} not registered")
+            state = self._nets[net]
+            n0 = state.opt.spec.nodes[0]
+            if x.shape != (n0.c, n0.im, n0.im):
+                raise ValueError(f"{net!r} expects one ({n0.c}, {n0.im}, "
+                                 f"{n0.im}) image per request, got {x.shape}")
+            t = Ticket(net=net, x=x, submitted_s=monotonic())
+            if not state.queue.push(t):
+                state.rejected += 1
+                t.finish(error=f"rejected: {net!r} queue at depth "
+                               f"{state.queue.depth} (backpressure)",
+                         rejected=True)
+                return t
+            self._cond.notify()
+        return t
+
+    # -- scheduling --------------------------------------------------------
+    def _claim_locked(self, now: float, *, drain: bool = False) -> Optional[_Batch]:
+        """Pop the next dispatchable batch (round-robin across networks),
+        honouring in-flight limits and batch windows. Caller holds the lock."""
+        n = len(self._order)
+        for k in range(n):
+            name = self._order[(self._rr + k) % n]
+            state = self._nets[name]
+            if state.inflight >= state.max_inflight:
+                continue
+            if not state.queue.ready(now, drain=drain):
+                continue
+            tickets = state.queue.take(state.queue.batch_cap)
+            state.inflight += 1
+            t_claim = monotonic()
+            for t in tickets:
+                t.dispatched_s = t_claim
+                state.waits.append(t.queue_wait_s)
+            self._rr = (self._rr + k + 1) % n
+            return _Batch(net=name, tickets=tickets,
+                          generation=state.generation, state=state,
+                          opt=state.opt, weights=state.weights)
+        return None
+
+    def claim_blocking(self, stop_event: threading.Event) -> Optional[_Batch]:
+        """Worker-pool entry: block until a batch is dispatchable. During
+        shutdown (``stop_event`` set) windows are ignored so queued tickets
+        drain; returns None once stopping and every queue is empty."""
+        with self._cond:
+            while True:
+                stopping = stop_event.is_set()
+                batch = self._claim_locked(monotonic(), drain=stopping)
+                if batch is not None:
+                    return batch
+                if stopping and not any(len(s.queue)
+                                        for s in self._nets.values()):
+                    return None
+                now = monotonic()
+                deadlines = [s.queue.next_deadline()
+                             for s in self._nets.values()
+                             if len(s.queue) and s.inflight < s.max_inflight]
+                deadlines = [d for d in deadlines if d is not None]
+                if stopping:
+                    timeout = 0.01     # draining: re-check promptly
+                elif deadlines:
+                    timeout = max(min(deadlines) - now, 0.0) + 1e-4
+                else:
+                    timeout = None     # woken by submit/execute/stop
+                self._cond.wait(timeout)
+
+    # -- execution ---------------------------------------------------------
+    def _run_plan(self, opt: OptimisedNetwork, xs: np.ndarray,
+                  weights: Dict) -> np.ndarray:
+        """Execute one padded batch through the compiled whole-graph plan.
+        Isolated so tests/experiments can wrap it (e.g. to emulate a machine
+        that got slower)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.primitives.plan import compile_plan
+        plan = compile_plan(opt.spec, opt.assignment, xs.shape)
+        out = plan(jnp.asarray(xs), weights)[plan.sinks[-1]]
+        return np.asarray(jax.block_until_ready(out))
+
+    def execute(self, batch: _Batch) -> None:
+        """Run one claimed batch to completion: pad to the pow2 bucket,
+        execute, deliver results (slicing pad rows), feed the drift monitor,
+        release the in-flight slot. Never raises: a failed dispatch marks its
+        tickets instead of losing them."""
+        state = batch.state
+        opt, weights = batch.opt, batch.weights    # claim-time snapshot
+        tickets = batch.tickets
+        take = len(tickets)
+        b = _pow2_ceil(take)
+        xs = np.stack([t.x for t in tickets])
+        if b != take:
+            pad = np.broadcast_to(xs[-1:], (b - take,) + xs.shape[1:])
+            xs = np.concatenate([xs, pad])
+        err: Optional[str] = None
+        t0 = monotonic()
+        try:
+            out = self._run_plan(opt, xs, weights)
+        except Exception as e:       # mark this batch failed, keep serving
+            err = str(e)
+        t1 = monotonic()
+        elapsed = t1 - t0
+
+        clean_timing = False
+        with self._cond:
+            state.inflight -= 1
+            if err is None:
+                state.dispatches += 1
+                state.images += take
+                state.padded += b - take
+                state.busy_s += elapsed
+                # a dispatch only times cleanly if it STARTED after the
+                # bucket's first execution completed (no jit compile paid or
+                # waited on — holds for any max_inflight)
+                ready_at = state.bucket_ready.get((batch.generation, b))
+                if ready_at is None:
+                    state.bucket_ready[(batch.generation, b)] = t1
+                else:
+                    clean_timing = t0 >= ready_at
+            self._cond.notify_all()
+
+        if err is not None:
+            for t in tickets:
+                t.finish(error=err)
+            return
+        for j, t in enumerate(tickets):
+            t.finish(result=out[j])
+
+        # drift: per-image served latency vs model prediction
+        pred = opt.predicted_cost_s
+        if (clean_timing and np.isfinite(pred) and pred > 0
+                and self._drift.observe(batch.net, batch.generation,
+                                        elapsed / b, pred)):
+            self._schedule_recalibration(batch.net, batch.generation)
+
+    # -- drift-triggered recalibration ------------------------------------
+    def _schedule_recalibration(self, net: str, generation: int) -> None:
+        if self._recalibrate is None:
+            return
+        th = threading.Thread(target=self._recalibration_worker,
+                              args=(net, generation), daemon=True,
+                              name=f"recal-{net}-g{generation}")
+        self._recal_threads = [t for t in self._recal_threads if t.is_alive()]
+        self._recal_threads.append(th)
+        th.start()
+
+    def _recalibration_worker(self, net: str, generation: int) -> None:
+        state = self._nets[net]
+        with self._cond:
+            if state.generation != generation:
+                return               # swapped while we were scheduled
+            opt = state.opt
+        try:
+            new_opt = self._recalibrate(opt)
+        except Exception as e:       # serving continues on the stale model
+            with self._cond:
+                state.last_recal_error = str(e)
+            return
+        if self.hot_swap(net, new_opt, expect_generation=generation):
+            with self._cond:
+                state.recalibrations += 1
+
+    def recalibrations_idle(self) -> bool:
+        """True when no background recalibration is in flight (tests/CLI)."""
+        self._recal_threads = [t for t in self._recal_threads if t.is_alive()]
+        return not self._recal_threads
+
+    # -- synchronous path --------------------------------------------------
+    def pump(self) -> int:
+        """Drain the queues inline on the calling thread (windows ignored —
+        pump IS the arrival of serving capacity). Returns the dispatch
+        count. This is the ``workers=0`` serving mode; with a worker pool
+        running it simply competes for claims and remains safe."""
+        dispatches = 0
+        while True:
+            with self._cond:
+                batch = self._claim_locked(monotonic(), drain=True)
+            if batch is None:
+                return dispatches
+            self.execute(batch)
+            dispatches += 1
+
+    def serve(self, net: str, xs: Sequence[np.ndarray], *,
+              timeout: float = 120.0) -> List[np.ndarray]:
+        """Submit a burst and block until every ticket finishes (sync
+        convenience). Raises if any request failed or was rejected. In pump
+        mode the caller IS the drain, so a burst larger than ``queue_depth``
+        drains mid-submission instead of tripping backpressure."""
+        if self._pool is not None and self._pool.running:
+            tickets = [self.submit(net, x) for x in xs]
+            deadline = monotonic() + timeout
+            for t in tickets:
+                if not t.wait(max(deadline - monotonic(), 0.0)):
+                    raise TimeoutError(f"{net!r}: ticket not served within "
+                                       f"{timeout:.1f}s")
+        else:
+            tickets = []
+            for x in xs:
+                t = self.submit(net, x)
+                if t.rejected:               # queue full: drain, retry once
+                    self.pump()
+                    t = self.submit(net, x)
+                tickets.append(t)
+            self.pump()
+        failed = [t.error for t in tickets if t.error]
+        if failed:
+            raise RuntimeError(f"{len(failed)} request(s) failed: {failed[0]}")
+        return [t.result for t in tickets]
+
+    # -- introspection -----------------------------------------------------
+    def stats(self, net: str) -> Dict:
+        with self._cond:
+            s = self._nets[net]
+            waits = np.asarray(s.waits, np.float64)
+            out = {"batch_cap": s.queue.batch_cap, "generation": s.generation,
+                   "dispatches": s.dispatches, "images": s.images,
+                   "padded": s.padded, "busy_s": s.busy_s,
+                   "images_per_s": (s.images / s.busy_s if s.busy_s else 0.0),
+                   "queued": len(s.queue), "inflight": s.inflight,
+                   "rejected": s.rejected,
+                   "recalibrations": s.recalibrations,
+                   "last_recal_error": s.last_recal_error,
+                   "queue_wait_p50_ms": (float(np.percentile(waits, 50)) * 1e3
+                                         if waits.size else 0.0),
+                   "queue_wait_p99_ms": (float(np.percentile(waits, 99)) * 1e3
+                                         if waits.size else 0.0)}
+        out["drift_ratio"] = self._drift.ratio(net)
+        return out
+
+    @property
+    def networks(self) -> List[str]:
+        return sorted(self._nets)
+
+
+def make_recalibrator(*, store=None, sample_n: int = 16, mode: str = "factor",
+                      budget: Optional[float] = None,
+                      max_iters: Optional[int] = None,
+                      seed: int = 0) -> Callable[[OptimisedNetwork],
+                                                 OptimisedNetwork]:
+    """Default drift-recalibration policy: freshly measure ``sample_n``
+    configs on the network's platform (post-drift truth), ``calibrate`` the
+    current models onto them, re-solve the PBQP, return the new
+    ``OptimisedNetwork`` for ``hot_swap``. The sample seed advances per call
+    so successive excursions draw different configs."""
+    counter = itertools.count()
+
+    def recalibrate(opt: OptimisedNetwork) -> OptimisedNetwork:
+        k = next(counter)
+        sample = (opt.platform.measure_sample(sample_n, seed=seed + k)
+                  if budget is None else None)
+        return reoptimise(opt, sample=sample,
+                          budget=0.05 if budget is None else budget,
+                          mode=mode, store=store, seed=seed,
+                          max_iters=max_iters)
+
+    return recalibrate
+
+
+# ---------------------------------------------------------------------------
+# CLI: optimise-on-arrival, then serve
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Optimise a CNN for a platform and serve it "
+                    "(concurrent worker-pool serving core).")
+    ap.add_argument("--net", default="edge_cnn")
+    ap.add_argument("--platform", default="arm",
+                    help="intel | amd | arm (simulated) | host (real CPU)")
+    ap.add_argument("--transfer-from", default=None, metavar="PLATFORM",
+                    help="calibrate from this platform's pretrained model "
+                         "(the paper's §4.4 path) instead of native training")
+    ap.add_argument("--calib-budget", type=float, default=0.01,
+                    help="calibration sample budget (fraction or row count)")
+    ap.add_argument("--store", default="artifacts",
+                    help="artifact store root ('' disables warm-start)")
+    ap.add_argument("--keep", type=int, default=None,
+                    help="artifact GC: keep only the newest K artifacts per "
+                         "category after each put (default: keep all)")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--budget-ms", type=float, default=50.0,
+                    help="per-dispatch latency budget (sets the batch cap)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="serving worker threads; 0 = synchronous pump mode")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="batch window: max time a ticket waits for batch "
+                         "peers before its partial batch dispatches")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="per-network queue bound; submits beyond it are "
+                         "rejected (backpressure)")
+    ap.add_argument("--drift-threshold", type=float, default=1.5,
+                    help="served/predicted latency EWMA ratio that triggers "
+                         "background recalibration + hot swap")
+    ap.add_argument("--drift-alpha", type=float, default=0.25,
+                    help="EWMA smoothing for the drift ratio")
+    ap.add_argument("--max-triplets", type=int, default=60,
+                    help="simulated profiling pool size")
+    ap.add_argument("--max-iters", type=int, default=2000)
+    ap.add_argument("--hot-swap", action="store_true",
+                    help="recalibrate mid-run and hot-swap the assignment")
+    args = ap.parse_args(argv)
+
+    from repro.service.artifacts import ArtifactStore
+    from repro.service.platforms import get_platform
+
+    store = ArtifactStore(args.store, keep=args.keep) if args.store else None
+    # host platforms persist their profiled datasets through the store, so
+    # repeat CLI runs skip the expensive real-CPU measurement pass
+    plat_kw = {"store": store} if args.platform == "host" else \
+        {"max_triplets": args.max_triplets}
+    platform = get_platform(args.platform, **plat_kw)
+
+    base = None
+    if args.transfer_from:
+        base_plat = get_platform(args.transfer_from,
+                                 max_triplets=args.max_triplets)
+        base = base_plat.pretrain("nn2", store=store,
+                                  max_iters=args.max_iters)
+        print(f"[serve] base model: {args.transfer_from} "
+              f"({'warm' if base.warm else 'cold'}, {base.seconds:.2f}s)")
+
+    opt = optimise(args.net, platform, store=store, base=base,
+                   budget=args.calib_budget, executable=True,
+                   max_iters=args.max_iters)
+    print(f"[serve] optimised {opt.net} for {platform.fingerprint()}: "
+          f"{'warm' if opt.warm else 'cold'} in {opt.seconds:.2f}s, "
+          f"predicted {opt.predicted_cost_s*1e3:.3f} ms/img")
+
+    server = OptimisedServer(latency_budget_ms=args.budget_ms,
+                             workers=args.workers,
+                             max_wait_ms=args.max_wait_ms,
+                             queue_depth=args.queue_depth,
+                             drift_threshold=args.drift_threshold,
+                             drift_alpha=args.drift_alpha,
+                             recalibrate=make_recalibrator(store=store))
+    server.register(opt)
+    print(f"[serve] batch cap {server.stats(opt.net)['batch_cap']} "
+          f"(budget {args.budget_ms:.0f} ms), workers={args.workers}, "
+          f"window={args.max_wait_ms:.1f} ms")
+
+    n0 = opt.spec.nodes[0]
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((args.requests, n0.c, n0.im, n0.im)).astype(np.float32)
+    server.serve(opt.net, xs[: min(4, args.requests)])   # warm the plan
+    t0 = time.perf_counter()
+    server.serve(opt.net, xs)
+    dt = time.perf_counter() - t0
+    s = server.stats(opt.net)
+    print(f"[serve] {args.requests} requests in {dt*1e3:.0f} ms "
+          f"({args.requests/dt:.1f} img/s, {s['dispatches']} dispatches, "
+          f"{s['padded']} padded, queue p50/p99 "
+          f"{s['queue_wait_p50_ms']:.2f}/{s['queue_wait_p99_ms']:.2f} ms)")
+
+    if args.hot_swap:
+        recal = optimise(args.net, platform, store=store, base=opt.models,
+                         budget=max(args.calib_budget * 5, 0.05),
+                         mode="finetune", executable=True,
+                         max_iters=args.max_iters)
+        server.hot_swap(opt.net, recal)
+        server.serve(opt.net, xs[:8])
+        print(f"[serve] hot-swapped to recalibrated assignment "
+              f"(generation {server.stats(opt.net)['generation']})")
+    server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

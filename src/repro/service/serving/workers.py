@@ -1,0 +1,72 @@
+"""Worker pool: threads that claim and execute batches (DESIGN.md §8.2).
+
+Plan execution is a jitted XLA computation — JAX releases the GIL while it
+runs — so plain ``threading`` genuinely overlaps plan execution across
+networks (and overlaps one network's Python-side batch assembly with
+another's compute). The pool is deliberately dumb: every scheduling decision
+(timed windows, per-network in-flight limits, fairness) lives in the serving
+core's ``claim_blocking``; a worker just loops claim → execute.
+
+``stop()`` is graceful by default: workers first drain every queued ticket
+(windows ignored — shutdown must not strand requests), then exit.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+
+class WorkerPool:
+    """N daemon threads running ``core.claim_blocking`` → ``core.execute``.
+
+    ``core`` duck-type: ``claim_blocking(stop_event) -> Optional[claim]``
+    (None means "stopping and nothing left to drain") and ``execute(claim)``.
+    """
+
+    def __init__(self, core, workers: int, name: str = "serve"):
+        if workers < 1:
+            raise ValueError(f"worker count must be >= 1, got {workers}")
+        self.core = core
+        self.workers = workers
+        self.name = name
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "WorkerPool":
+        self._threads = [t for t in self._threads if t.is_alive()]
+        if self._threads:
+            return self
+        # a FRESH event per pool incarnation: each worker captures its own,
+        # so a zombie from a timed-out stop() keeps seeing its (set) event
+        # and can never be revived by a later start()
+        self._stop = threading.Event()
+        for i in range(self.workers):
+            t = threading.Thread(target=self._run, args=(self._stop,),
+                                 daemon=True,
+                                 name=f"{self.name}-worker-{i}")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Signal shutdown and join. Workers drain queued tickets first so
+        no submitted request is stranded undone. Threads that outlive the
+        join timeout stay tracked (still winding down), never revivable."""
+        self._stop.set()
+        self.core.wake_all()
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = [t for t in self._threads if t.is_alive()]
+
+    @property
+    def running(self) -> bool:
+        return any(t.is_alive() for t in self._threads)
+
+    # -- worker body -------------------------------------------------------
+    def _run(self, stop: threading.Event) -> None:
+        while True:
+            claim = self.core.claim_blocking(stop)
+            if claim is None:
+                return
+            self.core.execute(claim)

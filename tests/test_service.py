@@ -103,6 +103,45 @@ def test_artifact_store_rejects_corrupt_payload(tmp_path):
     assert store.get_model(fields) is None      # invisible, not an exception
 
 
+def test_artifact_store_sweep_keeps_newest_k(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    for i in range(5):
+        store.put_json("selections", {"k": i}, {"i": i})
+    assert len(store.entries("selections")) == 5
+    assert store.sweep(2, category="selections") == 3
+    kept = {e["fields"]["k"] for e in store.entries("selections")}
+    assert kept == {3, 4}        # newest two by manifest creation time
+
+
+def test_artifact_store_opportunistic_gc_bounds_growth(tmp_path):
+    """keep= makes every put GC its category — drift-loop recalibration
+    generations cannot grow the store without bound."""
+    store = ArtifactStore(str(tmp_path), keep=3)
+    for i in range(10):
+        store.put_json("selections", {"gen": i}, {"gen": i})
+        store.put_model({"gen": i}, _tiny_model(seed=i))
+    assert len(store.entries("selections")) == 3
+    assert len(store.entries("models")) == 3
+    # the newest generation always survives its own put
+    assert store.get_json("selections", {"gen": 9}) == {"gen": 9}
+    with pytest.raises(ValueError):
+        ArtifactStore(str(tmp_path), keep=0)
+
+
+def test_artifact_store_dataset_roundtrip(tmp_path):
+    from repro.profiler.dataset import PerfDataset
+    store = ArtifactStore(str(tmp_path))
+    ds = PerfDataset(np.arange(10.0).reshape(5, 2),
+                     np.arange(15.0).reshape(5, 3) * 1e-6,
+                     ["a", "b", "c"], ["x", "y"], "testplat")
+    fields = {"artifact": "perf_dataset", "pool": [[1, 2]], "repeats": 3}
+    assert store.get_dataset(fields) is None
+    store.put_dataset(fields, ds)
+    back = store.get_dataset(fields)
+    assert back is not None and back.fingerprint() == ds.fingerprint()
+    assert back.columns == ds.columns and back.platform == ds.platform
+
+
 def test_artifact_store_json_and_entries(tmp_path):
     store = ArtifactStore(str(tmp_path))
     obj = {"assignment": {"0": "winograd-2-3"}, "cost": 1e-3}
@@ -299,6 +338,85 @@ def test_server_failed_dispatch_marks_tickets_not_loses_them(served_net):
     state.weights = good_weights              # recovered: serving continues
     ok = server.serve(served_net.net, _requests(served_net.spec, 2))
     assert all(r is not None for r in ok)
+
+
+def test_one_keying_scheme_pretrain_prim_shares_address(tmp_path):
+    """A model trained via the split platform verbs and one trained inside
+    ``pretrain`` land at the SAME artifact address (ROADMAP: no benchmark-only
+    tag field, one address per logical model)."""
+    store = ArtifactStore(str(tmp_path))
+    plat = get_platform("arm", max_triplets=5)
+    m1, warm1 = plat.pretrain_prim("lin", store=store, max_iters=50)
+    d1, warm_d1 = plat.pretrain_dlt("lin", store=store)
+    models = plat.pretrain("lin", store=store, max_iters=50)
+    assert (warm1, warm_d1, models.warm) == (False, False, True)  # address hits
+    assert models.prim.fingerprint() == m1.fingerprint()
+    assert models.dlt.fingerprint() == d1.fingerprint()
+    assert len(store.entries("models")) == 2           # prim + dlt, nothing else
+
+
+def test_host_platform_dataset_persistence(tmp_path, monkeypatch):
+    """HostPlatform with a store profiles once and warm-starts the dataset
+    across instances keyed by (pool, repeats, machine id)."""
+    from repro.profiler.dataset import PerfDataset
+    from repro.service.platforms import host_machine_id
+
+    calls = []
+
+    def fake_profile(configs, primitives=None, repeats=9):
+        calls.append(len(configs))
+        feats = np.asarray(configs, np.float64)
+        times = np.full((len(configs), len(primitives)), 1e-4)
+        return PerfDataset(feats, times, list(primitives),
+                           ["k", "c", "im", "s", "f"], "host-cpu")
+
+    import repro.profiler.host as host
+    monkeypatch.setattr(host, "profile_primitive_dataset", fake_profile)
+
+    store = ArtifactStore(str(tmp_path))
+    pool = [(8, 4, 8, 1, 3), (16, 8, 8, 1, 3)]
+    prims = ["im2col-copy-ab-ki", "kn2row"]
+    p1 = HostPlatform(configs=pool, primitives=prims, repeats=3, store=store)
+    ds1 = p1.primitive_dataset()
+    assert calls == [2]
+    p2 = HostPlatform(configs=pool, primitives=prims, repeats=3, store=store)
+    ds2 = p2.primitive_dataset()
+    assert calls == [2]                       # warm: no second measurement
+    assert ds2.fingerprint() == ds1.fingerprint()
+    # a different pool/repeats/machine is a different address
+    p3 = HostPlatform(configs=pool, primitives=prims, repeats=5, store=store)
+    p3.primitive_dataset()
+    assert calls == [2, 2]
+    assert "/" in host_machine_id() and "cpus=" in host_machine_id()
+
+
+def test_calibrate_from_fresh_sample_and_reoptimise(transfer_setup):
+    """The drift loop's path: measure a fresh sample, calibrate onto it,
+    reoptimise — without touching the platform's cached profiling pool."""
+    from repro.service import reoptimise
+
+    _, _, arm, base, opt = transfer_setup
+    sample = arm.measure_sample(12, seed=3)
+    assert sample.n == 12 and list(sample.columns) == list(arm.columns)
+    cal = arm.calibrate(base, mode="factor", sample=sample)
+    assert cal.prim.kind == "factor-nn2"
+    # scaled platform => scaled sample => scaled calibrated predictions
+    arm2 = SimulatedPlatform("arm", max_triplets=40, time_scale=3.0)
+    sample3 = arm2.measure_sample(12, seed=3)
+    np.testing.assert_allclose(sample3.times, 3.0 * sample.times)
+    cal3 = arm2.calibrate(base, mode="factor", sample=sample3)
+    cfgs = np.array([[16, 8, 14, 1, 3]], float)
+    # only columns the sample measured get a factor (others keep the base)
+    cols = np.isfinite(sample.times).any(axis=0)
+    np.testing.assert_allclose(cal3.prim.predict(cfgs)[:, cols],
+                               3.0 * cal.prim.predict(cfgs)[:, cols],
+                               rtol=1e-6)
+
+    opt2 = reoptimise(opt, sample=sample, mode="factor")
+    assert opt2.net == opt.net and opt2.models.prim.kind == "factor-nn2"
+    assert opt2.predicted_cost_s > 0
+    with pytest.raises(ValueError):
+        reoptimise(OptimisedNetwork.from_assignment(opt.spec, opt.assignment))
 
 
 def test_selection_artifact_keyed_by_spec_topology(tmp_path):

@@ -1,0 +1,302 @@
+"""Concurrent serving core (DESIGN.md §8): timed batch windows, worker-pool
+dispatch with backpressure, and drift-triggered recalibration."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.models import cnn_zoo
+from repro.service import (OptimisedNetwork, OptimisedServer, make_recalibrator,
+                           optimise)
+from repro.service.platforms import SimulatedPlatform
+from repro.service.serving.drift import DriftMonitor
+from repro.service.serving.queues import NetQueue, Ticket
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_net():
+    spec = cnn_zoo.get("edge_cnn")
+    from repro.primitives.plan import heuristic_assignment
+    return OptimisedNetwork.from_assignment(spec, heuristic_assignment(spec),
+                                            predicted_cost_s=2e-3)
+
+
+def _requests(spec, n, seed=0):
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n0.c, n0.im, n0.im)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Queue policy (pure, no threads)
+# ---------------------------------------------------------------------------
+
+def test_netqueue_window_semantics():
+    q = NetQueue(depth=4, batch_cap=2, max_wait_s=10.0)
+    assert not q.ready(0.0)                       # empty
+    t1 = Ticket(net="n", x=np.zeros(1), submitted_s=100.0)
+    assert q.push(t1)
+    assert not q.ready(100.0)                     # 1 < cap, window open
+    assert q.ready(110.0)                         # window expired
+    assert q.next_deadline() == 110.0
+    q.push(Ticket(net="n", x=np.zeros(1), submitted_s=101.0))
+    assert q.ready(101.0)                         # cap reached
+    assert q.ready(100.5, drain=True) and len(q.take(5)) == 2
+    assert q.next_deadline() is None
+
+
+def test_netqueue_depth_bound():
+    q = NetQueue(depth=2, batch_cap=8, max_wait_s=1.0)
+    a = [Ticket(net="n", x=np.zeros(1)) for _ in range(3)]
+    assert [q.push(t) for t in a] == [True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# Worker pool serving
+# ---------------------------------------------------------------------------
+
+def test_lone_request_dispatched_within_max_wait(served_net):
+    """A single queued request must not starve waiting for batch peers."""
+    server = OptimisedServer(max_batch=8, latency_budget_ms=1e9,
+                             workers=1, max_wait_ms=25.0)
+    server.register(served_net)
+    try:
+        server.serve(served_net.net, _requests(served_net.spec, 1))  # warm b=1
+        t = server.submit(served_net.net, _requests(served_net.spec, 1)[0])
+        assert t.wait(10.0) and t.error is None
+        # claimed by window expiry, not by a full batch: the wait must be at
+        # least ~max_wait but far below the no-window forever-starve
+        assert 0.015 <= t.queue_wait_s < 5.0
+    finally:
+        server.stop()
+
+
+def test_full_batch_dispatches_before_window(served_net):
+    """cap requests at once must dispatch on batch-full, not after max_wait."""
+    server = OptimisedServer(max_batch=2, latency_budget_ms=1e9,
+                             workers=1, max_wait_ms=10_000.0)
+    server.register(served_net)
+    try:
+        server.serve(served_net.net, _requests(served_net.spec, 2))  # warm b=2
+        t0 = time.perf_counter()
+        out = server.serve(served_net.net, _requests(served_net.spec, 2))
+        assert len(out) == 2
+        assert time.perf_counter() - t0 < 5.0    # << the 10s window
+    finally:
+        server.stop()
+
+
+def test_concurrent_submits_pad_and_slice_correctly(served_net):
+    """Results delivered under concurrent submitters match the single-image
+    plan: padded tail rows are sliced off, nothing is crossed between
+    tickets."""
+    import jax.numpy as jnp
+    from repro.primitives.executor import make_weights
+    from repro.primitives.plan import compile_plan
+
+    weights = make_weights(served_net.spec)
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9,
+                             workers=2, max_wait_ms=3.0)
+    server.register(served_net, weights=weights)
+    xs = _requests(served_net.spec, 9)
+    tickets = [None] * len(xs)
+
+    def submit(i):
+        tickets[i] = server.submit(served_net.net, xs[i])
+
+    try:
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(len(xs))]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert all(t.wait(60.0) for t in tickets)
+        assert all(t.error is None for t in tickets)
+        for i, t in enumerate(tickets):
+            plan = compile_plan(served_net.spec, served_net.assignment,
+                                (1,) + xs[i].shape)
+            want = np.asarray(plan(jnp.asarray(xs[i][None]),
+                                   weights)[plan.sinks[-1]])[0]
+            np.testing.assert_allclose(t.result, want, rtol=2e-4, atol=1e-5)
+        s = server.stats(served_net.net)
+        assert s["images"] == len(xs)
+        assert s["queue_wait_p99_ms"] >= s["queue_wait_p50_ms"] >= 0.0
+    finally:
+        server.stop()
+
+
+def test_backpressure_rejects_beyond_queue_depth(served_net):
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9,
+                             queue_depth=2)          # workers=0: nothing drains
+    server.register(served_net)
+    ts = [server.submit(served_net.net, x)
+          for x in _requests(served_net.spec, 5)]
+    rejected = [t for t in ts if t.rejected]
+    assert len(rejected) == 3
+    assert all(t.done and "backpressure" in t.error for t in rejected)
+    assert server.stats(served_net.net)["rejected"] == 3
+    server.pump()                                    # queued ones still serve
+    accepted = [t for t in ts if not t.rejected]
+    assert all(t.done and t.error is None and t.result is not None
+               for t in accepted)
+
+
+def test_pump_mode_unchanged(served_net):
+    """workers=0 keeps the synchronous contract: submit then pump drains."""
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9)
+    server.register(served_net)
+    ts = [server.submit(served_net.net, x)
+          for x in _requests(served_net.spec, 7)]
+    assert not any(t.done for t in ts)
+    assert server.pump() == 2                        # 7 requests / cap 4 -> 4+3
+    assert all(t.done and t.error is None for t in ts)
+    assert server.stats(served_net.net)["padded"] == 1   # tail 3 padded to 4
+
+
+def test_sync_serve_burst_larger_than_queue_depth(served_net):
+    """In pump mode the serve() caller is the drain: a burst beyond
+    queue_depth drains mid-submission instead of tripping backpressure."""
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9,
+                             queue_depth=4)
+    server.register(served_net)
+    out = server.serve(served_net.net, _requests(served_net.spec, 11))
+    assert len(out) == 11 and all(r is not None for r in out)
+    assert server.stats(served_net.net)["images"] == 11
+
+
+def test_reregister_rejects_stale_queue_not_strands_it(served_net):
+    """Replacing a live registration must finish its queued tickets (as
+    rejected), never leave them waiting forever."""
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9)
+    server.register(served_net)
+    ts = [server.submit(served_net.net, x)
+          for x in _requests(served_net.spec, 3)]
+    server.register(served_net)                      # e.g. redeploy same net
+    assert all(t.done and t.rejected for t in ts)
+    out = server.serve(served_net.net, _requests(served_net.spec, 2))
+    assert all(r is not None for r in out)
+
+
+# ---------------------------------------------------------------------------
+# Drift monitor (unit: deterministic observations)
+# ---------------------------------------------------------------------------
+
+def test_drift_monitor_one_trigger_per_excursion():
+    mon = DriftMonitor(threshold=1.5, alpha=0.5, calib_obs=2)
+    mon.reset("net", 0)
+    pred = 1e-3
+    # calibration: observed runs 3x predicted (platform-to-host scale)
+    assert not any(mon.observe("net", 0, 3e-3, pred) for _ in range(2))
+    # steady state at the reference: no trigger
+    assert not any(mon.observe("net", 0, 3e-3, pred) for _ in range(5))
+    assert mon.ratio("net") == pytest.approx(1.0, abs=1e-6)
+    # the platform drifts 4x slower: exactly ONE trigger for the excursion
+    fired = [mon.observe("net", 0, 12e-3, pred) for _ in range(6)]
+    assert fired.count(True) == 1 and fired[fired.index(True):].count(True) == 1
+    assert mon.ratio("net") > 1.5
+    # recovery below threshold/2 re-arms; a second excursion fires again
+    for _ in range(12):
+        mon.observe("net", 0, 3e-3, pred)
+    assert mon.ratio("net") < 1.25
+    fired2 = [mon.observe("net", 0, 12e-3, pred) for _ in range(6)]
+    assert fired2.count(True) == 1
+    assert mon.stats("net").triggers == 2
+
+
+def test_drift_monitor_generation_and_garbage():
+    mon = DriftMonitor(threshold=1.5, alpha=0.5, calib_obs=1)
+    mon.reset("net", 0)
+    assert not mon.observe("net", 1, 1e-3, 1e-3)     # stale generation
+    assert not mon.observe("net", 0, float("nan"), 1e-3)
+    assert not mon.observe("net", 0, 1e-3, 0.0)
+    assert mon.ratio("missing") == 1.0
+    with pytest.raises(ValueError):
+        DriftMonitor(threshold=1.0)
+
+
+def test_drift_monitor_clamps_single_spike():
+    """One pathological dispatch (GC pause) must not fake a sustained drift."""
+    mon = DriftMonitor(threshold=3.0, alpha=0.2, calib_obs=1)
+    mon.reset("net", 0)
+    mon.observe("net", 0, 1e-3, 1e-3)
+    assert not mon.observe("net", 0, 1.0, 1e-3)      # 1000x spike, clamped
+    for _ in range(3):
+        assert not mon.observe("net", 0, 1e-3, 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Drifted platform end to end: detect -> calibrate -> re-select -> hot_swap
+# ---------------------------------------------------------------------------
+
+class _DriftingServer(OptimisedServer):
+    """Emulates the serving machine slowing down by the platform's
+    ``time_scale``: plan execution is padded with a sleep proportional to the
+    excess scale, so observed per-image latency rises exactly like it would
+    on a genuinely slower host."""
+
+    def _run_plan(self, opt, xs, weights):
+        out = super()._run_plan(opt, xs, weights)
+        scale = getattr(opt.platform, "time_scale", 1.0)
+        if scale != 1.0:
+            time.sleep(0.004 * xs.shape[0] * (scale - 1.0))
+        return out
+
+
+def test_drifted_platform_recalibrates_and_hot_swaps():
+    platform = SimulatedPlatform("arm", max_triplets=16)
+    opt = optimise("edge_cnn", platform, executable=True, max_iters=250)
+    assert opt.predicted_cost_s > 0
+    pred0 = opt.predicted_cost_s
+
+    server = _DriftingServer(
+        max_batch=4, latency_budget_ms=1e9, workers=2, max_wait_ms=3.0,
+        drift_threshold=1.5, drift_alpha=0.5, drift_calib_obs=2,
+        recalibrate=make_recalibrator(sample_n=12, mode="factor"))
+    server.register(opt)
+    spec = opt.spec
+    try:
+        # establish the reference ratio on the healthy platform
+        for _ in range(4):
+            server.serve(opt.net, _requests(spec, 4))
+        assert server.stats(opt.net)["recalibrations"] == 0
+
+        # the platform drifts: profiling AND execution get 4x slower
+        platform.time_scale = 4.0
+        platform.invalidate_datasets()
+
+        tickets = []
+        deadline = time.time() + 60.0
+        while (server.stats(opt.net)["recalibrations"] == 0
+               and time.time() < deadline):
+            tickets += [server.submit(opt.net, x) for x in _requests(spec, 4)]
+            for t in tickets[-4:]:
+                t.wait(30.0)
+        st = server.stats(opt.net)
+        assert st["recalibrations"] == 1, f"no recalibration: {st}"
+        assert st["generation"] == 1
+
+        # the swap happened mid-stream: nothing dropped, nothing corrupted
+        tickets += [server.submit(opt.net, x)
+                    for x in _requests(spec, 8, seed=1)]
+        assert all(t.wait(30.0) for t in tickets)
+        assert all(t.done and t.error is None and t.result is not None
+                   for t in tickets)
+
+        # recalibration really went through platform.calibrate on fresh
+        # (drifted) measurements: factor-corrected model, ~4x prediction
+        with server._cond:
+            new_opt = server._nets[opt.net].opt
+        assert new_opt.models.prim.kind.startswith("factor-")
+        assert 1.5 < new_opt.predicted_cost_s / pred0 < 12.0
+        assert new_opt.assignment  # re-selected, plan-compilable assignment
+        server.serve(opt.net, _requests(spec, 2, seed=2))
+    finally:
+        server.stop()
+    # exactly one excursion -> exactly one recalibration
+    assert server.stats(opt.net)["recalibrations"] == 1
