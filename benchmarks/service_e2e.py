@@ -1,5 +1,6 @@
-"""Service-layer end to end: cold vs warm optimise time, served img/s, and
-concurrent multi-network serving vs the serial pump baseline.
+"""Service-layer end to end: cold vs warm optimise time, served img/s,
+concurrent multi-network serving vs the serial pump baseline, zero-cost
+drift recalibration from served traffic, and deadline-aware batch windows.
 
 Cold pass: a fresh artifact store — pretrain the base platform model,
 calibrate onto the target platform, PBQP-select. Warm pass: identical calls
@@ -11,16 +12,32 @@ multi-network load (optimised + fixed-primitive variants of the net) is
 served twice — synchronous ``pump()`` vs the worker-pool serving core — to
 measure the concurrency win and p50/p99 queueing latency.
 
+The recalibration row drives a drifting platform until the serving loop
+detects the drift and hot-swaps a recalibration built from its OWN served
+observations (DESIGN.md §8.5), then times the fresh-profiling alternative on
+the same drifted platform. Profiling cost is made visible by charging each
+``profile()``'d config a nominal wall-clock cost (a real device pays
+repeats × runtime per config; the analytic simulator would otherwise hide
+exactly the cost the served-sample path eliminates).
+
+The deadline row serves a paced lone-request load twice: an effectively
+unbounded latency budget (batch windows run to their static cap) vs a tight
+budget (windows capped at budget − predicted execution, shrunk further by
+the drift monitor when observed p99 queueing exceeds the budget).
+
 Writes ``BENCH_service.json``. Exits nonzero if the warm pass is < 10x
-faster than cold, picks a different assignment, or concurrent multi-network
-throughput falls below the serial baseline — the CI smoke gates
-(``--smoke``).
+faster than cold, picks a different assignment, concurrent multi-network
+throughput falls below the serial baseline, the drift recalibration is not
+mostly served-sampled (≥ 50%) and faster than fresh profiling, or the
+deadline-aware window misses the budget on the smoke load — the CI smoke
+gates (``--smoke``).
 
 Run:  PYTHONPATH=src:. python benchmarks/service_e2e.py [--smoke]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import shutil
@@ -168,6 +185,137 @@ def concurrent_pass(opt, requests_per_net: int, budget_ms: float,
             "speedup": conc["images_per_s"] / serial["images_per_s"]}
 
 
+def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
+                       timeout_s: float = 120.0) -> Dict:
+    """Drift → detect → recalibrate-from-served-traffic → hot_swap, timed
+    against the fresh-profiling alternative on the same drifted platform."""
+    from repro.service import OptimisedServer, make_recalibrator, reoptimise
+    from repro.service.platforms import SimulatedPlatform
+
+    class ChargedPlatform(SimulatedPlatform):
+        """Charges wall-clock per profiled config: a real device pays
+        repeats × runtime for every measurement; the analytic simulator
+        answering instantly would hide the cost §8.5 eliminates."""
+
+        def __init__(self, name, charge_s, **kw):
+            super().__init__(name, **kw)
+            self.charge_s = charge_s
+            self.profiled_configs = 0
+
+        def profile(self, configs):
+            cfgs = np.atleast_2d(np.asarray(configs))
+            self.profiled_configs += len(cfgs)
+            time.sleep(self.charge_s * len(cfgs))
+            return super().profile(cfgs)
+
+    class DriftingServer(OptimisedServer):
+        def _run_plan(self, o, xs, weights):
+            out = super()._run_plan(o, xs, weights)
+            scale = getattr(o.platform, "time_scale", 1.0) or 1.0
+            if scale != 1.0:
+                time.sleep(0.02 * xs.shape[0] * (scale - 1.0))
+            return out
+
+    platform = ChargedPlatform(opt.platform.name, charge_s,
+                               max_triplets=opt.platform.max_triplets)
+    opt = dataclasses.replace(opt, platform=platform)
+
+    timing: Dict = {}
+    inner = make_recalibrator(sample_n=sample_n, mode="factor")
+
+    def recalibrate(o, served=None):
+        p0 = platform.profiled_configs
+        t0 = time.perf_counter()
+        new = inner(o, served=served)
+        timing["served_seconds"] = time.perf_counter() - t0
+        timing["served_profiled_configs"] = platform.profiled_configs - p0
+        return new
+
+    server = DriftingServer(
+        max_batch=4, latency_budget_ms=1e9, workers=2, max_wait_ms=3.0,
+        drift_threshold=1.5, drift_alpha=0.5, drift_calib_obs=2,
+        recalibrate=recalibrate)
+    server.register(opt)
+    n0 = opt.spec.nodes[0]
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((4, n0.c, n0.im, n0.im)).astype(np.float32)
+
+    # healthy phase: until the reference and the observation buffer exist
+    deadline = time.time() + timeout_s
+    while (server.stats(opt.net)["observed_dispatches"] < 6
+           and time.time() < deadline):
+        server.serve(opt.net, xs)
+    platform.time_scale = 4.0          # the machine gets 4x slower
+    platform.invalidate_datasets()
+    while (server.stats(opt.net)["recalibrations"] == 0
+           and time.time() < deadline):
+        server.serve(opt.net, xs)
+    st = server.stats(opt.net)
+    server.stop()
+
+    # the alternative on the same drifted platform: freshly profile the
+    # full calibration sample (pre-§8.5 behaviour), then recalibrate
+    p0 = platform.profiled_configs
+    t0 = time.perf_counter()
+    sample = platform.measure_sample(sample_n, seed=999)
+    reoptimise(opt, sample=sample, mode="factor")
+    fresh_seconds = time.perf_counter() - t0
+    return {"recalibrations": st["recalibrations"],
+            "generation": st["generation"],
+            "sample": st["recal_sample"],
+            "served_seconds": timing.get("served_seconds"),
+            "served_profiled_configs": timing.get("served_profiled_configs"),
+            "fresh_seconds": fresh_seconds,
+            "fresh_profiled_configs": platform.profiled_configs - p0,
+            "charge_s_per_config": charge_s,
+            "drift_ratio_at_stop": st["drift_ratio"]}
+
+
+def deadline_pass(opt, requests: int, budget_ms: float,
+                  max_wait_ms: float = 200.0) -> Dict:
+    """Paced lone-request load twice: unbounded budget (windows run to the
+    static cap) vs a tight budget (deadline-capped, monitor-shrunk). The
+    gate: with the budget set, steady-state p99 queueing stays within it."""
+    from repro.primitives.executor import make_weights
+    from repro.service import OptimisedServer
+
+    weights = make_weights(opt.spec)
+
+    def run(budget) -> Dict:
+        server = OptimisedServer(max_batch=16, latency_budget_ms=budget,
+                                 workers=2, max_wait_ms=max_wait_ms,
+                                 queue_depth=4096)
+        server.register(opt, weights=weights)
+        n0 = opt.spec.nodes[0]
+        rng = np.random.default_rng(4)
+        imgs = rng.standard_normal(
+            (8, n0.c, n0.im, n0.im)).astype(np.float32)
+        server.serve(opt.net, imgs[:2])            # warm small buckets
+        tickets = []
+        for i in range(requests):                  # paced lone arrivals:
+            tickets.append(server.submit(opt.net, imgs[i % len(imgs)]))
+            time.sleep(0.02)                       # windows, not batch-fill,
+        for t in tickets:                          # decide dispatch
+            t.wait(60.0)
+        st = server.stats(opt.net)
+        server.stop()
+        waits = np.array([t.queue_wait_s for t in tickets
+                          if t.done and not t.rejected], np.float64)
+        steady = waits[len(waits) // 2:]           # after window adaptation
+        return {"budget_ms": budget, "requests": len(tickets),
+                "queue_wait_p50_ms": float(np.percentile(waits, 50)) * 1e3,
+                "queue_wait_p99_ms": float(np.percentile(waits, 99)) * 1e3,
+                "steady_p99_ms": float(np.percentile(steady, 99)) * 1e3,
+                "budget_hit_rate": (float(np.mean(waits <= budget * 1e-3))
+                                    if np.isfinite(budget) else 1.0),
+                "window_scale": st["window_scale"],
+                "effective_wait_ms": st["effective_wait_ms"],
+                "dispatches": st["dispatches"]}
+
+    return {"max_wait_ms": max_wait_ms,
+            "unbounded": run(1e9), "budgeted": run(budget_ms)}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -181,6 +329,9 @@ def main() -> int:
                     help="worker threads for the concurrent serving row")
     ap.add_argument("--max-wait-ms", type=float, default=4.0,
                     help="batch window for the concurrent serving row")
+    ap.add_argument("--recal-sample-n", type=int, default=12,
+                    help="calibration sample size for the drift "
+                         "recalibration row")
     ap.add_argument("--store", default=None,
                     help="artifact store root (default: fresh temp dir, "
                          "removed afterwards, so the first pass is cold)")
@@ -221,6 +372,32 @@ def main() -> int:
              f"{concurrent['concurrent']['queue_wait_p50_ms']:.2f}/"
              f"{concurrent['concurrent']['queue_wait_p99_ms']:.2f} ms)")
 
+        recal = recalibration_pass(warm["opt"], sample_n=args.recal_sample_n)
+        frac = (recal["sample"] or {}).get("served_fraction", 0.0)
+        if recal["served_seconds"] is not None:
+            served_note = (f"{recal['served_seconds']:.2f}s, "
+                           f"{frac:.0%} served rows, "
+                           f"{recal['served_profiled_configs']} configs "
+                           f"profiled")
+        else:                          # drift loop never hot-swapped: the
+            served_note = "NO served-sample recalibration ran"   # gate fails
+        emit("service.recal_served_us",
+             (recal["served_seconds"] or float("inf")) * 1e6,
+             f"drift recal from served traffic: {served_note} "
+             f"(fresh path: {recal['fresh_seconds']:.2f}s for "
+             f"{recal['fresh_profiled_configs']} configs)")
+
+        deadline = deadline_pass(warm["opt"], max(rpn, 96), args.budget_ms)
+        emit("service.deadline_p99_us",
+             deadline["budgeted"]["steady_p99_ms"] * 1e3,
+             f"deadline windows: steady p99 "
+             f"{deadline['budgeted']['steady_p99_ms']:.1f} ms vs "
+             f"{args.budget_ms:.0f} ms budget "
+             f"(hit rate {deadline['budgeted']['budget_hit_rate']:.0%}, "
+             f"window scale {deadline['budgeted']['window_scale']:.2f}; "
+             f"unbounded p99 "
+             f"{deadline['unbounded']['queue_wait_p99_ms']:.1f} ms)")
+
         results = {
             "mode": "smoke" if args.smoke else "full",
             "net": args.net, "platform": args.platform, "base": args.base,
@@ -233,6 +410,8 @@ def main() -> int:
                            sorted(warm["opt"].assignment.items())},
             "served": served,
             "concurrent_serving": concurrent,
+            "recalibration": recal,
+            "deadline_batching": deadline,
         }
         with open(OUT_PATH, "w") as fh:
             json.dump(results, fh, indent=2)
@@ -250,6 +429,22 @@ def main() -> int:
                             f"{concurrent['speedup']:.2f}x the serial pump")
         if concurrent["concurrent"]["failed"] or concurrent["serial"]["failed"]:
             failures.append("concurrent serving failed requests")
+        if recal["recalibrations"] < 1:
+            failures.append("drift recalibration did not hot-swap")
+        if frac < 0.5:
+            failures.append(f"recalibration used only {frac:.0%} served "
+                            f"observations (< 50%)")
+        if not (recal["served_seconds"] is not None
+                and recal["served_seconds"] < recal["fresh_seconds"]):
+            failures.append(
+                f"served-sample recalibration ({recal['served_seconds']}s) "
+                f"not faster than fresh profiling "
+                f"({recal['fresh_seconds']:.2f}s)")
+        if deadline["budgeted"]["steady_p99_ms"] > args.budget_ms:
+            failures.append(
+                f"deadline windows: steady p99 queueing "
+                f"{deadline['budgeted']['steady_p99_ms']:.1f} ms exceeds the "
+                f"{args.budget_ms:.0f} ms budget")
         if failures:
             print("FAIL: " + "; ".join(failures), file=sys.stderr)
             return 1

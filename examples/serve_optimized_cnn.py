@@ -36,8 +36,14 @@ def main():
                     help="serve both nets concurrently through this many "
                          "worker threads (0 = sequential pump mode)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
-                    help="batch window when --workers > 0: max time a lone "
-                         "request waits for batch peers")
+                    help="batch window cap when --workers > 0: max time a "
+                         "lone request waits for batch peers")
+    ap.add_argument("--latency-budget-ms", type=float, default=float("inf"),
+                    help="per-request latency budget for the concurrent "
+                         "serving section: sets the perf-model batch cap and "
+                         "caps each batch window at budget minus predicted "
+                         "execution (deadline-aware batching, DESIGN.md "
+                         "§8.5); inf = batch-size cap only")
     args = ap.parse_args()
 
     prims = ["im2col-copy-ab-ki", "im2col-scan-ab-ki", "kn2row", "mec-col",
@@ -96,12 +102,17 @@ def main():
         print(f"== concurrent serving core: both nets, {args.workers} "
               f"workers, {args.max_wait_ms:.0f} ms batch window ==")
         server = OptimisedServer(max_batch=args.batch,
-                                 latency_budget_ms=float("inf"),
+                                 latency_budget_ms=args.latency_budget_ms,
                                  workers=args.workers,
                                  max_wait_ms=args.max_wait_ms,
                                  queue_depth=2 * args.requests * args.batch)
         server.register(opt, weights=weights)
         server.register(baseline, weights=weights)
+        s0 = server.stats(opt.net)
+        print(f"   batch cap {s0['batch_cap']}, effective window "
+              f"{s0['effective_wait_ms']:.2f} ms "
+              f"(cap {args.max_wait_ms:.1f} ms, budget "
+              f"{args.latency_budget_ms:.0f} ms)")
         for net in (opt.net, baseline.net):     # warm the plan cache
             server.serve(net, rng.standard_normal(
                 (args.batch, c, im, im)).astype(np.float32))

@@ -418,20 +418,32 @@ def fit_perf_model(kind: str,
 
 def factor_correct(base: PerfModel,
                    feats_sample: np.ndarray,
-                   runtimes_sample: np.ndarray) -> PerfModel:
+                   runtimes_sample: np.ndarray,
+                   fill_missing: bool = False) -> PerfModel:
     """Per-primitive multiplicative output correction estimated from a small
     sample of target-platform measurements (paper uses 1% ≈ 25 points).
     Returns a model whose predictions are ``base_prediction * factor[j]``.
     The factor is the geometric-mean runtime ratio per column, the MMSE
-    estimator in log space."""
+    estimator in log space.
+
+    ``fill_missing``: columns with no finite sample entry get the mean log
+    factor of the columns that have one, instead of staying uncorrected.
+    Served-traffic calibration samples only measure the *assigned*
+    primitives; leaving the rest at factor 1 on a uniformly drifted platform
+    would make every unmeasured primitive look cheap and skew the re-solved
+    selection towards exactly the columns nothing vouches for."""
     pred = base.predict(feats_sample)
     actual = np.asarray(runtimes_sample, np.float64)
     n_out = actual.shape[1]
     log_factor = np.zeros(n_out)
+    observed = np.zeros(n_out, bool)
     for j in range(n_out):
         m = np.isfinite(actual[:, j]) & np.isfinite(pred[:, j]) & (pred[:, j] > 0)
         if m.any():
             log_factor[j] = np.mean(np.log(actual[m, j]) - np.log(pred[m, j]))
+            observed[j] = True
+    if fill_missing and observed.any() and not observed.all():
+        log_factor[~observed] = np.mean(log_factor[observed])
     if isinstance(base, FactorCorrectedModel):
         # re-correction (e.g. each drift-loop generation) composes factors on
         # the underlying trained model instead of nesting wrapper on wrapper;

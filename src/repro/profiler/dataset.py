@@ -97,6 +97,64 @@ class PerfDataset:
                        platform=str(z["platform"]))
 
 
+def observations_to_dataset(feats: np.ndarray,
+                            assigned: Sequence[str],
+                            bucket_times: Sequence[Tuple[int, np.ndarray]],
+                            *,
+                            columns: Sequence[str],
+                            platform: str,
+                            feature_names: Sequence[str] = ("k", "c", "im",
+                                                            "s", "f")) -> PerfDataset:
+    """Fold served-dispatch attributions into a ``PerfDataset`` the
+    calibration path can consume (DESIGN.md §8.5).
+
+    ``feats`` is the served network's (L, 5) assigned layer configs,
+    ``assigned`` the primitive column per layer, and ``bucket_times`` one
+    ``(batch_bucket, (L,) attributed per-image seconds)`` entry per pow2
+    batch bucket observed (``DriftMonitor.attributed``). Per bucket, layers
+    sharing a config collapse into one dataset row — two layers with the
+    same config and column attribute identically, and the same config under
+    two different columns fills both entries of one row; every other column
+    stays NaN (unmeasured), exactly like a partially-applicable profiled row.
+
+    The output is deterministic for deterministic input: rows are ordered by
+    (bucket, config), so the same buffer snapshot always fingerprints — and
+    ``save``/``load`` round-trips — byte-identically.
+    """
+    feats = np.asarray(feats, np.float64)
+    assigned = list(assigned)
+    columns = list(columns)
+    if feats.ndim != 2 or len(assigned) != feats.shape[0]:
+        raise ValueError(f"feats {feats.shape} vs {len(assigned)} assigned "
+                         f"columns")
+    missing = sorted(set(assigned) - set(columns))
+    if missing:
+        raise ValueError(f"assigned columns {missing} not in dataset "
+                         f"columns")
+    col_idx = {c: j for j, c in enumerate(columns)}
+    out_feats: List[np.ndarray] = []
+    out_times: List[np.ndarray] = []
+    for bucket, times in sorted(bucket_times, key=lambda bt: bt[0]):
+        times = np.asarray(times, np.float64)
+        if times.shape != (feats.shape[0],):
+            raise ValueError(f"bucket {bucket}: times {times.shape} vs "
+                             f"{feats.shape[0]} layers")
+        rows: Dict[Tuple[float, ...], np.ndarray] = {}
+        for i in range(feats.shape[0]):
+            key = tuple(feats[i])
+            row = rows.get(key)
+            if row is None:
+                row = rows[key] = np.full(len(columns), np.nan)
+            row[col_idx[assigned[i]]] = times[i]
+        for key in sorted(rows):
+            out_feats.append(np.asarray(key, np.float64))
+            out_times.append(rows[key])
+    if not out_feats:
+        raise ValueError("no observations to convert")
+    return PerfDataset(np.stack(out_feats), np.stack(out_times),
+                       columns, list(feature_names), platform)
+
+
 def simulate_primitive_dataset(platform: str,
                                max_triplets: Optional[int] = None,
                                noisy: bool = True) -> PerfDataset:

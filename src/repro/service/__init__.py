@@ -16,15 +16,16 @@ from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
 from repro.service.platforms import (HostPlatform, Platform, PlatformModels,
                                      SimulatedPlatform, get_platform,
                                      host_machine_id)
-from repro.service.serving import (DriftMonitor, DriftStats, NetQueue,
-                                   OptimisedServer, Ticket, WorkerPool,
-                                   make_recalibrator)
+from repro.service.serving import (DriftMonitor, DriftStats, LayerProfile,
+                                   NetQueue, OptimisedServer,
+                                   ServedObservation, Ticket, WorkerPool,
+                                   layer_profile, make_recalibrator)
 
 __all__ = [
     "ArtifactStore", "digest",
-    "DriftMonitor", "DriftStats", "HostPlatform", "NetQueue",
+    "DriftMonitor", "DriftStats", "HostPlatform", "LayerProfile", "NetQueue",
     "OptimisedNetwork", "OptimisedServer", "Platform", "PlatformModels",
-    "SimulatedPlatform", "Ticket", "WorkerPool",
-    "get_platform", "host_machine_id", "make_recalibrator", "optimise",
-    "reoptimise",
+    "ServedObservation", "SimulatedPlatform", "Ticket", "WorkerPool",
+    "get_platform", "host_machine_id", "layer_profile", "make_recalibrator",
+    "optimise", "reoptimise",
 ]

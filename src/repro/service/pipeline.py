@@ -149,6 +149,8 @@ def optimise(net: Union[str, CNNSpec],
 def reoptimise(opt: OptimisedNetwork,
                *,
                sample=None,
+               served=None,
+               sample_n: int = 16,
                budget: float = 0.05,
                mode: str = "auto",
                store: Optional[ArtifactStore] = None,
@@ -156,13 +158,20 @@ def reoptimise(opt: OptimisedNetwork,
                max_iters: Optional[int] = None,
                executable: Optional[bool] = None) -> OptimisedNetwork:
     """Re-optimise an already-optimised network from fresh measurements —
-    the serving drift loop's entry point (DESIGN.md §8.3).
+    the serving drift loop's entry point (DESIGN.md §8.3, §8.5).
 
     ``sample``: a ``PerfDataset`` of *fresh* target measurements (e.g.
     ``platform.measure_sample()`` taken after drift was detected); when
     given, ``platform.calibrate`` corrects the current models onto it
     without touching any cached profiling pool. Without a sample this is a
     plain re-calibration at ``budget`` against the platform's dataset.
+
+    ``served``: attributed served-traffic observations
+    (``profiler.dataset.observations_to_dataset``) — the zero-cost path:
+    ``platform.calibrate`` composes the calibration sample from them,
+    freshly profiling only the ≤ ``sample_n`` configs the serving buffer
+    does not cover. The composition mix lands in
+    ``result.models.sample_info``.
 
     ``executable``: None infers it from ``opt`` (a selection restricted to
     fewer columns than its models was an ``executable=True`` optimise).
@@ -172,7 +181,8 @@ def reoptimise(opt: OptimisedNetwork,
                          "optimise() — platform and models must be attached")
     iters = {} if max_iters is None else {"max_iters": max_iters}
     models = opt.platform.calibrate(opt.models, budget, mode=mode,
-                                    sample=sample, store=store, seed=seed,
+                                    sample=sample, served=served,
+                                    sample_n=sample_n, store=store, seed=seed,
                                     **iters)
     if executable is None:
         executable = list(opt.columns) != list(opt.models.prim.columns)

@@ -49,6 +49,9 @@ class PlatformModels:
     budget: Optional[float] = None   # calibration sample budget (None = full)
     warm: bool = False            # True = loaded from the artifact store
     seconds: float = 0.0          # wall time of pretrain()/calibrate()
+    # how the calibration sample was composed when served observations were
+    # reused (DESIGN.md §8.5): served vs freshly-profiled row counts etc.
+    sample_info: Optional[Dict] = None
 
     def provider(self, columns: Optional[Sequence[str]] = None) -> ModelProvider:
         return ModelProvider(self.prim, self.dlt, columns=columns)
@@ -149,7 +152,8 @@ class Platform(abc.ABC):
 
     def calibrate(self, base: Union[PerfModel, PlatformModels],
                   budget: float = 0.01, *, mode: str = "auto", store=None,
-                  sample=None, seed: int = 0, max_iters: int = 2000,
+                  sample=None, served=None, sample_n: int = 16,
+                  seed: int = 0, max_iters: int = 2000,
                   patience: int = 150, dlt_kind: str = "lin",
                   dlt_max_iters: int = 1500) -> PlatformModels:
         """Transfer path (§4.4): profile a ``budget`` sample of this platform
@@ -166,8 +170,27 @@ class Platform(abc.ABC):
         ``measure_sample``) instead of re-profiling the platform's cached
         pool, so a drifted platform is corrected from *post-drift* truth.
         ``budget`` is ignored when a sample is given.
+
+        ``served``: attributed served-traffic observations
+        (``observations_to_dataset``) — composed into the calibration sample
+        via ``compose_sample`` (fresh profiling only for the ≤ ``sample_n``
+        configs the serving buffer misses; ZERO profiling at full coverage).
+        Served rows only measure assigned primitives, so "auto" resolves to
+        factor correction with the pooled factor extended to unmeasured
+        columns (``factor_correct(fill_missing=True)``).
         """
         t0 = time.perf_counter()
+        sample_info = None
+        if served is not None:
+            if sample is not None:
+                raise ValueError("pass either sample= or served=, not both")
+            sample, sample_info = self.compose_sample(served, n=sample_n,
+                                                      seed=seed)
+            if mode == "auto":
+                # finetune on rows that are NaN outside the assigned columns
+                # would re-initialise every unmeasured head; the factor path
+                # with fill_missing is the estimator that matches the data
+                mode = "factor"
         base_prim = base.prim if isinstance(base, PlatformModels) else base
         # a wide base (e.g. the 49-column simulator model) transfers onto a
         # platform that profiles fewer primitives by slicing its output head
@@ -191,9 +214,12 @@ class Platform(abc.ABC):
         if mode not in ("factor", "finetune", "scratch"):
             raise ValueError(f"unknown calibration mode {mode!r}")
 
+        fill = sample_info is not None
+
         def train_prim() -> PerfModel:
             if mode == "factor":
-                return factor_correct(base_prim, sample.feats, sample.times)
+                return factor_correct(base_prim, sample.feats, sample.times,
+                                      fill_missing=fill)
             # fine-tuning continues gradient training, so a factor-corrected
             # base unwraps to the underlying trained network
             from repro.core.perfmodel import FactorCorrectedModel
@@ -207,7 +233,7 @@ class Platform(abc.ABC):
                                   max_iters=max_iters, patience=patience)
 
         extra = dict(seed=seed, mode=mode, budget=budget,
-                     sample=sample.fingerprint(),
+                     sample=sample.fingerprint(), fill=fill,
                      base=None if mode == "scratch" else base_prim.fingerprint(),
                      max_iters=max_iters, patience=patience)
         if budget is None:
@@ -225,7 +251,8 @@ class Platform(abc.ABC):
         dlt, dlt_warm = self._native_dlt(dlt_kind, 0, dlt_max_iters, store)
         return PlatformModels(prim, dlt, self.fingerprint(), mode,
                               budget=budget, warm=prim_warm and dlt_warm,
-                              seconds=time.perf_counter() - t0)
+                              seconds=time.perf_counter() - t0,
+                              sample_info=sample_info)
 
     def _sample_pool(self) -> Sequence:
         """Configs ``measure_sample`` may draw from — the platform's own
@@ -234,12 +261,25 @@ class Platform(abc.ABC):
         from repro.profiler import pools
         return pools.config_pool()
 
-    def measure_sample(self, n: int = 16, seed: int = 0) -> PerfDataset:
+    def measure_sample(self, n: int = 16, seed: int = 0,
+                       exclude: Optional[Sequence[Tuple]] = None) -> PerfDataset:
         """Freshly profile ``n`` layer configs drawn from this platform's
         pool — bypasses every dataset cache, so the measurements reflect the
         platform *as it is now*. This is the drift-recalibration input:
-        cheap (n ≈ 16 ≈ the paper's 1% budget) and honest about drift."""
+        cheap (n ≈ 16 ≈ the paper's 1% budget) and honest about drift.
+
+        ``exclude``: config tuples to skip — the served-observation top-up
+        path profiles only configs the serving buffer does NOT already
+        cover. When fewer than ``n`` configs remain, all of them are taken.
+        """
         cfgs = np.array(self._sample_pool(), np.int64)
+        if exclude:
+            skip = {tuple(map(int, c)) for c in exclude}
+            keep = [i for i in range(len(cfgs))
+                    if tuple(map(int, cfgs[i])) not in skip]
+            cfgs = cfgs[keep]
+            if not len(cfgs):
+                raise ValueError("measure_sample: every pool config excluded")
         rng = np.random.default_rng(seed)
         idx = rng.choice(len(cfgs), size=min(n, len(cfgs)), replace=False)
         sel = cfgs[np.sort(idx)]
@@ -247,6 +287,50 @@ class Platform(abc.ABC):
         return PerfDataset(np.asarray(sel, np.float64), times,
                            list(self.columns), ["k", "c", "im", "s", "f"],
                            self.name)
+
+    def compose_sample(self, served: PerfDataset, *, n: int = 16,
+                       seed: int = 0) -> Tuple[PerfDataset, Dict]:
+        """Build a calibration sample from served-traffic observations,
+        topping up with fresh ``measure_sample`` profiling only for configs
+        the serving buffer does not cover (DESIGN.md §8.5).
+
+        ``served`` is the ``observations_to_dataset`` output: rows over the
+        served network's layer configs, finite only at the assigned columns.
+        Its columns are embedded into this platform's full column set;
+        ``n - covered`` additional configs (if any) are freshly profiled from
+        the pool, excluding the covered ones. When the buffer already covers
+        ``n`` distinct configs the sample costs ZERO profiling.
+
+        Returns ``(sample, info)`` where info records the served/fresh row
+        mix — surfaced through ``PlatformModels.sample_info`` and the serving
+        stats so the recalibration economics are observable.
+        """
+        cols = list(self.columns)
+        unknown = sorted(set(served.columns) - set(cols))
+        if unknown:
+            raise ValueError(f"served columns {unknown} unknown to platform "
+                             f"{self.fingerprint()!r}")
+        embed = np.full((served.n, len(cols)), np.nan)
+        for j, c in enumerate(served.columns):
+            embed[:, cols.index(c)] = served.times[:, j]
+        covered = {tuple(map(int, row)) for row in
+                   np.asarray(served.feats, np.int64)}
+        missing = max(int(n) - len(covered), 0)
+        fresh_rows = 0
+        feats, times = np.asarray(served.feats, np.float64), embed
+        if missing > 0:
+            fresh = self.measure_sample(missing, seed=seed,
+                                        exclude=sorted(covered))
+            fresh_rows = fresh.n
+            feats = np.concatenate([feats, fresh.feats])
+            times = np.concatenate([times, fresh.times])
+        sample = PerfDataset(feats, times, cols,
+                             ["k", "c", "im", "s", "f"], self.name)
+        total = served.n + fresh_rows
+        info = {"served_rows": int(served.n), "fresh_rows": int(fresh_rows),
+                "served_fraction": served.n / total,
+                "covered_configs": len(covered), "requested_n": int(n)}
+        return sample, info
 
     def invalidate_datasets(self) -> None:
         """Drop cached profiled datasets AND the DLT-model memo so the next

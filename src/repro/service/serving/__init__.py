@@ -11,13 +11,15 @@ observe → recalibrate loop.
     ticket = server.submit(opt.net, image)
     ticket.wait()
 """
-from repro.service.serving.drift import DriftMonitor, DriftStats
+from repro.service.serving.drift import (DriftMonitor, DriftStats,
+                                         LayerProfile, ServedObservation)
 from repro.service.serving.queues import NetQueue, Ticket
-from repro.service.serving.server import (OptimisedServer, main,
-                                          make_recalibrator)
+from repro.service.serving.server import (OptimisedServer, layer_profile,
+                                          main, make_recalibrator)
 from repro.service.serving.workers import WorkerPool
 
 __all__ = [
-    "DriftMonitor", "DriftStats", "NetQueue", "OptimisedServer", "Ticket",
-    "WorkerPool", "main", "make_recalibrator",
+    "DriftMonitor", "DriftStats", "LayerProfile", "NetQueue",
+    "OptimisedServer", "ServedObservation", "Ticket", "WorkerPool",
+    "layer_profile", "main", "make_recalibrator",
 ]

@@ -1,4 +1,4 @@
-"""Calibration-drift detection from served latencies (DESIGN.md §8.3).
+"""Calibration-drift detection and serving telemetry (DESIGN.md §8.3, §8.5).
 
 The perf model predicts per-image runtime on the platform it was calibrated
 for; the server observes per-image runtime on the machine actually executing
@@ -19,13 +19,72 @@ resets the stats, because the new model has a new prediction scale).
 
 Per-observation log-ratios are clamped to ±``clamp`` so a single pathological
 dispatch (GC pause, page fault storm) cannot fake a sustained drift.
+
+Beyond detection, the monitor is the serving-telemetry sink:
+
+* **Observation buffer** (``record`` via ``observe(batch=...)``): every
+  cleanly-timed dispatch (jit-compile dispatches excluded by the server) is
+  one free measurement of the drifted platform. A bounded per-network deque
+  keeps ``(batch bucket, clamped log-ratio, timestamp)``; ``attributed()``
+  turns it into per-layer-config runtimes (see below) so drift-triggered
+  recalibration can calibrate from served traffic instead of paying
+  ``measure_sample`` profiling.
+* **Window caps** (``observe_wait``): per-batch queueing waits feed a p99
+  estimate; when it exceeds the latency budget the monitor halves the
+  network's batch-window cap (``window_scale``), and doubles it back once
+  p99 drops under half the budget — load-adaptive deadline batching.
+
+Attribution: a dispatch times the *whole* compiled plan, not one layer. The
+model's per-layer predictions give the split: a dispatch observed at drift
+``exp(δ)`` relative to the calibration reference contributes
+``predicted_j * exp(δ)`` for every assigned layer config j. δ is estimated
+per batch bucket with an exponentially-weighted mean of the buffered
+log-ratios minus the reference, so (a) fresh post-drift entries dominate a
+buffer that still holds pre-drift history, and (b) the sample stays in the
+*model's* prediction scale — mixing cleanly with freshly profiled top-up
+rows instead of smuggling in the serving host's absolute clock.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import threading
-from typing import Dict, Optional, Tuple
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# window-cap adaptation: adjust at most every WAIT_EVERY recorded waits once
+# WAIT_MIN_OBS samples exist; the cap never shrinks below MIN_WINDOW_SCALE
+WAIT_MIN_OBS = 16
+WAIT_EVERY = 32
+MIN_WINDOW_SCALE = 1.0 / 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    """The served network's assigned layer configs and their model-predicted
+    per-image runtimes — the attribution key for turning whole-plan dispatch
+    timings into per-layer observations."""
+
+    feats: np.ndarray              # (L, 5) conv-layer (k, c, im, s, f) rows
+    columns: Tuple[str, ...]       # (L,) assigned primitive per layer
+    predicted: np.ndarray          # (L,) model-predicted per-image seconds
+
+    def __post_init__(self):
+        if not (len(self.feats) == len(self.columns) == len(self.predicted)):
+            raise ValueError("feats/columns/predicted lengths differ")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedObservation:
+    """One cleanly-timed dispatch: its pow2 batch bucket, the clamped
+    log(observed/predicted) per-image ratio, and when it was recorded."""
+
+    batch: int
+    log_r: float
+    t: float
 
 
 @dataclasses.dataclass
@@ -37,6 +96,14 @@ class DriftStats:
     ewma_log: float = 0.0
     in_excursion: bool = False
     triggers: int = 0                  # excursions flagged
+    layers: Optional[LayerProfile] = None
+    buffer: Deque[ServedObservation] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=256))
+    # queueing-wait telemetry driving the batch-window cap
+    waits: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=512))
+    window_scale: float = 1.0
+    waits_since_adjust: int = 0
 
     def ratio(self) -> float:
         """Current drift ratio: 1.0 = serving exactly as calibrated."""
@@ -49,23 +116,36 @@ class DriftMonitor:
     """Thread-safe served-vs-predicted latency tracker for many networks."""
 
     def __init__(self, *, threshold: float = 1.5, alpha: float = 0.25,
-                 calib_obs: int = 3, clamp: float = math.log(8.0)):
+                 calib_obs: int = 3, clamp: float = math.log(8.0),
+                 obs_cap: int = 256, obs_alpha: float = 0.5,
+                 clock: Optional[Callable[[], float]] = None):
         if threshold <= 1.0:
             raise ValueError(f"threshold must be > 1, got {threshold}")
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if obs_cap < 1:
+            raise ValueError(f"obs_cap must be >= 1, got {obs_cap}")
+        if not 0.0 < obs_alpha <= 1.0:
+            raise ValueError(f"obs_alpha must be in (0, 1], got {obs_alpha}")
         self.threshold = threshold
         self.alpha = alpha
         self.calib_obs = max(int(calib_obs), 1)
         self.clamp = clamp
+        self.obs_cap = int(obs_cap)
+        self.obs_alpha = obs_alpha
+        self.clock = clock if clock is not None else time.monotonic
         self._stats: Dict[str, DriftStats] = {}
         self._lock = threading.Lock()
 
-    def reset(self, net: str, generation: int) -> DriftStats:
+    def reset(self, net: str, generation: int,
+              layers: Optional[LayerProfile] = None) -> DriftStats:
         """Start fresh stats for ``net`` at ``generation`` (register /
-        hot_swap: the model — and so the prediction scale — changed)."""
+        hot_swap: the model — and so the prediction scale — changed).
+        ``layers`` is the new assignment's attribution profile; without it
+        dispatches are still drift-tracked but not buffered as samples."""
         with self._lock:
-            s = DriftStats(generation=generation)
+            s = DriftStats(generation=generation, layers=layers,
+                           buffer=deque(maxlen=self.obs_cap))
             self._stats[net] = s
             return s
 
@@ -74,10 +154,14 @@ class DriftMonitor:
             return self._stats.get(net)
 
     def observe(self, net: str, generation: int, observed_s: float,
-                predicted_s: float) -> bool:
+                predicted_s: float, batch: Optional[int] = None) -> bool:
         """Feed one dispatch's per-image (observed, predicted) runtimes.
         Returns True exactly when a new excursion starts — i.e. at most once
-        between resets, the moment recalibration should be scheduled."""
+        between resets, the moment recalibration should be scheduled.
+
+        ``batch`` (the dispatch's pow2 bucket) additionally records the
+        observation into the served-sample buffer; the server passes it only
+        for cleanly-timed dispatches (jit-compile dispatches excluded)."""
         if (not math.isfinite(observed_s) or observed_s <= 0.0
                 or not math.isfinite(predicted_s) or predicted_s <= 0.0):
             return False
@@ -94,9 +178,11 @@ class DriftMonitor:
                                 s.ref_log + self.clamp)
                 s.ref_log += (log_r - s.ref_log) / s.n
                 s.ewma_log = s.ref_log
+                self._record_locked(s, batch, log_r)
                 return False
             log_r = min(max(log_r, s.ref_log - self.clamp),
                         s.ref_log + self.clamp)
+            self._record_locked(s, batch, log_r)
             s.ewma_log += self.alpha * (log_r - s.ewma_log)
             excess = abs(s.ewma_log - s.ref_log)
             if s.in_excursion:
@@ -108,6 +194,109 @@ class DriftMonitor:
                 s.triggers += 1
                 return True
             return False
+
+    def _record_locked(self, s: DriftStats, batch: Optional[int],
+                       log_r: float) -> None:
+        if batch is None or s.layers is None:
+            return
+        s.buffer.append(ServedObservation(batch=int(batch), log_r=log_r,
+                                          t=self.clock()))
+
+    # -- served-sample telemetry -------------------------------------------
+    def observations(self, net: str) -> List[ServedObservation]:
+        """Snapshot of the buffered (non-compile) dispatch observations."""
+        with self._lock:
+            s = self._stats.get(net)
+            return list(s.buffer) if s is not None else []
+
+    def coverage(self, net: str) -> int:
+        """Distinct layer configs the buffer covers — every buffered dispatch
+        timed the whole plan, so one clean dispatch covers every assigned
+        config; zero only when nothing (attributable) was served."""
+        with self._lock:
+            s = self._stats.get(net)
+            if s is None or s.layers is None or not s.buffer:
+                return 0
+            return len({tuple(map(float, row)) for row in s.layers.feats})
+
+    def attributed(self, net: str) -> Optional[Tuple[np.ndarray,
+                                                     Tuple[str, ...],
+                                                     List[Tuple[int, np.ndarray]],
+                                                     Dict]]:
+        """Attribute the buffered whole-plan timings to per-layer configs.
+
+        Returns ``(feats, columns, [(bucket, times), ...], info)`` — for each
+        batch bucket seen, the (L,) attributed per-image runtimes
+        ``predicted * exp(δ_bucket)`` where δ is the exponentially-weighted
+        mean of the bucket's buffered log-ratios minus the calibration
+        reference (newest observations dominate, so a buffer holding
+        pre-drift history still yields a post-drift sample). None when the
+        buffer is empty or the network has no attribution profile.
+        """
+        with self._lock:
+            s = self._stats.get(net)
+            if s is None or s.layers is None or not s.buffer:
+                return None
+            entries = list(s.buffer)
+            layers, ref = s.layers, s.ref_log
+        by_bucket: Dict[int, float] = {}
+        counts: Dict[int, int] = {}
+        for e in entries:              # oldest -> newest: EW mean converges
+            if e.batch in by_bucket:   # onto the most recent observations
+                by_bucket[e.batch] += self.obs_alpha * (e.log_r - by_bucket[e.batch])
+            else:
+                by_bucket[e.batch] = e.log_r
+            counts[e.batch] = counts.get(e.batch, 0) + 1
+        rows = [(b, layers.predicted * math.exp(by_bucket[b] - ref))
+                for b in sorted(by_bucket)]
+        info = {"dispatches": len(entries),
+                "buckets": {int(b): int(counts[b]) for b in sorted(counts)},
+                "images": int(sum(e.batch for e in entries)),
+                "drift": {int(b): math.exp(by_bucket[b] - ref)
+                          for b in sorted(by_bucket)}}
+        return layers.feats, layers.columns, rows, info
+
+    # -- deadline telemetry: queueing p99 vs budget ------------------------
+    def observe_wait(self, net: str, generation: int, wait_s: float,
+                     budget_s: Optional[float]) -> Optional[float]:
+        """Feed one dispatch's oldest-ticket queueing wait. Returns a new
+        ``window_scale`` when the cap should change (p99 wait above the
+        latency budget halves it; p99 under budget/2 doubles it back towards
+        1.0), else None. Without a finite budget, waits are only recorded.
+        Generation-checked like ``observe``: a claim racing a hot_swap's
+        stats reset must not graft a stale scale onto the fresh queue (the
+        monitor's fresh stats would sit at 1.0 and never emit the restore)."""
+        if not math.isfinite(wait_s) or wait_s < 0.0:
+            return None
+        with self._lock:
+            s = self._stats.get(net)
+            if s is None or s.generation != generation:
+                return None
+            s.waits.append(wait_s)
+            if (budget_s is None or not math.isfinite(budget_s)
+                    or budget_s <= 0.0):
+                return None
+            s.waits_since_adjust += 1
+            if (len(s.waits) < WAIT_MIN_OBS
+                    or s.waits_since_adjust < WAIT_EVERY):
+                return None
+            p99 = float(np.percentile(np.asarray(s.waits, np.float64), 99))
+            new = s.window_scale
+            if p99 > budget_s:
+                new = max(s.window_scale / 2.0, MIN_WINDOW_SCALE)
+            elif p99 < budget_s / 2.0 and s.window_scale < 1.0:
+                new = min(s.window_scale * 2.0, 1.0)
+            if new == s.window_scale:
+                s.waits_since_adjust = 0
+                return None
+            s.window_scale = new
+            s.waits_since_adjust = 0
+            s.waits.clear()            # judge the new cap on fresh samples
+            return new
+
+    def window_scale(self, net: str) -> float:
+        s = self.stats(net)
+        return s.window_scale if s is not None else 1.0
 
     def ratio(self, net: str) -> float:
         s = self.stats(net)

@@ -1,5 +1,5 @@
-"""Tickets and per-network request queues with timed batch windows
-(DESIGN.md §8.1).
+"""Tickets and per-network request queues with deadline-aware batch windows
+(DESIGN.md §8.1, §8.5).
 
 A ``Ticket`` is one queued inference request. It carries a ``threading.Event``
 so a submitting thread can block on exactly its own result while worker
@@ -11,10 +11,20 @@ tiny; a single lock keeps claim/dispatch ordering trivially correct). What it
 *does* own is the batching policy:
 
   * dispatch when ``len(queue) >= batch_cap``            (the batch is full)
-  * or when ``oldest ticket age >= max_wait``            (the window expired)
+  * or when ``oldest ticket age >= effective max_wait``  (the window expired)
 
-so a lone request is dispatched within ``max_wait`` instead of starving while
+so a lone request is dispatched within the window instead of starving while
 the server waits for peers, and a burst still fills perf-model-sized batches.
+
+The *effective* window is deadline-aware: given a per-request latency budget
+and the model-predicted execution time of the pending batch (its pow2 bucket
+× predicted per-image cost), the window is capped at
+``budget − predicted execution`` — waiting any longer would blow the budget
+even if the batch ran exactly as predicted. The static ``max_wait`` cap is
+further scaled by ``window_scale`` (the drift monitor shrinks it when
+observed p99 queueing latency exceeds the budget, and restores it when the
+queue drains — DESIGN.md §8.5).
+
 ``push`` refuses tickets beyond ``depth`` — the backpressure signal: the
 caller marks the ticket rejected rather than queueing unbounded work the
 budgeted throughput can't drain.
@@ -22,18 +32,28 @@ budgeted throughput can't drain.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
 
 def monotonic() -> float:
     """One clock for every queue/window decision (perf_counter: monotonic,
-    high resolution)."""
+    high resolution). Tests inject their own clock through the server so
+    window semantics are checked without wall-clock sleeps."""
     return time.perf_counter()
+
+
+def pow2_floor(n: int) -> int:
+    return 1 << (max(n, 1).bit_length() - 1)
+
+
+def pow2_ceil(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -48,9 +68,11 @@ class Ticket:
     done: bool = False
     error: Optional[str] = None
     rejected: bool = False             # refused at submit (backpressure)
-    submitted_s: float = 0.0           # monotonic() timestamps
+    submitted_s: float = 0.0           # clock timestamps
     dispatched_s: float = 0.0
     completed_s: float = 0.0
+    clock: Optional[Callable[[], float]] = dataclasses.field(
+        default=None, repr=False, compare=False)
     _done_event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
 
@@ -69,25 +91,51 @@ class Ticket:
         self.result = result
         self.error = error
         self.rejected = rejected
-        self.completed_s = monotonic()
+        self.completed_s = (self.clock or monotonic)()
         self.done = True
         self._done_event.set()
 
 
 class NetQueue:
-    """Bounded FIFO + timed batch window for one network. All methods must
-    be called under the serving core's lock."""
+    """Bounded FIFO + deadline-aware batch window for one network. All
+    methods must be called under the serving core's lock."""
 
-    def __init__(self, *, depth: int, batch_cap: int, max_wait_s: float):
+    def __init__(self, *, depth: int, batch_cap: int, max_wait_s: float,
+                 budget_s: Optional[float] = None,
+                 predicted_s: float = 0.0):
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
         self.depth = depth
         self.batch_cap = batch_cap
         self.max_wait_s = max_wait_s
+        # deadline inputs: per-request latency budget and the model-predicted
+        # per-image execution cost (both optional: without them the window is
+        # the static max_wait, scaled by window_scale)
+        self.budget_s = budget_s
+        self.predicted_s = predicted_s
+        self.window_scale = 1.0        # shrunk/restored by the drift monitor
         self._q: Deque[Ticket] = deque()
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def effective_wait_s(self) -> float:
+        """Current batch window: ``max_wait`` capped by the latency budget
+        minus the predicted execution time of the pending batch's pow2
+        bucket, all scaled by ``window_scale``. The scale applies to the
+        *capped* window — when observed waits blow the budget anyway
+        (optimistic predictions, claim contention), the monitor's shrink
+        must bite below the deadline cap too, not just below ``max_wait``.
+        Never negative — a pending batch whose predicted execution alone
+        exceeds the budget dispatches immediately (waiting cannot help
+        it)."""
+        w = self.max_wait_s
+        if (self.budget_s is not None and math.isfinite(self.budget_s)
+                and self.predicted_s > 0.0
+                and math.isfinite(self.predicted_s)):
+            b = pow2_ceil(len(self._q)) if self._q else 1
+            w = min(w, self.budget_s - self.predicted_s * b)
+        return max(w, 0.0) * self.window_scale
 
     def push(self, t: Ticket) -> bool:
         """Enqueue; False when the queue is at depth (backpressure)."""
@@ -103,14 +151,14 @@ class NetQueue:
             return False
         if drain or len(self._q) >= self.batch_cap:
             return True
-        return now - self._q[0].submitted_s >= self.max_wait_s
+        return now - self._q[0].submitted_s >= self.effective_wait_s()
 
     def next_deadline(self) -> Optional[float]:
-        """Monotonic time at which the oldest ticket's window expires (the
+        """Clock time at which the oldest ticket's window expires (the
         worker-pool wait bound); None when empty."""
         if not self._q:
             return None
-        return self._q[0].submitted_s + self.max_wait_s
+        return self._q[0].submitted_s + self.effective_wait_s()
 
     def take(self, n: int) -> List[Ticket]:
         """Pop up to ``n`` tickets in FIFO order."""

@@ -6,15 +6,19 @@ closing the paper's loop end to end:
 
     profile → model → select → serve → observe → recalibrate → hot_swap
 
-Four mechanisms make it a serving system rather than a loop:
+Five mechanisms make it a serving system rather than a loop:
 
   * **Perf-model-predicted batching** (§7.3, kept): each network's batch cap
     is ``latency_budget / predicted_per_image`` rounded down to a power of
     two; partial batches pad up to the next pow2 bucket so the plan cache
     stays small, pad rows are sliced off before delivery.
-  * **Timed batch windows** (``queues.NetQueue``): a batch dispatches when it
-    is full OR when the oldest ticket has waited ``max_wait`` — a lone
-    request is never starved waiting for peers.
+  * **Deadline-aware batch windows** (``queues.NetQueue``): a batch
+    dispatches when it is full, OR when the oldest ticket has waited the
+    *effective* window — ``max_wait`` capped by the latency budget minus the
+    model-predicted execution time of the pending batch, so a request never
+    idles in the queue past the point where its budget could still be met.
+    The drift monitor shrinks the window cap when observed p99 queueing
+    latency exceeds the budget (and restores it as the queue drains).
   * **Worker pool + backpressure** (``workers.WorkerPool``): ``workers`` > 0
     overlaps plan execution across networks (JAX releases the GIL inside
     compiled plans) under per-network in-flight limits; queues are bounded,
@@ -23,22 +27,30 @@ Four mechanisms make it a serving system rather than a loop:
   * **Drift-triggered recalibration** (``drift.DriftMonitor``): served
     per-image latency is tracked against the model's prediction (EWMA of the
     log ratio vs a per-generation reference); when it drifts past
-    ``drift_threshold`` the server runs ``recalibrate`` (by default:
-    ``platform.calibrate`` on fresh measurements + PBQP re-select, see
-    ``make_recalibrator``) on a background thread and ``hot_swap``s the
-    result in — exactly once per excursion, without touching in-flight
-    tickets.
+    ``drift_threshold`` the server runs ``recalibrate`` on a background
+    thread and ``hot_swap``s the result in — exactly once per excursion,
+    without touching in-flight tickets.
+  * **Served-sample reuse** (§8.5): every cleanly-timed dispatch is a free
+    measurement; the drift monitor buffers them, and recalibration
+    calibrates from the attributed per-layer observations, paying
+    ``measure_sample`` profiling only for configs the buffer misses — at
+    full coverage a recalibration costs zero extra profiling.
+
+Timing is injectable: ``clock=`` replaces the monotonic clock everywhere a
+window/queueing decision reads time, so tests drive batch-window semantics
+deterministically instead of sleeping.
 
 CLI — the documented CNN serving command (the LM decode demo lives at
 ``repro.launch.lm_decode``):
 
     python -m repro.service.server --net edge_cnn --platform arm \
-        --workers 2 --max-wait-ms 5 --drift-threshold 1.5
+        --workers 2 --max-wait-ms 5 --latency-budget-ms 50 --drift-threshold 1.5
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import inspect
 import itertools
 import threading
 import time
@@ -48,17 +60,41 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
-from repro.service.serving.drift import DriftMonitor
-from repro.service.serving.queues import NetQueue, Ticket, monotonic
+from repro.service.serving.drift import DriftMonitor, LayerProfile
+from repro.service.serving.queues import (NetQueue, Ticket, monotonic,
+                                          pow2_ceil, pow2_floor)
 from repro.service.serving.workers import WorkerPool
 
 
-def _pow2_floor(n: int) -> int:
-    return 1 << (max(n, 1).bit_length() - 1)
-
-
-def _pow2_ceil(n: int) -> int:
-    return 1 << (max(n, 1) - 1).bit_length()
+def layer_profile(opt: OptimisedNetwork) -> Optional[LayerProfile]:
+    """The attribution profile for served-sample telemetry: the network's
+    assigned conv-layer configs, their assigned primitive columns, and the
+    model-predicted per-image runtimes (DESIGN.md §8.5). None when the
+    network carries no models (``from_assignment``) or nothing attributable —
+    such networks are still drift-monitored, just not sample-buffered."""
+    from repro.models.cnn_zoo import ConvLayer
+    if opt.models is None:
+        return None
+    model = opt.models.prim
+    rows, cols = [], []
+    for i, node in enumerate(opt.spec.nodes):
+        if not isinstance(node, ConvLayer):
+            continue
+        prim = opt.assignment.get(i)
+        if prim is None or prim not in model.columns:
+            continue
+        rows.append(node.config)
+        cols.append(prim)
+    if not rows:
+        return None
+    feats = np.asarray(rows, np.float64)
+    pred = model.predict(feats)
+    idx = [model.columns.index(c) for c in cols]
+    predicted = pred[np.arange(len(rows)), idx]
+    if not (np.isfinite(predicted).all() and (predicted > 0).all()
+            and np.isfinite(predicted.sum())):
+        return None
+    return LayerProfile(feats=feats, columns=tuple(cols), predicted=predicted)
 
 
 @dataclasses.dataclass
@@ -91,6 +127,7 @@ class _NetState:
     rejected: int = 0
     recalibrations: int = 0
     last_recal_error: Optional[str] = None
+    last_recal_sample: Optional[Dict] = None   # served/fresh mix (§8.5)
     busy_s: float = 0.0
     # (generation, batch_bucket) -> completion time of the FIRST execution:
     # any dispatch that STARTED before that instant may have paid (or waited
@@ -118,24 +155,29 @@ class OptimisedServer:
                  max_wait_ms: float = 5.0,
                  queue_depth: int = 256,
                  max_inflight: int = 1,
-                 recalibrate: Optional[Callable[[OptimisedNetwork],
-                                               OptimisedNetwork]] = None,
+                 recalibrate: Optional[Callable] = None,
                  drift_threshold: float = 1.5,
                  drift_alpha: float = 0.25,
-                 drift_calib_obs: int = 3):
+                 drift_calib_obs: int = 3,
+                 obs_cap: int = 256,
+                 clock: Optional[Callable[[], float]] = None):
         self.max_batch = max_batch
         self.latency_budget_ms = latency_budget_ms
         self.max_wait_ms = max_wait_ms
         self.queue_depth = queue_depth
         self.max_inflight = max_inflight
+        self._clock = clock if clock is not None else monotonic
         self._nets: Dict[str, _NetState] = {}
         self._order: List[str] = []            # round-robin claim fairness
         self._rr = 0
         self._cond = threading.Condition()
         self._drift = DriftMonitor(threshold=drift_threshold,
                                    alpha=drift_alpha,
-                                   calib_obs=drift_calib_obs)
+                                   calib_obs=drift_calib_obs,
+                                   obs_cap=obs_cap,
+                                   clock=self._clock)
         self._recalibrate = recalibrate
+        self._recal_served = _accepts_served(recalibrate)
         self._recal_threads: List[threading.Thread] = []
         self._pool = WorkerPool(self, workers) if workers > 0 else None
 
@@ -165,14 +207,17 @@ class OptimisedServer:
         self.stop()
 
     # -- registration ------------------------------------------------------
+    def _budget_s(self, budget_ms: Optional[float]) -> float:
+        return (budget_ms if budget_ms is not None
+                else self.latency_budget_ms) * 1e-3
+
     def _batch_cap(self, predicted_cost_s: float,
                    budget_ms: Optional[float]) -> int:
-        budget_s = (budget_ms if budget_ms is not None
-                    else self.latency_budget_ms) * 1e-3
+        budget_s = self._budget_s(budget_ms)
         if not np.isfinite(predicted_cost_s) or predicted_cost_s <= 0:
-            return _pow2_floor(self.max_batch)
+            return pow2_floor(self.max_batch)
         cap = int(np.clip(budget_s / predicted_cost_s, 1, self.max_batch))
-        return _pow2_floor(cap)
+        return pow2_floor(cap)
 
     def register(self, opt: OptimisedNetwork, *, weights: Optional[Dict] = None,
                  latency_budget_ms: Optional[float] = None,
@@ -183,11 +228,14 @@ class OptimisedServer:
         fresh ``make_weights(spec)`` (serving demo weights). Per-network
         overrides fall back to the server-wide knobs."""
         from repro.primitives.executor import make_weights
+        pred = opt.predicted_cost_s
         queue = NetQueue(
             depth=queue_depth if queue_depth is not None else self.queue_depth,
-            batch_cap=self._batch_cap(opt.predicted_cost_s, latency_budget_ms),
+            batch_cap=self._batch_cap(pred, latency_budget_ms),
             max_wait_s=(max_wait_ms if max_wait_ms is not None
-                        else self.max_wait_ms) * 1e-3)
+                        else self.max_wait_ms) * 1e-3,
+            budget_s=self._budget_s(latency_budget_ms),
+            predicted_s=pred if np.isfinite(pred) and pred > 0 else 0.0)
         state = _NetState(
             opt=opt,
             weights=weights if weights is not None else make_weights(opt.spec),
@@ -212,7 +260,8 @@ class OptimisedServer:
             for t in stranded:
                 t.finish(error=f"rejected: {opt.net!r} was re-registered",
                          rejected=True)
-        self._drift.reset(opt.net, state.generation)
+        self._drift.reset(opt.net, state.generation,
+                          layers=layer_profile(opt))
         self.start()
         return state
 
@@ -221,10 +270,12 @@ class OptimisedServer:
                  expect_generation: Optional[int] = None) -> bool:
         """Atomically replace ``net``'s assignment (platform recalibrated).
         Weights are kept; already-claimed batches finish on the old plan; the
-        next dispatch compiles (or cache-hits) the new one. Drift stats reset
-        — the new model predicts on a new scale. ``expect_generation`` makes
-        the swap conditional (a background recalibration must not clobber a
-        newer manual swap); returns False when the expectation fails."""
+        next dispatch compiles (or cache-hits) the new one. Drift stats —
+        including the observation buffer and the adaptive window scale —
+        reset: the new model predicts on a new scale. ``expect_generation``
+        makes the swap conditional (a background recalibration must not
+        clobber a newer manual swap); returns False when the expectation
+        fails."""
         with self._cond:
             state = self._nets[net]
             if opt.spec.name != state.opt.spec.name:
@@ -236,15 +287,20 @@ class OptimisedServer:
             if latency_budget_ms is not None:
                 state.latency_budget_ms = latency_budget_ms
             state.opt = opt
-            state.queue.batch_cap = self._batch_cap(opt.predicted_cost_s,
+            pred = opt.predicted_cost_s
+            state.queue.batch_cap = self._batch_cap(pred,
                                                     state.latency_budget_ms)
+            state.queue.budget_s = self._budget_s(state.latency_budget_ms)
+            state.queue.predicted_s = (pred if np.isfinite(pred) and pred > 0
+                                       else 0.0)
+            state.queue.window_scale = 1.0     # re-learn under the new model
             state.generation += 1
             generation = state.generation
             # superseded generations' bucket entries are never read again
             state.bucket_ready = {k: v for k, v in state.bucket_ready.items()
                                   if k[0] >= generation}
             self._cond.notify_all()
-        self._drift.reset(net, generation)
+        self._drift.reset(net, generation, layers=layer_profile(opt))
         return True
 
     # -- request path ------------------------------------------------------
@@ -263,7 +319,8 @@ class OptimisedServer:
             if x.shape != (n0.c, n0.im, n0.im):
                 raise ValueError(f"{net!r} expects one ({n0.c}, {n0.im}, "
                                  f"{n0.im}) image per request, got {x.shape}")
-            t = Ticket(net=net, x=x, submitted_s=monotonic())
+            t = Ticket(net=net, x=x, submitted_s=self._clock(),
+                       clock=self._clock)
             if not state.queue.push(t):
                 state.rejected += 1
                 t.finish(error=f"rejected: {net!r} queue at depth "
@@ -287,10 +344,17 @@ class OptimisedServer:
                 continue
             tickets = state.queue.take(state.queue.batch_cap)
             state.inflight += 1
-            t_claim = monotonic()
+            t_claim = self._clock()
             for t in tickets:
                 t.dispatched_s = t_claim
                 state.waits.append(t.queue_wait_s)
+            # deadline telemetry: the oldest ticket's wait vs the budget
+            # drives the adaptive window cap (drift monitor owns the policy)
+            scale = self._drift.observe_wait(name, state.generation,
+                                             tickets[0].queue_wait_s,
+                                             state.queue.budget_s)
+            if scale is not None:
+                state.queue.window_scale = scale
             self._rr = (self._rr + k + 1) % n
             return _Batch(net=name, tickets=tickets,
                           generation=state.generation, state=state,
@@ -304,13 +368,13 @@ class OptimisedServer:
         with self._cond:
             while True:
                 stopping = stop_event.is_set()
-                batch = self._claim_locked(monotonic(), drain=stopping)
+                batch = self._claim_locked(self._clock(), drain=stopping)
                 if batch is not None:
                     return batch
                 if stopping and not any(len(s.queue)
                                         for s in self._nets.values()):
                     return None
-                now = monotonic()
+                now = self._clock()
                 deadlines = [s.queue.next_deadline()
                              for s in self._nets.values()
                              if len(s.queue) and s.inflight < s.max_inflight]
@@ -345,18 +409,18 @@ class OptimisedServer:
         opt, weights = batch.opt, batch.weights    # claim-time snapshot
         tickets = batch.tickets
         take = len(tickets)
-        b = _pow2_ceil(take)
+        b = pow2_ceil(take)
         xs = np.stack([t.x for t in tickets])
         if b != take:
             pad = np.broadcast_to(xs[-1:], (b - take,) + xs.shape[1:])
             xs = np.concatenate([xs, pad])
         err: Optional[str] = None
-        t0 = monotonic()
+        t0 = self._clock()
         try:
             out = self._run_plan(opt, xs, weights)
         except Exception as e:       # mark this batch failed, keep serving
             err = str(e)
-        t1 = monotonic()
+        t1 = self._clock()
         elapsed = t1 - t0
 
         clean_timing = False
@@ -384,14 +448,33 @@ class OptimisedServer:
         for j, t in enumerate(tickets):
             t.finish(result=out[j])
 
-        # drift: per-image served latency vs model prediction
+        # drift: per-image served latency vs model prediction. A cleanly
+        # timed dispatch is also one free measurement — ``batch=b`` buffers
+        # it for served-sample recalibration (compile dispatches never get
+        # here, so the buffer only holds steady-state timings)
         pred = opt.predicted_cost_s
         if (clean_timing and np.isfinite(pred) and pred > 0
                 and self._drift.observe(batch.net, batch.generation,
-                                        elapsed / b, pred)):
+                                        elapsed / b, pred, batch=b)):
             self._schedule_recalibration(batch.net, batch.generation)
 
     # -- drift-triggered recalibration ------------------------------------
+    def served_sample(self, net: str):
+        """The buffered served observations attributed to layer configs, as
+        a ``PerfDataset`` ready for ``platform.calibrate(served=...)`` —
+        None when nothing attributable was served (§8.5)."""
+        att = self._drift.attributed(net)
+        if att is None:
+            return None
+        feats, cols, bucket_rows, _info = att
+        with self._cond:
+            state = self._nets.get(net)
+            platform = state.opt.platform if state is not None else None
+        from repro.profiler.dataset import observations_to_dataset
+        return observations_to_dataset(
+            feats, cols, bucket_rows, columns=sorted(set(cols)),
+            platform=platform.name if platform is not None else "served")
+
     def _schedule_recalibration(self, net: str, generation: int) -> None:
         if self._recalibrate is None:
             return
@@ -409,7 +492,11 @@ class OptimisedServer:
                 return               # swapped while we were scheduled
             opt = state.opt
         try:
-            new_opt = self._recalibrate(opt)
+            if self._recal_served:
+                new_opt = self._recalibrate(opt,
+                                            served=self.served_sample(net))
+            else:
+                new_opt = self._recalibrate(opt)
         except Exception as e:       # serving continues on the stale model
             with self._cond:
                 state.last_recal_error = str(e)
@@ -417,6 +504,8 @@ class OptimisedServer:
         if self.hot_swap(net, new_opt, expect_generation=generation):
             with self._cond:
                 state.recalibrations += 1
+                state.last_recal_sample = getattr(new_opt.models,
+                                                  "sample_info", None)
 
     def recalibrations_idle(self) -> bool:
         """True when no background recalibration is in flight (tests/CLI)."""
@@ -424,15 +513,18 @@ class OptimisedServer:
         return not self._recal_threads
 
     # -- synchronous path --------------------------------------------------
-    def pump(self) -> int:
-        """Drain the queues inline on the calling thread (windows ignored —
-        pump IS the arrival of serving capacity). Returns the dispatch
-        count. This is the ``workers=0`` serving mode; with a worker pool
-        running it simply competes for claims and remains safe."""
+    def pump(self, drain: bool = True) -> int:
+        """Serve queued tickets inline on the calling thread, returning the
+        dispatch count. ``drain=True`` (the ``workers=0`` serving mode)
+        ignores batch windows — pump IS the arrival of serving capacity.
+        ``drain=False`` dispatches only batches that are *ready* (full, or
+        window expired against the injected clock) — the deterministic poll
+        used by window-semantics tests. With a worker pool running, pump
+        simply competes for claims and remains safe."""
         dispatches = 0
         while True:
             with self._cond:
-                batch = self._claim_locked(monotonic(), drain=True)
+                batch = self._claim_locked(self._clock(), drain=drain)
             if batch is None:
                 return dispatches
             self.execute(batch)
@@ -446,9 +538,9 @@ class OptimisedServer:
         drains mid-submission instead of tripping backpressure."""
         if self._pool is not None and self._pool.running:
             tickets = [self.submit(net, x) for x in xs]
-            deadline = monotonic() + timeout
+            deadline = self._clock() + timeout
             for t in tickets:
-                if not t.wait(max(deadline - monotonic(), 0.0)):
+                if not t.wait(max(deadline - self._clock(), 0.0)):
                     raise TimeoutError(f"{net!r}: ticket not served within "
                                        f"{timeout:.1f}s")
         else:
@@ -478,11 +570,15 @@ class OptimisedServer:
                    "rejected": s.rejected,
                    "recalibrations": s.recalibrations,
                    "last_recal_error": s.last_recal_error,
+                   "recal_sample": s.last_recal_sample,
+                   "window_scale": s.queue.window_scale,
+                   "effective_wait_ms": s.queue.effective_wait_s() * 1e3,
                    "queue_wait_p50_ms": (float(np.percentile(waits, 50)) * 1e3
                                          if waits.size else 0.0),
                    "queue_wait_p99_ms": (float(np.percentile(waits, 99)) * 1e3
                                          if waits.size else 0.0)}
         out["drift_ratio"] = self._drift.ratio(net)
+        out["observed_dispatches"] = len(self._drift.observations(net))
         return out
 
     @property
@@ -490,20 +586,49 @@ class OptimisedServer:
         return sorted(self._nets)
 
 
+def _accepts_served(recalibrate: Optional[Callable]) -> bool:
+    """Whether ``recalibrate`` takes the served-sample keyword — legacy
+    single-argument recalibrators stay supported (fresh-profiling path)."""
+    if recalibrate is None:
+        return False
+    try:
+        params = inspect.signature(recalibrate).parameters
+    except (TypeError, ValueError):
+        return False
+    return ("served" in params
+            or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()))
+
+
 def make_recalibrator(*, store=None, sample_n: int = 16, mode: str = "factor",
                       budget: Optional[float] = None,
                       max_iters: Optional[int] = None,
-                      seed: int = 0) -> Callable[[OptimisedNetwork],
-                                                 OptimisedNetwork]:
-    """Default drift-recalibration policy: freshly measure ``sample_n``
-    configs on the network's platform (post-drift truth), ``calibrate`` the
-    current models onto them, re-solve the PBQP, return the new
-    ``OptimisedNetwork`` for ``hot_swap``. The sample seed advances per call
-    so successive excursions draw different configs."""
+                      seed: int = 0,
+                      use_served: bool = True) -> Callable:
+    """Default drift-recalibration policy (DESIGN.md §8.3/§8.5). With
+    ``use_served`` (default) the server's buffered served observations form
+    the calibration sample, freshly measuring only the configs the buffer
+    misses; without them (or with ``use_served=False``) it falls back to
+    freshly measuring ``sample_n`` configs on the network's platform
+    (post-drift truth). Either way: ``calibrate`` the current models onto
+    the sample, re-solve the PBQP, return the new ``OptimisedNetwork`` for
+    ``hot_swap``. The sample seed advances per call so successive excursions
+    draw different configs.
+
+    ``budget`` selects a third policy that overrides served reuse entirely:
+    a plain budgeted re-calibration against the platform's (cached) dataset
+    — no ``measure_sample``, no served sample. Use it when the platform's
+    profiling pool is cheap/trusted and drift triggers should simply re-run
+    the §4.4 transfer at that budget."""
     counter = itertools.count()
 
-    def recalibrate(opt: OptimisedNetwork) -> OptimisedNetwork:
+    def recalibrate(opt: OptimisedNetwork,
+                    served=None) -> OptimisedNetwork:
         k = next(counter)
+        if use_served and served is not None and budget is None:
+            return reoptimise(opt, served=served, sample_n=sample_n,
+                              mode=mode, store=store, seed=seed + k,
+                              max_iters=max_iters)
         sample = (opt.platform.measure_sample(sample_n, seed=seed + k)
                   if budget is None else None)
         return reoptimise(opt, sample=sample,
@@ -536,13 +661,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="artifact GC: keep only the newest K artifacts per "
                          "category after each put (default: keep all)")
     ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--budget-ms", type=float, default=50.0,
-                    help="per-dispatch latency budget (sets the batch cap)")
+    ap.add_argument("--latency-budget-ms", "--budget-ms", dest="budget_ms",
+                    type=float, default=50.0,
+                    help="per-request latency budget: sets the perf-model "
+                         "batch cap AND caps each batch window at budget "
+                         "minus the predicted execution time (deadline-aware "
+                         "batching)")
     ap.add_argument("--workers", type=int, default=0,
                     help="serving worker threads; 0 = synchronous pump mode")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
-                    help="batch window: max time a ticket waits for batch "
-                         "peers before its partial batch dispatches")
+                    help="batch window cap: max time a ticket waits for "
+                         "batch peers before its partial batch dispatches "
+                         "(the deadline-aware effective window never exceeds "
+                         "it)")
     ap.add_argument("--queue-depth", type=int, default=256,
                     help="per-network queue bound; submits beyond it are "
                          "rejected (backpressure)")
@@ -551,6 +682,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "background recalibration + hot swap")
     ap.add_argument("--drift-alpha", type=float, default=0.25,
                     help="EWMA smoothing for the drift ratio")
+    ap.add_argument("--obs-cap", type=int, default=256,
+                    help="served-observation buffer size per network (the "
+                         "free recalibration sample)")
+    ap.add_argument("--recal-sample-n", type=int, default=16,
+                    help="calibration sample size for drift recalibration; "
+                         "configs the served buffer covers cost no profiling")
+    ap.add_argument("--no-served-reuse", action="store_true",
+                    help="disable served-observation reuse: drift "
+                         "recalibration always freshly profiles its full "
+                         "sample (the pre-§8.5 behaviour)")
     ap.add_argument("--max-triplets", type=int, default=60,
                     help="simulated profiling pool size")
     ap.add_argument("--max-iters", type=int, default=2000)
@@ -590,11 +731,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              queue_depth=args.queue_depth,
                              drift_threshold=args.drift_threshold,
                              drift_alpha=args.drift_alpha,
-                             recalibrate=make_recalibrator(store=store))
+                             obs_cap=args.obs_cap,
+                             recalibrate=make_recalibrator(
+                                 store=store,
+                                 sample_n=args.recal_sample_n,
+                                 use_served=not args.no_served_reuse))
     server.register(opt)
-    print(f"[serve] batch cap {server.stats(opt.net)['batch_cap']} "
+    s = server.stats(opt.net)
+    print(f"[serve] batch cap {s['batch_cap']} "
           f"(budget {args.budget_ms:.0f} ms), workers={args.workers}, "
-          f"window={args.max_wait_ms:.1f} ms")
+          f"window={args.max_wait_ms:.1f} ms "
+          f"(effective {s['effective_wait_ms']:.2f} ms)")
 
     n0 = opt.spec.nodes[0]
     rng = np.random.default_rng(0)
@@ -607,7 +754,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     print(f"[serve] {args.requests} requests in {dt*1e3:.0f} ms "
           f"({args.requests/dt:.1f} img/s, {s['dispatches']} dispatches, "
           f"{s['padded']} padded, queue p50/p99 "
-          f"{s['queue_wait_p50_ms']:.2f}/{s['queue_wait_p99_ms']:.2f} ms)")
+          f"{s['queue_wait_p50_ms']:.2f}/{s['queue_wait_p99_ms']:.2f} ms, "
+          f"{s['observed_dispatches']} observations buffered)")
 
     if args.hot_swap:
         recal = optimise(args.net, platform, store=store, base=opt.models,

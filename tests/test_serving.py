@@ -1,17 +1,37 @@
-"""Concurrent serving core (DESIGN.md §8): timed batch windows, worker-pool
-dispatch with backpressure, and drift-triggered recalibration."""
+"""Concurrent serving core (DESIGN.md §8): deadline-aware batch windows,
+worker-pool dispatch with backpressure, drift-triggered recalibration, and
+served-sample telemetry. Window semantics are tested against an injected
+fake clock — no wall-clock sleeps, no flakiness on loaded CI hosts."""
 import threading
 import time
 
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
 from repro.models import cnn_zoo
-from repro.service import (OptimisedNetwork, OptimisedServer, make_recalibrator,
-                           optimise)
+from repro.service import (OptimisedNetwork, OptimisedServer, layer_profile,
+                           make_recalibrator, optimise)
 from repro.service.platforms import SimulatedPlatform
-from repro.service.serving.drift import DriftMonitor
+from repro.service.serving.drift import DriftMonitor, LayerProfile
 from repro.service.serving.queues import NetQueue, Ticket
+
+
+class FakeClock:
+    """Deterministic injectable clock: time moves only when a test says so."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
 
 
 # ---------------------------------------------------------------------------
@@ -24,6 +44,15 @@ def served_net():
     from repro.primitives.plan import heuristic_assignment
     return OptimisedNetwork.from_assignment(spec, heuristic_assignment(spec),
                                             predicted_cost_s=2e-3)
+
+
+@pytest.fixture(scope="module")
+def optimised_net():
+    """A genuinely optimised network (models attached) — required by the
+    served-observation buffer, which attributes dispatch timings through the
+    model's per-layer predictions."""
+    platform = SimulatedPlatform("arm", max_triplets=16)
+    return optimise("edge_cnn", platform, executable=True, max_iters=250)
 
 
 def _requests(spec, n, seed=0):
@@ -57,38 +86,192 @@ def test_netqueue_depth_bound():
 
 
 # ---------------------------------------------------------------------------
-# Worker pool serving
+# Window semantics on the injected clock (no sleeps, no timing flakiness)
 # ---------------------------------------------------------------------------
 
 def test_lone_request_dispatched_within_max_wait(served_net):
-    """A single queued request must not starve waiting for batch peers."""
+    """A single queued request must not starve waiting for batch peers —
+    and must not dispatch before its window expires. Driven entirely by the
+    fake clock: ``pump(drain=False)`` only claims *ready* batches."""
+    clock = FakeClock()
     server = OptimisedServer(max_batch=8, latency_budget_ms=1e9,
-                             workers=1, max_wait_ms=25.0)
+                             max_wait_ms=25.0, clock=clock)
     server.register(served_net)
-    try:
-        server.serve(served_net.net, _requests(served_net.spec, 1))  # warm b=1
-        t = server.submit(served_net.net, _requests(served_net.spec, 1)[0])
-        assert t.wait(10.0) and t.error is None
-        # claimed by window expiry, not by a full batch: the wait must be at
-        # least ~max_wait but far below the no-window forever-starve
-        assert 0.015 <= t.queue_wait_s < 5.0
-    finally:
-        server.stop()
+    t = server.submit(served_net.net, _requests(served_net.spec, 1)[0])
+    assert server.pump(drain=False) == 0          # window open: nothing ready
+    clock.advance(0.024)
+    assert server.pump(drain=False) == 0          # still inside the window
+    clock.advance(0.0011)
+    assert server.pump(drain=False) == 1          # window expired: dispatched
+    assert t.done and t.error is None and t.result is not None
+    assert t.queue_wait_s == pytest.approx(0.0251)
 
 
 def test_full_batch_dispatches_before_window(served_net):
     """cap requests at once must dispatch on batch-full, not after max_wait."""
+    clock = FakeClock()
     server = OptimisedServer(max_batch=2, latency_budget_ms=1e9,
-                             workers=1, max_wait_ms=10_000.0)
+                             max_wait_ms=10_000.0, clock=clock)
     server.register(served_net)
-    try:
-        server.serve(served_net.net, _requests(served_net.spec, 2))  # warm b=2
-        t0 = time.perf_counter()
-        out = server.serve(served_net.net, _requests(served_net.spec, 2))
-        assert len(out) == 2
-        assert time.perf_counter() - t0 < 5.0    # << the 10s window
-    finally:
-        server.stop()
+    ts = [server.submit(served_net.net, x)
+          for x in _requests(served_net.spec, 2)]
+    assert server.pump(drain=False) == 1          # full batch, clock at 0
+    assert all(t.done and t.error is None for t in ts)
+
+
+def test_deadline_caps_window_below_max_wait():
+    """The effective window is the latency budget minus the predicted
+    execution time of the pending batch — a huge static max_wait must not
+    hold a request past the point where its budget could still be met."""
+    q = NetQueue(depth=8, batch_cap=8, max_wait_s=1.0,
+                 budget_s=0.010, predicted_s=0.002)
+    q.push(Ticket(net="n", x=np.zeros(1), submitted_s=100.0))
+    assert q.effective_wait_s() == pytest.approx(0.008)   # 10ms - 1*2ms
+    assert not q.ready(100.0079)
+    assert q.ready(100.0081)
+    assert q.next_deadline() == pytest.approx(100.008)
+    # a growing batch predicts longer execution: the window tightens
+    for k in range(3):
+        q.push(Ticket(net="n", x=np.zeros(1), submitted_s=100.0))
+    assert q.effective_wait_s() == pytest.approx(0.002)   # 10ms - 4*2ms
+    assert q.ready(100.003)
+    # predicted execution alone above budget: dispatch immediately
+    q.predicted_s = 0.004
+    assert q.effective_wait_s() == 0.0
+    assert q.ready(100.0)
+
+
+def test_deadline_window_through_server(served_net):
+    """Server-level: with a tight budget the request dispatches at
+    budget − predicted, far before the static max_wait."""
+    clock = FakeClock()
+    server = OptimisedServer(max_batch=2, latency_budget_ms=10.0,
+                             max_wait_ms=1000.0, clock=clock)
+    server.register(served_net)                   # predicted_cost_s = 2e-3
+    t = server.submit(served_net.net, _requests(served_net.spec, 1)[0])
+    assert server.pump(drain=False) == 0
+    clock.advance(0.0081)                         # > 10ms - 2ms
+    assert server.pump(drain=False) == 1
+    assert t.done and t.error is None
+    assert server.stats(served_net.net)["effective_wait_ms"] == \
+        pytest.approx(8.0)
+
+
+def test_window_scale_shrinks_and_recovers():
+    """Queueing p99 above the budget halves the window cap; p99 back under
+    half the budget restores it (drift monitor owns the policy)."""
+    from repro.service.serving import drift as drift_mod
+    mon = DriftMonitor()
+    mon.reset("net", 0)
+    budget = 0.010
+    scales = [mon.observe_wait("net", 0, 0.025, budget)
+              for _ in range(drift_mod.WAIT_EVERY)]
+    changed = [s for s in scales if s is not None]
+    assert changed == [0.5]
+    assert mon.window_scale("net") == 0.5
+    # keep overrunning: shrinks again (bounded below)
+    scales = [mon.observe_wait("net", 0, 0.025, budget)
+              for _ in range(drift_mod.WAIT_EVERY)]
+    assert [s for s in scales if s is not None] == [0.25]
+    # queue drains: waits fall under budget/2 and the cap recovers
+    recovered = []
+    for _ in range(4 * drift_mod.WAIT_EVERY):
+        s = mon.observe_wait("net", 0, 0.001, budget)
+        if s is not None:
+            recovered.append(s)
+    assert recovered == [0.5, 1.0]
+    # no budget: waits recorded, never adjusted
+    assert mon.observe_wait("net", 0, 1.0, None) is None
+    # stale generation (claim racing a hot_swap's reset): ignored
+    assert mon.observe_wait("net", 7, 1.0, budget) is None
+    assert mon.observe_wait("missing", 0, 1.0, budget) is None
+
+
+def test_claim_applies_window_scale(served_net):
+    """The server propagates the monitor's shrunk scale onto the queue at
+    claim time, so the next window is genuinely shorter."""
+    from repro.service.serving import drift as drift_mod
+    clock = FakeClock()
+    server = OptimisedServer(max_batch=1, latency_budget_ms=20.0,
+                             max_wait_ms=16.0, clock=clock)
+    server.register(served_net)
+    state = server._nets[served_net.net]
+    # every dispatch waited 2x the budget: after WAIT_EVERY claims the
+    # monitor halves the cap and the claim path applies it to the queue
+    for _ in range(drift_mod.WAIT_EVERY):
+        server.submit(served_net.net, _requests(served_net.spec, 1)[0])
+        clock.advance(0.040)
+        assert server.pump(drain=False) == 1
+    assert state.queue.window_scale == 0.5
+    assert server.stats(served_net.net)["window_scale"] == 0.5
+    q = NetQueue(depth=1, batch_cap=2, max_wait_s=0.016)
+    q.window_scale = 0.5
+    q.push(Ticket(net="n", x=np.zeros(1), submitted_s=0.0))
+    assert q.effective_wait_s() == pytest.approx(0.008)
+
+
+# ---------------------------------------------------------------------------
+# NetQueue invariants under arbitrary interleavings (property-based)
+# ---------------------------------------------------------------------------
+
+_OPS = st.lists(
+    st.one_of(st.tuples(st.just("push")),
+              st.tuples(st.just("advance"),
+                        st.floats(min_value=1e-4, max_value=0.03)),
+              st.tuples(st.just("dispatch"))),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=_OPS, depth=st.integers(1, 6), cap=st.integers(1, 6),
+       wait_s=st.floats(1e-3, 0.05),
+       budget_s=st.one_of(st.none(), st.floats(1e-3, 0.05)),
+       predicted_s=st.floats(0.0, 0.01))
+def test_netqueue_invariants(ops, depth, cap, wait_s, budget_s, predicted_s):
+    """Under arbitrary submit/advance/dispatch interleavings: FIFO order is
+    preserved, no accepted ticket is ever rejected (and vice versa), depth
+    is never exceeded, and ``ready`` fires iff the batch is full or the
+    oldest ticket's age reached the effective window."""
+    q = NetQueue(depth=depth, batch_cap=cap, max_wait_s=wait_s,
+                 budget_s=budget_s, predicted_s=predicted_s)
+    now = 0.0
+    accepted, rejected, dispatched = [], [], []
+
+    def check():
+        assert len(q) <= depth
+        oldest = q._q[0].submitted_s if len(q) else None
+        expect = (len(q) > 0
+                  and (len(q) >= cap
+                       or now - oldest >= q.effective_wait_s()))
+        assert q.ready(now) == expect
+        if len(q):
+            assert q.next_deadline() == pytest.approx(
+                oldest + q.effective_wait_s())
+        else:
+            assert q.next_deadline() is None
+
+    for op in ops:
+        if op[0] == "push":
+            t = Ticket(net="n", x=np.zeros(1), submitted_s=now)
+            (accepted if q.push(t) else rejected).append(t)
+        elif op[0] == "advance":
+            now += op[1]
+        elif op[0] == "dispatch" and q.ready(now):
+            dispatched.extend(q.take(cap))
+        check()
+    dispatched.extend(q.take(cap) if q.ready(now, drain=True) else [])
+    # FIFO: dispatches are exactly a prefix of the accepted order
+    assert [id(t) for t in dispatched] == \
+        [id(t) for t in accepted[:len(dispatched)]]
+    # accepted and rejected are disjoint; nothing is both dispatched and
+    # rejected
+    assert not (set(map(id, accepted)) & set(map(id, rejected)))
+    assert not (set(map(id, dispatched)) & set(map(id, rejected)))
+
+
+# ---------------------------------------------------------------------------
+# Worker pool serving
+# ---------------------------------------------------------------------------
 
 
 def test_concurrent_submits_pad_and_slice_correctly(served_net):
@@ -228,6 +411,141 @@ def test_drift_monitor_clamps_single_spike():
     assert not mon.observe("net", 0, 1.0, 1e-3)      # 1000x spike, clamped
     for _ in range(3):
         assert not mon.observe("net", 0, 1e-3, 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Served-observation buffer (§8.5): the free recalibration sample
+# ---------------------------------------------------------------------------
+
+def _profile2() -> LayerProfile:
+    feats = np.array([[16, 3, 32, 1, 3], [32, 16, 30, 1, 3]], np.float64)
+    return LayerProfile(feats=feats, columns=("kn2row", "mec-col"),
+                        predicted=np.array([1e-3, 2e-3]))
+
+
+def test_observation_buffer_bounded_eviction():
+    clock = FakeClock()
+    mon = DriftMonitor(calib_obs=1, obs_cap=4, clock=clock)
+    mon.reset("net", 0, layers=_profile2())
+    for i in range(7):
+        clock.advance(1.0)
+        mon.observe("net", 0, 1e-3 * (i + 1), 1e-3, batch=2)
+    obs = mon.observations("net")
+    assert len(obs) == 4                           # bounded: oldest evicted
+    assert [o.t for o in obs] == [4.0, 5.0, 6.0, 7.0]
+    assert all(o.batch == 2 for o in obs)
+
+
+def test_observation_buffer_gating():
+    """Only attributable, in-generation, batch-carrying observations land in
+    the buffer (the server passes ``batch`` only for cleanly-timed, i.e.
+    non-compile, dispatches)."""
+    mon = DriftMonitor(calib_obs=1)
+    mon.reset("nolayers", 0)                       # no attribution profile
+    mon.observe("nolayers", 0, 1e-3, 1e-3, batch=1)
+    assert mon.observations("nolayers") == []
+    mon.reset("net", 0, layers=_profile2())
+    mon.observe("net", 0, 1e-3, 1e-3)              # drift-only (compile path)
+    mon.observe("net", 1, 1e-3, 1e-3, batch=1)     # stale generation
+    assert mon.observations("net") == [] and mon.coverage("net") == 0
+    mon.observe("net", 0, 1e-3, 1e-3, batch=1)
+    assert len(mon.observations("net")) == 1
+    # one clean dispatch times the whole plan => covers every config
+    assert mon.coverage("net") == 2
+    mon.reset("net", 1, layers=_profile2())        # hot swap clears the buffer
+    assert mon.observations("net") == []
+
+
+def test_observation_coverage_counts_distinct_configs():
+    feats = np.array([[16, 3, 32, 1, 3], [16, 3, 32, 1, 3],
+                      [32, 16, 30, 1, 3]], np.float64)
+    prof = LayerProfile(feats=feats, columns=("kn2row", "mec-col", "kn2row"),
+                        predicted=np.array([1e-3, 1e-3, 2e-3]))
+    mon = DriftMonitor(calib_obs=1)
+    mon.reset("net", 0, layers=prof)
+    mon.observe("net", 0, 1e-3, 1e-3, batch=1)
+    assert mon.coverage("net") == 2                # two layers share a config
+
+
+def test_compile_dispatch_excluded_from_buffer(optimised_net):
+    """The first execution of each (generation, bucket) pays jit compile and
+    must not enter the served-sample buffer."""
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9,
+                             drift_calib_obs=1)
+    server.register(optimised_net)
+    spec = optimised_net.spec
+    net = optimised_net.net
+    server.serve(net, _requests(spec, 1))          # bucket-1 first: compile
+    assert server.stats(net)["observed_dispatches"] == 0
+    server.serve(net, _requests(spec, 1))
+    assert server.stats(net)["observed_dispatches"] == 1
+    server.serve(net, _requests(spec, 2))          # bucket-2 first: compile
+    assert server.stats(net)["observed_dispatches"] == 1
+    server.serve(net, _requests(spec, 2))
+    assert server.stats(net)["observed_dispatches"] == 2
+
+
+def test_served_sample_roundtrip_byte_stable(optimised_net, tmp_path):
+    """observation buffer -> attributed PerfDataset is deterministic, and
+    the dataset round-trips through save/load byte-identically."""
+    from repro.profiler.dataset import PerfDataset
+    server = OptimisedServer(max_batch=4, latency_budget_ms=1e9,
+                             drift_calib_obs=1)
+    server.register(optimised_net)
+    spec, net = optimised_net.spec, optimised_net.net
+    assert server.served_sample(net) is None       # nothing buffered yet
+    for _ in range(3):
+        server.serve(net, _requests(spec, 2))
+        server.serve(net, _requests(spec, 1))
+    ds1 = server.served_sample(net)
+    ds2 = server.served_sample(net)
+    assert ds1 is not None
+    assert ds1.fingerprint() == ds2.fingerprint()  # same buffer, same bytes
+    prof = layer_profile(optimised_net)
+    n_cfg = len({tuple(r) for r in prof.feats.tolist()})
+    assert ds1.n == 2 * n_cfg                      # buckets {1, 2} × configs
+    assert np.isfinite(ds1.times).any(axis=1).all()   # every row measured
+    assert set(ds1.columns) == set(prof.columns)
+    path = str(tmp_path / "served.npz")
+    ds1.save(path)
+    back = PerfDataset.load(path)
+    assert back.fingerprint() == ds1.fingerprint()
+    np.testing.assert_array_equal(back.feats, ds1.feats)
+    np.testing.assert_array_equal(back.times, ds1.times)
+
+
+def test_compose_sample_tops_up_only_missing_configs():
+    """Platform-side composition: configs the buffer covers are never
+    re-profiled; fresh top-up measures only the remainder — and full
+    coverage costs zero profiling."""
+    from repro.profiler.dataset import PerfDataset
+    platform = SimulatedPlatform("arm", max_triplets=12)
+    pool = np.asarray(platform._sample_pool(), np.int64)
+    covered = pool[:3]
+    col = platform.columns[0]
+    times = np.full((3, 1), 5e-4)
+    served = PerfDataset(np.asarray(covered, np.float64), times, [col],
+                         ["k", "c", "im", "s", "f"], platform.name)
+    calls = []
+    orig = platform.profile
+    platform.profile = lambda cfgs: calls.append(np.atleast_2d(cfgs)) or orig(cfgs)
+    sample, info = platform.compose_sample(served, n=5, seed=0)
+    assert info == {"served_rows": 3, "fresh_rows": 2,
+                    "served_fraction": 0.6, "covered_configs": 3,
+                    "requested_n": 5}
+    assert sample.n == 5 and sample.columns == platform.columns
+    fresh_cfgs = {tuple(map(int, r)) for r in calls[0]}
+    assert not fresh_cfgs & {tuple(map(int, r)) for r in covered}
+    # served entries embedded at the right column, NaN elsewhere
+    j = platform.columns.index(col)
+    assert np.all(sample.times[:3, j] == 5e-4)
+    other = np.delete(sample.times[:3], j, axis=1)
+    assert np.all(~np.isfinite(other))
+    # full coverage: zero profiling
+    calls.clear()
+    sample2, info2 = platform.compose_sample(served, n=3, seed=0)
+    assert info2["fresh_rows"] == 0 and info2["served_fraction"] == 1.0
+    assert sample2.n == 3 and not calls
 
 
 # ---------------------------------------------------------------------------

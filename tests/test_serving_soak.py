@@ -1,0 +1,164 @@
+"""Serving soak: concurrent submitters × three networks × a drifting
+platform (DESIGN.md §8). One sustained run asserting the system-level
+invariants that unit tests cannot see:
+
+  * zero lost tickets — every accepted submission finishes with a result,
+    every overflow submission is a marked rejection, nothing hangs;
+  * zero duplicated tickets — served image count equals accepted ticket
+    count exactly (a double-dispatched ticket would inflate it);
+  * generations are monotonic, and each drift recalibration is a real
+    hot-swap (generation == recalibrations) observed by later traffic;
+  * the recalibration calibrated from served observations (§8.5), not a
+    fresh profiling pass, once the buffer had coverage.
+
+Submitters run closed-loop (submit a burst, wait for it) so the soak
+exercises concurrency without saturating the CI host — an open-loop flood
+would bury the drift signal under multi-second queueing contention.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.service import (OptimisedNetwork, OptimisedServer,
+                           make_recalibrator, optimise)
+from repro.service.platforms import SimulatedPlatform
+
+
+class _DriftingServer(OptimisedServer):
+    """Emulates the serving machine slowing down by the network platform's
+    ``time_scale`` (sleep proportional to the excess), so observed per-image
+    latency rises unambiguously above any contention noise."""
+
+    def _run_plan(self, opt, xs, weights):
+        out = super()._run_plan(opt, xs, weights)
+        scale = getattr(opt.platform, "time_scale", 1.0) or 1.0
+        if scale != 1.0:
+            time.sleep(0.03 * xs.shape[0] * (scale - 1.0))
+        return out
+
+
+@pytest.fixture(scope="module")
+def soak_setup():
+    platform = SimulatedPlatform("arm", max_triplets=16)
+    opt = optimise("edge_cnn", platform, executable=True, max_iters=250)
+    from repro.primitives.plan import heuristic_assignment
+    spec = opt.spec
+    variants = [OptimisedNetwork.from_assignment(
+        spec, heuristic_assignment(spec), net=f"edge_cnn@{tag}",
+        predicted_cost_s=opt.predicted_cost_s) for tag in ("b", "c")]
+    return platform, opt, variants
+
+
+def test_soak_no_lost_tickets_monotonic_generations(soak_setup):
+    platform, opt, variants = soak_setup
+    platform.time_scale = 1.0          # module fixture: ensure clean start
+    platform.invalidate_datasets()
+    from repro.primitives.executor import make_weights
+    weights = make_weights(opt.spec)
+
+    server = _DriftingServer(
+        max_batch=4, latency_budget_ms=1e9, workers=3, max_wait_ms=2.0,
+        queue_depth=10_000, drift_threshold=1.5, drift_alpha=0.5,
+        drift_calib_obs=2,
+        recalibrate=make_recalibrator(sample_n=12, mode="factor"))
+    server.register(opt, weights=weights)
+    for v in variants:
+        server.register(v, weights=weights)
+    nets = [opt.net] + [v.net for v in variants]
+
+    n0 = opt.spec.nodes[0]
+    rng = np.random.default_rng(7)
+    images = [rng.standard_normal((n0.c, n0.im, n0.im)).astype(np.float32)
+              for _ in range(8)]       # shared read-only request pool
+
+    stop = threading.Event()
+    tickets = {net: [] for net in nets}
+    t_lock = threading.Lock()
+
+    def submitter(net, seed):
+        """Closed loop: submit a burst of 4, wait for it, repeat."""
+        local = []
+        r = np.random.default_rng(seed)
+        while not stop.is_set() and len(local) < 3000:
+            burst = [server.submit(net, images[r.integers(len(images))])
+                     for _ in range(4)]
+            local.extend(burst)
+            for t in burst:
+                t.wait(30.0)
+        with t_lock:
+            tickets[net].extend(local)
+
+    generations = []
+
+    def sampler():
+        while not stop.is_set():
+            generations.append(server.stats(opt.net)["generation"])
+            time.sleep(0.003)
+
+    threads = [threading.Thread(target=submitter, args=(net, 10 + i))
+               for i, net in enumerate(nets)]
+    threads.append(threading.Thread(target=sampler))
+    for th in threads:
+        th.start()
+
+    try:
+        # healthy phase: run until the drift reference AND the observation
+        # buffer are established (clean, post-compile dispatches) — a fixed
+        # sleep races bucket compilation on a loaded CI host
+        deadline = time.time() + 60.0
+        while (server.stats(opt.net)["observed_dispatches"] < 6
+               and time.time() < deadline):
+            time.sleep(0.05)
+        assert server.stats(opt.net)["observed_dispatches"] >= 6, \
+            "healthy phase never produced clean observations"
+        platform.time_scale = 4.0      # the machine gets 4x slower
+        platform.invalidate_datasets()
+        deadline = time.time() + 60.0
+        while (server.stats(opt.net)["recalibrations"] == 0
+               and time.time() < deadline):
+            time.sleep(0.05)
+    finally:
+        stop.set()
+        for th in threads:
+            th.join(60.0)
+        server.stop(timeout=60.0)      # drains every queued ticket
+        platform.time_scale = 1.0
+        platform.invalidate_datasets()
+
+    # -- zero lost tickets: everything is finished, nothing hangs ----------
+    all_tickets = [t for net in nets for t in tickets[net]]
+    assert all_tickets, "soak submitted nothing"
+    assert all(t.wait(30.0) for t in all_tickets)
+    accepted = [t for t in all_tickets if not t.rejected]
+    rejected = [t for t in all_tickets if t.rejected]
+    assert all(t.done and t.error is None and t.result is not None
+               for t in accepted)
+    assert all(t.done and t.result is None for t in rejected)
+
+    # -- zero duplicated tickets: served images == accepted submissions ----
+    stats = {net: server.stats(net) for net in nets}
+    assert sum(s["images"] for s in stats.values()) == len(accepted)
+    assert sum(s["rejected"] for s in stats.values()) == len(rejected)
+
+    # -- drift was detected and every recalibration was a real hot-swap ----
+    # (≥ 1: post-swap timing noise on a contended CI host may legitimately
+    # open a second excursion during the shutdown drain)
+    st = stats[opt.net]
+    assert st["recalibrations"] >= 1, f"no recalibration: {st}"
+    assert st["generation"] == st["recalibrations"]
+    assert st["last_recal_error"] is None
+    for v in variants:                 # undrifted nets untouched
+        assert stats[v.net]["recalibrations"] == 0
+        assert stats[v.net]["generation"] == 0
+
+    # -- §8.5: the recalibration sample came (mostly) from served traffic --
+    assert st["recal_sample"] is not None
+    assert st["recal_sample"]["served_fraction"] >= 0.5
+
+    # -- generations monotonic, and the swap is visible to later traffic ---
+    assert generations == sorted(generations)
+    out = server.serve(opt.net, [images[0], images[1]])
+    assert all(r is not None for r in out)
+    assert server.stats(opt.net)["generation"] >= st["generation"]
