@@ -44,6 +44,11 @@ def main():
                          "caps each batch window at budget minus predicted "
                          "execution (deadline-aware batching, DESIGN.md "
                          "§8.5); inf = batch-size cap only")
+    ap.add_argument("--backends", default=None, metavar="P1,P2,...",
+                    help="also demo predicted-cost cross-backend routing "
+                         "(DESIGN.md §9): optimise edge_cnn for each listed "
+                         "platform (e.g. 'arm,tpu') and serve one request "
+                         "stream routed to the predicted-cheapest backend")
     args = ap.parse_args()
 
     prims = ["im2col-copy-ab-ki", "im2col-scan-ab-ki", "kn2row", "mec-col",
@@ -137,6 +142,37 @@ def main():
         print(f"   both nets: {served/dt:8.1f} img/s overlapped "
               f"({dropped} failed/rejected) "
               f"vs {2*args.requests*args.batch/(t_base+t_opt):8.1f} sequential")
+        server.stop()
+
+    if args.backends:
+        specs = [s.strip() for s in args.backends.split(",") if s.strip()]
+        print(f"== cross-backend routing: {', '.join(specs)} ==")
+        from repro.service import get_platform
+        base = get_platform("intel", max_triplets=8).pretrain(max_iters=400)
+        server = OptimisedServer(max_batch=args.batch,
+                                 latency_budget_ms=float("inf"),
+                                 workers=max(args.workers, 2),
+                                 max_wait_ms=args.max_wait_ms,
+                                 queue_depth=2 * args.requests * args.batch)
+        for name in specs:
+            o = optimise(spec, get_platform(name, max_triplets=8), base=base,
+                         budget=0.05, executable=True, max_iters=400)
+            server.register(o, backend=name, weights=weights, max_inflight=1)
+        warm = rng.standard_normal((args.batch, c, im, im)).astype(np.float32)
+        server.serve(spec.name, warm)
+        t0 = time.perf_counter()
+        for _ in range(args.requests):
+            xs = rng.standard_normal((args.batch, c, im, im)).astype(np.float32)
+            server.serve(spec.name, xs)
+        dt = time.perf_counter() - t0
+        s = server.stats(spec.name)
+        print(f"   routed: {args.requests*args.batch/dt:8.1f} img/s "
+              f"across {len(specs)} backends")
+        for b, bs in s["backends"].items():
+            print(f"   backend {b:6s}: {bs['dispatches']} dispatches, "
+                  f"{bs['images']} images, queue p50/p99 "
+                  f"{bs['queue_wait_p50_ms']:.2f}/"
+                  f"{bs['queue_wait_p99_ms']:.2f} ms")
         server.stop()
 
     if args.sweep:

@@ -1,6 +1,6 @@
 """Qwen3-30B-A3B — MoE, 128 experts top-8, per-expert ffn 768, GQA kv=4,
 head_dim 128. [hf:Qwen/Qwen3-30B-A3B]. Expert axis shards over 'model'
-(expert parallelism); q/k-norm omitted (noted in DESIGN.md §9)."""
+(expert parallelism); q/k-norm omitted (noted in DESIGN.md §10)."""
 from repro.configs.base import ArchConfig, register
 from repro.models.moe import MoEConfig
 

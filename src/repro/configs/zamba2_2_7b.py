@@ -1,7 +1,7 @@
 """Zamba2-2.7B — Mamba2 backbone with a shared attention(+MLP) block applied
 every 6 SSM layers (weights shared across applications; per-invocation LoRA
-omitted, DESIGN.md §9). [arXiv:2411.15242; hf]. Shared attention uses a
-4096-token sliding window so the 500k-decode shape is serveable (§9)."""
+omitted, DESIGN.md §10). [arXiv:2411.15242; hf]. Shared attention uses a
+4096-token sliding window so the 500k-decode shape is serveable (§10)."""
 from repro.configs.base import ArchConfig, register
 from repro.models.ssm import SSMConfig
 

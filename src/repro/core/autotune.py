@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -82,6 +82,186 @@ def analytic_cost(M: int, K: int, N: int, bm: int, bk: int, bn: int,
     t_mem = traffic / _HBM_BW
     t_grid = gm * gn * gk * 1.2e-6      # per-tile dispatch overhead
     return max(t_compute, t_mem) + t_grid
+
+
+# ---------------------------------------------------------------------------
+# Conv-layer tile profiling (DESIGN.md §9): the autotune cost surface as a
+# Platform profiler. Each CNN layer config (k, c, im, s, f) lowers to the
+# GEMM its base primitive would run on the Pallas path; each
+# (primitive, tile-config) registry column prices that GEMM under its block
+# shape via ``analytic_cost``. The result is the same (L, P) matrix contract
+# the simulators produce — NaN where the base primitive is inapplicable,
+# deterministic lognormal noise keyed on the full column name — so the NN2
+# model, ``calibrate()`` and the PBQP consume tile columns exactly like
+# primitives.
+# ---------------------------------------------------------------------------
+
+# Pallas-backed base primitives (PR 2 batch kernels): im2col lowerings ride
+# the im2col_gemm kernel, winograd the winograd batch kernel, 1x1 the plain
+# tiled matmul. Only runnable bases — tile columns must stay executable.
+PALLAS_CONV_BASES: Tuple[str, ...] = (
+    "im2col-copy-ab-ki",
+    "im2col-scan-ab-ki",
+    "winograd-2x2-3x3",
+    "winograd-4x4-3x3",
+    "conv-1x1-gemm-ab-ki",
+)
+
+_TILE_SIGMA = 0.03                  # lognormal noise floor of the profiler
+_MASK52 = (1 << 52) - 1
+
+
+def pallas_columns(bases: Sequence[str] = PALLAS_CONV_BASES,
+                   variants: Optional[Sequence[str]] = None) -> List[str]:
+    """The (base primitive × matmul tile variant) column set."""
+    from repro.primitives.conv import tile_columns
+    return tile_columns(bases, list(variants) if variants is not None
+                        else list(VARIANTS))
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """Vectorised splitmix64 finaliser (same stream idiom as the platform
+    simulators — deterministic, counter-based, no RNG state)."""
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+def _lognormal(h: np.ndarray, sigma: float) -> np.ndarray:
+    u = (h & np.uint64(_MASK52)).astype(np.float64) / float(1 << 52)
+    v = ((h >> np.uint64(8)) & np.uint64(_MASK52)).astype(np.float64) / float(1 << 52)
+    z = np.sqrt(-2.0 * np.log(np.maximum(u, 1e-12))) * np.cos(2 * np.pi * v)
+    return np.exp(sigma * z)
+
+
+def _analytic_cost_np(M, K, N, bm: int, bk: int, bn: int,
+                      dtype_bytes: int = 2) -> np.ndarray:
+    """Broadcasting twin of ``analytic_cost`` (identical math; the VMEM
+    branch becomes a where)."""
+    M, K, N = (np.asarray(a, np.float64) for a in (M, K, N))
+    gm, gn, gk = np.ceil(M / bm), np.ceil(N / bn), np.ceil(K / bk)
+    eff_shape = (M / (gm * bm)) * (N / (gn * bn)) * (K / (gk * bk))
+    align = min(bm, 128) / 128 * min(bn, 128) / 128 * min(bk, 128) / 128
+    mxu_eff = 0.9 * eff_shape * (0.55 + 0.45 * align)
+    ws = dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn
+    if ws > _VMEM_BYTES:
+        mxu_eff = mxu_eff * 0.25
+    flops = 2.0 * M * N * K
+    t_compute = flops / (_PEAK * np.maximum(mxu_eff, 1e-9))
+    traffic = dtype_bytes * (M * K * gn + K * N * gm) + dtype_bytes * M * N
+    t_mem = traffic / _HBM_BW
+    t_grid = gm * gn * gk * 1.2e-6
+    return np.maximum(t_compute, t_mem) + t_grid
+
+
+def conv_tile_time_batch(configs: np.ndarray,
+                         columns: Optional[Sequence[str]] = None,
+                         *, noisy: bool = True,
+                         time_scale: float = 1.0) -> np.ndarray:
+    """(L, 5) conv configs -> (L, P) per-image runtimes over tile columns.
+
+    Per base family the layer lowers to:
+      * im2col:   (k, c·f²) @ (c·f², oh·ow) — one GEMM per image;
+      * 1x1:      (k, c) @ (c, oh·ow);
+      * winograd: n² pointwise (k, c) @ (c, tiles) GEMMs plus input/output
+        transform traffic (n = tile_m + r − 1, tiles = ⌈oh/m⌉·⌈ow/m⌉).
+    NaN where the base primitive is inapplicable (same structural mask the
+    selection layer uses).
+    """
+    from repro.primitives.conv import FAMILIES, compile_traits, split_tile
+    names = tuple(columns) if columns is not None else tuple(pallas_columns())
+    cfg = np.asarray(configs, np.int64)
+    if cfg.ndim != 2 or cfg.shape[1] != 5:
+        raise ValueError(f"configs must be (L, 5), got {cfg.shape}")
+    tr = compile_traits(names)
+    ki, ci, imi, si, fi = (cfg[:, j] for j in range(5))
+    app = tr.applicable_mask(ki, ci, imi, si, fi)            # (L, P)
+    o = (imi - fi) // np.maximum(si, 1) + 1                  # (L,)
+    k = ki.astype(np.float64)
+    c = ci.astype(np.float64)
+    f = fi.astype(np.float64)
+    P = o.astype(np.float64) ** 2
+
+    out = np.empty((cfg.shape[0], len(names)), np.float64)
+    for j, name in enumerate(names):
+        base, variant = split_tile(name)
+        bm, bk, bn = VARIANTS[variant] if variant in VARIANTS else (128, 128, 128)
+        if base.startswith("conv-1x1"):
+            t = _analytic_cost_np(k, c, P, bm, bk, bn)
+        elif base.startswith("winograd"):
+            m = int(tr.tile_m[j]) or 2
+            r = 5 if tr.fam[j] == FAMILIES.index("wino5") else 3
+            n = m + r - 1
+            tiles = np.ceil(o / m) ** 2
+            t = (n * n) * _analytic_cost_np(k, c, tiles, bm, bk, bn)
+            # input/output tile transforms stream through HBM
+            t = t + 2.0 * 2 * (c + k) * n * n * tiles / _HBM_BW
+        else:                                      # im2col lowerings
+            t = _analytic_cost_np(k, c * f * f, P, bm, bk, bn)
+            # lowering traffic: the patch matrix is materialised once
+            t = t + 2.0 * c * f * f * P / _HBM_BW
+        out[:, j] = t
+    if noisy:
+        h = _mix64(tr.key[None, :].astype(np.uint64))
+        for fld in (ki, ci, imi, si, fi):
+            h = _mix64(h ^ fld.astype(np.uint64)[:, None])
+        out *= _lognormal(h, _TILE_SIGMA)
+    out *= time_scale
+    out[~app] = np.nan
+    return out
+
+
+# non-identity DLT columns in layouts.dlt_pairs() order, priced as HBM
+# permute traffic (full chw<->hwc transposes stream worse than adjacent
+# swaps — same structure as the CPU simulators' staircase, TPU-flavoured)
+def pallas_dlt_time_batch(pairs: np.ndarray, *, noisy: bool = True,
+                          time_scale: float = 1.0) -> np.ndarray:
+    from repro.primitives import layouts as L
+    from repro.primitives.conv import name_hash64
+    pr = np.asarray(pairs, np.int64)
+    if pr.ndim != 2 or pr.shape[1] != 2:
+        raise ValueError(f"pairs must be (M, 2), got {pr.shape}")
+    ni = [(s, d) for (s, d) in L.dlt_pairs() if s != d]
+    eff = np.array([0.35 if {s, d} == {"chw", "hwc"} else 0.6
+                    for (s, d) in ni])
+    keys = np.array([name_hash64("pallas-dlt|" + L.dlt_name(s, d))
+                     for (s, d) in ni], np.uint64)
+    c = pr[:, 0].astype(np.float64)
+    im = pr[:, 1].astype(np.float64)
+    bytes_moved = 2.0 * 4.0 * c * im * im                    # read + write
+    out = bytes_moved[:, None] / (_HBM_BW * eff[None, :]) + 2e-6
+    if noisy:
+        h = _mix64(keys[None, :])
+        for fld in (pr[:, 0], pr[:, 1]):
+            h = _mix64(h ^ fld.astype(np.uint64)[:, None])
+        out *= _lognormal(h, _TILE_SIGMA)
+    return out * time_scale
+
+
+class PallasTileProvider:
+    """CostProvider over (primitive, tile) columns backed by the analytic
+    TPU surface — plays 'profiled on the accelerator' for selection."""
+
+    def __init__(self, columns: Optional[Sequence[str]] = None, *,
+                 noisy: bool = True, time_scale: float = 1.0):
+        self.columns = (list(columns) if columns is not None
+                        else pallas_columns())
+        self.noisy = noisy
+        self.time_scale = time_scale
+
+    def primitive_cost_matrix(self, configs: np.ndarray) -> np.ndarray:
+        if len(configs) == 0:
+            return np.zeros((0, len(self.columns)))
+        return conv_tile_time_batch(configs, self.columns, noisy=self.noisy,
+                                    time_scale=self.time_scale)
+
+    def dlt_cost_matrix(self, pairs: np.ndarray) -> np.ndarray:
+        if len(pairs) == 0:
+            from repro.primitives import layouts as L
+            n = sum(1 for (s, d) in L.dlt_pairs() if s != d)
+            return np.zeros((0, n))
+        return pallas_dlt_time_batch(pairs, noisy=self.noisy,
+                                     time_scale=self.time_scale)
 
 
 def build_dataset(n: int = 3000, seed: int = 0):

@@ -192,16 +192,36 @@ class PerfModel:
             h.update(np.ascontiguousarray(state["arrays"][name]).tobytes())
         return h.hexdigest()[:16]
 
-    def subset_columns(self, columns: Sequence[str]) -> "PerfModel":
+    def subset_columns(self, columns: Sequence[str], *,
+                       base_of: Optional[Callable[[str], str]] = None) -> "PerfModel":
         """A real PerfModel predicting only ``columns`` (same kind, sliced
         output layer / ensemble / normalizer) — used to transfer a wide base
         model onto a platform that profiles fewer primitives (e.g. the
-        49-column simulator model onto the host's runnable subset)."""
+        49-column simulator model onto the host's runnable subset).
+
+        ``base_of`` maps a requested column the model does not have onto one
+        it does — the tile-column transfer path: a base model over plain
+        primitives expands onto a platform's (primitive, tile-config)
+        columns by duplicating each base head per tile (DESIGN.md §9).
+        Output column names are the *requested* names; duplicate head
+        indices are allowed."""
         model_cols = list(self.columns)
-        missing = [c for c in columns if c not in model_cols]
+        pos = {c: j for j, c in enumerate(model_cols)}
+
+        def lookup(c: str) -> int:
+            if c in pos:
+                return pos[c]
+            if base_of is not None:
+                b = base_of(c)
+                if b in pos:
+                    return pos[b]
+            return -1
+
+        idx_list = [lookup(c) for c in columns]
+        missing = [c for c, j in zip(columns, idx_list) if j < 0]
         if missing:
             raise ValueError(f"model has no columns {missing}")
-        idx = np.asarray([model_cols.index(c) for c in columns])
+        idx = np.asarray(idx_list)
         if list(columns) == model_cols:
             return self
 
@@ -213,7 +233,7 @@ class PerfModel:
 
         if isinstance(self, FactorCorrectedModel):
             return FactorCorrectedModel(
-                base=self.base.subset_columns(columns),
+                base=self.base.subset_columns(columns, base_of=base_of),
                 log_factor=np.asarray(self.log_factor)[idx])
         if self.kind == "nn1":
             params = [self.params[j] for j in idx]

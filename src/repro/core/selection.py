@@ -20,7 +20,8 @@ import numpy as np
 from repro.core import pbqp
 from repro.core.perfmodel import PerfModel
 from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
-from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY, compile_traits
+from repro.primitives.conv import (PRIMITIVE_NAMES, REGISTRY, compile_traits,
+                                   resolve)
 from repro.primitives import layouts as L
 
 
@@ -139,13 +140,15 @@ def _edge_tensor(node) -> Tuple[int, int]:
 
 def _out_layout(node, choice: str) -> str:
     if isinstance(node, ConvLayer):
-        return REGISTRY[choice].out_layout
+        # resolve, not REGISTRY[...]: tile columns ("base@mm-MxKxN")
+        # inherit their base primitive's layouts
+        return resolve(choice).out_layout
     return choice           # join nodes choose a layout directly
 
 
 def _in_layout(node, choice: str) -> str:
     if isinstance(node, ConvLayer):
-        return REGISTRY[choice].in_layout
+        return resolve(choice).in_layout
     return choice
 
 

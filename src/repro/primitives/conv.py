@@ -31,7 +31,7 @@ import dataclasses
 import hashlib
 import math
 from functools import lru_cache, partial
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -472,8 +472,46 @@ RUNNABLE: List[str] = [n for n, p in REGISTRY.items() if p.impl is not None]
 FAMILIES = ("direct", "im2", "kn2", "wino3", "wino5", "c1x1", "mec")
 
 
+# ---------------------------------------------------------------------------
+# Tile-config columns (DESIGN.md §9)
+#
+# A column name "prim@tile" denotes a base registry primitive executed under
+# a specific kernel tile configuration (e.g. a Pallas matmul block shape):
+# the performance model and the PBQP treat each (primitive, tile) pair as
+# its own column, so tile selection IS primitive selection. Registry traits,
+# layouts and applicability come from the base primitive; only the cost
+# model (and its noise stream, keyed on the full column name) distinguishes
+# tiles.
+# ---------------------------------------------------------------------------
+
+TILE_SEP = "@"
+
+
+def split_tile(name: str) -> Tuple[str, Optional[str]]:
+    """'prim@tile' -> (base primitive name, tile variant); plain registry
+    names return (name, None)."""
+    base, sep, variant = name.partition(TILE_SEP)
+    return base, (variant if sep else None)
+
+
+def resolve(name: str) -> Primitive:
+    """Registry entry for a (possibly tile-suffixed) column name."""
+    return REGISTRY[split_tile(name)[0]]
+
+
+def is_runnable(name: str) -> bool:
+    """A tile column is runnable iff its base primitive is."""
+    base, _ = split_tile(name)
+    return base in REGISTRY and REGISTRY[base].impl is not None
+
+
+def tile_columns(bases: Sequence[str], variants: Sequence[str]) -> List[str]:
+    """The (base × tile-variant) cross product as column names."""
+    return [f"{b}{TILE_SEP}{v}" for b in bases for v in variants]
+
+
 def family_of(name: str) -> str:
-    return REGISTRY[name].family
+    return resolve(name).family
 
 
 # ---------------------------------------------------------------------------
@@ -524,7 +562,10 @@ class ColumnTraits:
 
 @lru_cache(maxsize=256)
 def compile_traits(names: Tuple[str, ...]) -> ColumnTraits:
-    prims = [REGISTRY[n] for n in names]
+    # tile columns ("prim@tile") compile to their BASE primitive's traits —
+    # layouts/applicability are tile-invariant — but keep a per-column noise
+    # key from the full name so every tile gets its own deterministic stream
+    prims = [resolve(n) for n in names]
     t = [p.traits for p in prims]
     return ColumnTraits(
         names=tuple(names),
@@ -541,7 +582,7 @@ def compile_traits(names: Tuple[str, ...]) -> ColumnTraits:
         variant_as=np.array([str(x.get("variant", "")).startswith("as") for x in t], bool),
         in_layout=np.array([L.LAYOUTS.index(p.in_layout) for p in prims], np.int8),
         out_layout=np.array([L.LAYOUTS.index(p.out_layout) for p in prims], np.int8),
-        key=np.array([name_hash64(p.name) for p in prims], np.uint64),
+        key=np.array([name_hash64(n) for n in names], np.uint64),
     )
 
 
@@ -549,8 +590,10 @@ def run_primitive(name: str, x_chw: jnp.ndarray, w: jnp.ndarray, stride: int) ->
     """Run primitive ``name`` on a chw image, returning chw output —
     layout conversions applied around the primitive's native layouts.
     (Used by tests and the real-CPU executor; the executor also accounts
-    for the DLT costs explicitly.)"""
-    p = REGISTRY[name]
+    for the DLT costs explicitly.) Tile columns run their base impl — on
+    this host's XLA path the tile config is a Pallas dispatch hint, not a
+    different algorithm."""
+    p = resolve(name)
     if p.impl is None:
         raise ValueError(f"{name} is a simulated-only primitive")
     x = L.from_chw(x_chw, p.in_layout)
@@ -580,7 +623,7 @@ def batch_impl(prim: Primitive) -> Callable:
 def run_primitive_batch(name: str, x_chw: jnp.ndarray, w: jnp.ndarray,
                         stride: int) -> jnp.ndarray:
     """Batched ``run_primitive``: (n, c, im, im) chw in, (n, k, oh, ow) out."""
-    p = REGISTRY[name]
+    p = resolve(name)
     fn = batch_impl(p)
     y = fn(L.from_chw(x_chw, p.in_layout), w, stride)
     return L.to_chw(y, p.out_layout)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
-from repro.primitives.conv import REGISTRY
+from repro.primitives.conv import REGISTRY, resolve
 from repro.primitives import layouts as L
 from repro.primitives import plan as P
 
@@ -169,7 +169,7 @@ def _execute_interpreted(spec: CNNSpec, assignment: Dict[int, str],
     for i in order:
         node = spec.nodes[i]
         if isinstance(node, ConvLayer):
-            prim = REGISTRY[assignment[i]]
+            prim = resolve(assignment[i])
             if prim.impl is None:
                 raise ValueError(f"assignment uses simulated-only primitive {prim.name}")
             if prods[i]:
@@ -185,7 +185,7 @@ def _execute_interpreted(spec: CNNSpec, assignment: Dict[int, str],
             # Branches run valid (un-padded) convolutions, so spatial sizes
             # can differ by a few pixels across branch depths; centre-crop to
             # the smallest (real deployments pad — padding does not change
-            # the primitive-selection problem, see DESIGN.md §9).
+            # the primitive-selection problem, see DESIGN.md §10).
             vals = P.crop_to_common(vals, lay)
             if node.kind == "concat":
                 y = jnp.concatenate(vals, axis=L.C_AXIS[lay])

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.models.cnn_zoo import CNNSpec, ConvLayer
 from repro.primitives import layouts as L
-from repro.primitives.conv import REGISTRY, Primitive, batch_impl
+from repro.primitives.conv import REGISTRY, Primitive, batch_impl, resolve
 
 
 
@@ -138,7 +138,9 @@ def lower(spec: CNNSpec, assignment: Dict[int, str]) -> Tuple[List[PlanStep], Di
     for i in topo_order(spec):
         node = spec.nodes[i]
         if isinstance(node, ConvLayer):
-            prim = REGISTRY[assignment[i]]
+            # tile columns lower to their base primitive's impl (the tile is
+            # a Pallas dispatch hint, not a different algorithm)
+            prim = resolve(assignment[i])
             if prim.impl is None:
                 raise ValueError(f"assignment uses simulated-only primitive {prim.name}")
             ps = prods[i]

@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.primitives import conv
 from repro.primitives.conv import PRIMITIVE_NAMES, REGISTRY
 from repro.primitives import layouts as L
 from repro.profiler import pools
@@ -54,7 +55,8 @@ class PerfDataset:
     def family_subset(self, family: str) -> "PerfDataset":
         """Keep only columns of one primitive family (Table 5 experiments).
         Rows with no defined entry for the family are dropped."""
-        cols = [i for i, n in enumerate(self.columns) if REGISTRY[n].family == family]
+        cols = [i for i, n in enumerate(self.columns)
+                if conv.family_of(n) == family]
         times = self.times[:, cols]
         keep = np.isfinite(times).any(axis=1)
         return PerfDataset(self.feats[keep], times[keep],

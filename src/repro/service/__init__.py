@@ -13,9 +13,9 @@ observe → recalibrate pipeline as a subsystem instead of per-script glue.
 """
 from repro.service.artifacts import ArtifactStore, digest
 from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
-from repro.service.platforms import (HostPlatform, Platform, PlatformModels,
-                                     SimulatedPlatform, get_platform,
-                                     host_machine_id)
+from repro.service.platforms import (HostPlatform, PallasPlatform, Platform,
+                                     PlatformModels, SimulatedPlatform,
+                                     get_platform, host_machine_id)
 from repro.service.serving import (DriftMonitor, DriftStats, LayerProfile,
                                    NetQueue, OptimisedServer,
                                    ServedObservation, Ticket, WorkerPool,
@@ -24,7 +24,8 @@ from repro.service.serving import (DriftMonitor, DriftStats, LayerProfile,
 __all__ = [
     "ArtifactStore", "digest",
     "DriftMonitor", "DriftStats", "HostPlatform", "LayerProfile", "NetQueue",
-    "OptimisedNetwork", "OptimisedServer", "Platform", "PlatformModels",
+    "OptimisedNetwork", "OptimisedServer", "PallasPlatform", "Platform",
+    "PlatformModels",
     "ServedObservation", "SimulatedPlatform", "Ticket", "WorkerPool",
     "get_platform", "host_machine_id", "layer_profile", "make_recalibrator",
     "optimise", "reoptimise",

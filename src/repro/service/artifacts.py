@@ -6,11 +6,15 @@ optimisation runs warm-start in milliseconds — the paper's Table 4 claim
 process restarts.
 
 Addressing: an artifact's identity is a dict of key fields — canonically
-(platform fingerprint, columns, dataset fingerprint, model kind) plus
-role/mode/seed — serialised to canonical JSON and hashed (sha256, 16 hex
-chars). Same inputs => same address => warm hit; any drift in the profiled
-data or model configuration changes the address and forces a retrain. No
-cache-invalidation logic exists because none is needed.
+(platform fingerprint, backend name, columns, dataset fingerprint, model
+kind) plus role/mode/seed — serialised to canonical JSON and hashed
+(sha256, 16 hex chars). Same inputs => same address => warm hit; any drift
+in the profiled data or model configuration changes the address and forces
+a retrain. No cache-invalidation logic exists because none is needed.
+The backend name rides in every model and selection address (DESIGN.md §9)
+so two backends optimising the same network can never collide on an
+artifact, even if their platform fingerprints were ever to coincide — each
+backend's warm start is byte-identical to its own cold result.
 
 Durability (in the style of ``ckpt/manager.py``): each artifact is a
 directory written under a temp name and ``os.replace``d into place, with a

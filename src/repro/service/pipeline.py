@@ -66,8 +66,11 @@ def _spec_fingerprint(spec: CNNSpec) -> str:
 
 
 def _executable_columns(model: PerfModel) -> List[str]:
-    from repro.primitives.conv import RUNNABLE
-    cols = [c for c in model.columns if c in RUNNABLE]
+    # is_runnable (not RUNNABLE membership): tile columns like
+    # "winograd-2x2-3x3@mm-256x128x128" execute through their base
+    # primitive's impl, so they are servable on this host too
+    from repro.primitives.conv import is_runnable
+    cols = [c for c in model.columns if is_runnable(c)]
     if not cols:
         raise ValueError("model has no runnable columns; cannot build an "
                          "executable assignment")
@@ -118,6 +121,7 @@ def optimise(net: Union[str, CNNSpec],
     sel_fields = {"artifact": "selection", "net": net_name,
                   "spec": _spec_fingerprint(spec),
                   "platform": platform.fingerprint(),
+                  "backend": platform.name,
                   "models": models.fingerprint(), "columns": columns}
     stored = store.get_json("selections", sel_fields) if store else None
     if stored is not None:

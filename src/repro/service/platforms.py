@@ -101,10 +101,22 @@ class Platform(abc.ABC):
     def fingerprint(self) -> str:
         """Stable identity for artifact keys (config, not measurements)."""
 
+    def base_column(self, column: str) -> str:
+        """Map one of this platform's columns onto the base-registry
+        primitive a foreign base model would know it as. Identity for plain
+        platforms; tile-column platforms strip the tile suffix so a wide
+        base model expands onto their (primitive, tile) columns
+        (``PerfModel.subset_columns(base_of=...)``)."""
+        return column
+
     # -- model path (shared) ----------------------------------------------
     def _model_fields(self, role: str, kind: str, **extra) -> dict:
+        # ``backend`` (the platform's short name) is part of every model
+        # address: two backends optimising the same network must never
+        # collide on an artifact even if their fingerprints ever coincide
         ds = self.primitive_dataset() if role == "prim" else self.dlt_dataset()
-        return {"platform": self.fingerprint(), "columns": list(ds.columns),
+        return {"platform": self.fingerprint(), "backend": self.name,
+                "columns": list(ds.columns),
                 "dataset": ds.fingerprint(), "model_kind": kind,
                 "role": role, **extra}
 
@@ -198,7 +210,11 @@ class Platform(abc.ABC):
         target_cols = (list(sample.columns) if sample is not None
                        else list(self.primitive_dataset().columns))
         if list(base_prim.columns) != target_cols:
-            base_prim = base_prim.subset_columns(target_cols)
+            # base_of lets a plain-primitive base model expand onto this
+            # platform's tile columns (each tile head starts as its base
+            # primitive's head; calibration then differentiates the tiles)
+            base_prim = base_prim.subset_columns(target_cols,
+                                                 base_of=self.base_column)
         if sample is None:
             tr, va, _ = self.primitive_dataset().split()
             frac = budget if budget < 1 else min(1.0, budget / max(tr.n, 1))
@@ -239,7 +255,8 @@ class Platform(abc.ABC):
         if budget is None:
             # caller-supplied sample: key off the sample itself — touching
             # primitive_dataset() here would re-profile the platform pool
-            fields = {"platform": self.fingerprint(), "columns": target_cols,
+            fields = {"platform": self.fingerprint(), "backend": self.name,
+                      "columns": target_cols,
                       "dataset": sample.fingerprint(),
                       "model_kind": base_prim.kind, "role": "prim", **extra}
         else:
@@ -450,6 +467,91 @@ class SimulatedPlatform(Platform):
         return fp
 
 
+class PallasPlatform(Platform):
+    """The Pallas kernel backend behind the Platform interface (DESIGN.md
+    §9): profiling is autotune-backed — every column is a (runnable base
+    primitive, matmul tile config) pair priced by ``core.autotune``'s
+    analytic TPU cost surface, so the NN2 model and the PBQP select tile
+    configs exactly like primitives. On real TPU hardware the analytic
+    profiler is replaced by timed Pallas dispatches; every other verb
+    (``calibrate``, ``pretrain``, ``cost_provider``) is inherited unchanged
+    — the paper's porting story applied to an accelerator backend."""
+
+    def __init__(self, *, bases: Optional[Sequence[str]] = None,
+                 variants: Optional[Sequence[str]] = None,
+                 noisy: bool = True,
+                 max_triplets: Optional[int] = None,
+                 time_scale: float = 1.0,
+                 name: str = "tpu"):
+        from repro.core.autotune import PALLAS_CONV_BASES, pallas_columns
+        self.name = name
+        self.noisy = noisy
+        self.max_triplets = max_triplets
+        self.time_scale = time_scale   # drift knob, as on SimulatedPlatform
+        self._bases = list(bases) if bases is not None else list(PALLAS_CONV_BASES)
+        self._variants = list(variants) if variants is not None else None
+        self._columns = pallas_columns(self._bases, self._variants)
+        self._prim_ds: Optional[PerfDataset] = None
+        self._dlt_ds: Optional[PerfDataset] = None
+
+    @property
+    def columns(self) -> List[str]:
+        return list(self._columns)
+
+    def base_column(self, column: str) -> str:
+        from repro.primitives.conv import split_tile
+        return split_tile(column)[0]
+
+    def profile(self, configs: np.ndarray) -> np.ndarray:
+        from repro.core.autotune import conv_tile_time_batch
+        return conv_tile_time_batch(np.asarray(configs, np.int64),
+                                    self._columns, noisy=self.noisy,
+                                    time_scale=self.time_scale)
+
+    def profile_dlt(self, pairs: np.ndarray) -> np.ndarray:
+        from repro.core.autotune import pallas_dlt_time_batch
+        return pallas_dlt_time_batch(np.asarray(pairs, np.int64),
+                                     noisy=self.noisy,
+                                     time_scale=self.time_scale)
+
+    def _sample_pool(self):
+        from repro.profiler import pools
+        return pools.config_pool(max_triplets=self.max_triplets)
+
+    def primitive_dataset(self) -> PerfDataset:
+        if self._prim_ds is None:
+            cfgs = np.asarray(self._sample_pool(), np.int64)
+            self._prim_ds = PerfDataset(
+                cfgs.astype(np.float64), self.profile(cfgs),
+                list(self._columns), ["k", "c", "im", "s", "f"], self.name)
+        return self._prim_ds
+
+    def dlt_dataset(self) -> PerfDataset:
+        if self._dlt_ds is None:
+            from repro.primitives import layouts as L
+            from repro.profiler import pools
+            pairs = np.asarray(pools.dlt_pool(), np.int64)
+            cols = [L.dlt_name(s, d) for (s, d) in L.dlt_pairs() if s != d]
+            self._dlt_ds = PerfDataset(
+                pairs.astype(np.float64), self.profile_dlt(pairs),
+                cols, ["c", "im"], self.name)
+        return self._dlt_ds
+
+    def cost_provider(self):
+        from repro.core.autotune import PallasTileProvider
+        # unscaled, as on SimulatedPlatform: uniform drift moves no argmin
+        return PallasTileProvider(self._columns, noisy=self.noisy)
+
+    def fingerprint(self) -> str:
+        import hashlib
+        cols = hashlib.sha256("|".join(self._columns).encode()).hexdigest()[:8]
+        fp = (f"pallas/{self.name}/cols={cols}/noisy={int(self.noisy)}"
+              f"/mt={self.max_triplets}")
+        if self.time_scale != 1.0:
+            fp += f"/ts={self.time_scale:g}"
+        return fp
+
+
 class HostPlatform(Platform):
     """This container's real CPU behind the Platform interface — reduced
     scale, genuinely expensive profiling (the cost the paper eliminates)."""
@@ -565,12 +667,15 @@ def host_machine_id() -> str:
 
 
 def get_platform(spec: Union[str, Platform], **kwargs) -> Platform:
-    """'intel' / 'amd' / 'arm' -> SimulatedPlatform, 'host' -> HostPlatform;
-    a Platform instance passes through (kwargs then disallowed)."""
+    """'intel' / 'amd' / 'arm' -> SimulatedPlatform, 'host' -> HostPlatform,
+    'tpu' / 'pallas' -> PallasPlatform; a Platform instance passes through
+    (kwargs then disallowed)."""
     if isinstance(spec, Platform):
         if kwargs:
             raise TypeError("cannot re-configure an existing Platform")
         return spec
     if spec == "host":
         return HostPlatform(**kwargs)
+    if spec in ("tpu", "pallas"):
+        return PallasPlatform(**kwargs)
     return SimulatedPlatform(spec, **kwargs)

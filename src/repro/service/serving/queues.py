@@ -137,6 +137,12 @@ class NetQueue:
             w = min(w, self.budget_s - self.predicted_s * b)
         return max(w, 0.0) * self.window_scale
 
+    def backlog_images(self, inflight: int = 0) -> int:
+        """Queued images plus an in-flight allowance (``inflight`` batches
+        at ``batch_cap`` each) — the cross-backend router's load proxy
+        (DESIGN.md §9: predicted per-image cost × backlog)."""
+        return len(self._q) + inflight * self.batch_cap
+
     def push(self, t: Ticket) -> bool:
         """Enqueue; False when the queue is at depth (backpressure)."""
         if len(self._q) >= self.depth:

@@ -35,6 +35,13 @@ Five mechanisms make it a serving system rather than a loop:
     calibrates from the attributed per-layer observations, paying
     ``measure_sample`` profiling only for configs the buffer misses — at
     full coverage a recalibration costs zero extra profiling.
+  * **Predicted-cost cross-backend routing** (§9): ``register(opt,
+    backend="tpu")`` adds one backend of a logical network; each backend
+    keeps its own queue, in-flight limit, and drift state, and ``submit``
+    sends every request to the backend whose predicted marginal cost
+    (observed-or-predicted per-image cost × backlog) is lowest, spilling to
+    the next-cheapest on backpressure. ``unregister_backend`` removes one
+    cleanly; routing continues on the rest.
 
 Timing is injectable: ``clock=`` replaces the monotonic clock everywhere a
 window/queueing decision reads time, so tests drive batch-window semantics
@@ -119,6 +126,8 @@ class _NetState:
     queue: NetQueue
     max_inflight: int
     latency_budget_ms: Optional[float]
+    logical: str = ""                  # the network name requests route under
+    backend: Optional[str] = None      # None = plain single-backend entry
     generation: int = 0                # bumped by hot_swap
     inflight: int = 0
     dispatches: int = 0
@@ -168,6 +177,10 @@ class OptimisedServer:
         self.max_inflight = max_inflight
         self._clock = clock if clock is not None else monotonic
         self._nets: Dict[str, _NetState] = {}
+        # logical net -> state keys (DESIGN.md §9). A plain register keeps
+        # key == net; register(backend=...) keys the state "net#backend" and
+        # submit() routes each request to the predicted-cheapest member
+        self._routes: Dict[str, List[str]] = {}
         self._order: List[str] = []            # round-robin claim fairness
         self._rr = 0
         self._cond = threading.Condition()
@@ -219,15 +232,24 @@ class OptimisedServer:
         cap = int(np.clip(budget_s / predicted_cost_s, 1, self.max_batch))
         return pow2_floor(cap)
 
-    def register(self, opt: OptimisedNetwork, *, weights: Optional[Dict] = None,
+    def register(self, opt: OptimisedNetwork, *, backend: Optional[str] = None,
+                 weights: Optional[Dict] = None,
                  latency_budget_ms: Optional[float] = None,
                  max_wait_ms: Optional[float] = None,
                  queue_depth: Optional[int] = None,
                  max_inflight: Optional[int] = None) -> _NetState:
         """Register an optimised network for serving. ``weights`` defaults to
         fresh ``make_weights(spec)`` (serving demo weights). Per-network
-        overrides fall back to the server-wide knobs."""
+        overrides fall back to the server-wide knobs.
+
+        ``backend`` names this registration as one backend of the logical
+        network ``opt.net`` (DESIGN.md §9): the state is keyed
+        ``"net#backend"``, gets its own queue and in-flight limit, and
+        ``submit(net, ...)`` routes each request to the predicted-cheapest
+        registered backend. Every backend of one logical network must serve
+        the same topology (requests are interchangeable between them)."""
         from repro.primitives.executor import make_weights
+        key = opt.net if backend is None else f"{opt.net}#{backend}"
         pred = opt.predicted_cost_s
         queue = NetQueue(
             depth=queue_depth if queue_depth is not None else self.queue_depth,
@@ -242,11 +264,20 @@ class OptimisedServer:
             queue=queue,
             max_inflight=(max_inflight if max_inflight is not None
                           else self.max_inflight),
-            latency_budget_ms=latency_budget_ms)
+            latency_budget_ms=latency_budget_ms,
+            logical=opt.net, backend=backend)
         with self._cond:
-            old = self._nets.get(opt.net)
+            route = self._routes.setdefault(opt.net, [])
+            for k in route:
+                if k != key and self._nets[k].opt.spec.name != opt.spec.name:
+                    raise ValueError(
+                        f"backend {backend!r} of {opt.net!r} serves topology "
+                        f"{opt.spec.name!r}, but the route already serves "
+                        f"{self._nets[k].opt.spec.name!r}")
+            old = self._nets.get(key)
             if old is None:
-                self._order.append(opt.net)
+                self._order.append(key)
+                route.append(key)
             else:
                 # replacing a live registration must not strand its queued
                 # tickets (in-flight batches keep their own _NetState ref),
@@ -255,15 +286,40 @@ class OptimisedServer:
                 # old generation and would otherwise pass the CAS checks
                 stranded = old.queue.take(len(old.queue))
                 state.generation = old.generation + 1
-            self._nets[opt.net] = state
+            self._nets[key] = state
         if old is not None:
             for t in stranded:
-                t.finish(error=f"rejected: {opt.net!r} was re-registered",
+                t.finish(error=f"rejected: {key!r} was re-registered",
                          rejected=True)
-        self._drift.reset(opt.net, state.generation,
+        self._drift.reset(key, state.generation,
                           layers=layer_profile(opt))
         self.start()
         return state
+
+    def unregister_backend(self, net: str, backend: str) -> bool:
+        """Remove one backend of ``net`` from the route. Its queued tickets
+        are rejected (the submitter retries or routes elsewhere); an
+        in-flight batch keeps its own state reference and completes
+        normally. Returns False when no such backend is registered — the
+        router treats a missing backend as simply not a candidate, so
+        serving continues on the remaining ones."""
+        key = f"{net}#{backend}"
+        with self._cond:
+            state = self._nets.pop(key, None)
+            if state is None:
+                return False
+            if key in self._order:
+                self._order.remove(key)
+                self._rr = 0
+            route = self._routes.get(net)
+            if route and key in route:
+                route.remove(key)
+            stranded = state.queue.take(len(state.queue))
+            self._cond.notify_all()
+        for t in stranded:
+            t.finish(error=f"rejected: backend {backend!r} of {net!r} "
+                           f"was unregistered", rejected=True)
+        return True
 
     def hot_swap(self, net: str, opt: OptimisedNetwork, *,
                  latency_budget_ms: Optional[float] = None,
@@ -275,8 +331,10 @@ class OptimisedServer:
         reset: the new model predicts on a new scale. ``expect_generation``
         makes the swap conditional (a background recalibration must not
         clobber a newer manual swap); returns False when the expectation
-        fails."""
+        fails. ``net`` may be a state key (``"net#backend"``) to swap one
+        backend of a routed network."""
         with self._cond:
+            net = self._resolve_key_locked(net)
             state = self._nets[net]
             if opt.spec.name != state.opt.spec.name:
                 raise ValueError(f"hot_swap topology mismatch: {opt.spec.name!r} "
@@ -304,30 +362,71 @@ class OptimisedServer:
         return True
 
     # -- request path ------------------------------------------------------
+    def _route_keys_locked(self, net: str) -> List[str]:
+        """State keys a request for ``net`` may land on: the exact state
+        key when it exists (plain registration, or an explicit
+        ``"net#backend"`` submit), else the logical net's live route."""
+        if net in self._nets:
+            return [net]
+        keys = [k for k in self._routes.get(net, ()) if k in self._nets]
+        if not keys:
+            raise KeyError(f"network {net!r} not registered")
+        return keys
+
+    def _resolve_key_locked(self, net: str) -> str:
+        """One state key for ``net``; routed networks must name the backend
+        explicitly (``"net#backend"``) when more than one is registered."""
+        keys = self._route_keys_locked(net)
+        if len(keys) > 1:
+            raise KeyError(f"{net!r} has backends "
+                           f"{[self._nets[k].backend for k in keys]}; "
+                           f"address one as 'net#backend'")
+        return keys[0]
+
+    def _route_score_locked(self, state: _NetState) -> float:
+        """Predicted cost of sending ONE MORE image to this backend: its
+        per-image cost (observed when it has served, else the perf model's
+        prediction) times its backlog. Cheapest predicted backend wins an
+        empty route; under load the score grows with the queue, spilling
+        traffic to slower-but-idle backends (de Prado et al., 2018)."""
+        per_image = (state.busy_s / state.images if state.images
+                     else state.queue.predicted_s)
+        if not (np.isfinite(per_image) and per_image > 0):
+            per_image = 1e-6           # modelless entry: load-balance only
+        backlog = state.queue.backlog_images(state.inflight)
+        return per_image * (backlog + 1)
+
     def submit(self, net: str, x: np.ndarray) -> Ticket:
         """Enqueue one request. The returned ticket is already finished (and
         ``rejected``) when the network's queue is full — backpressure instead
-        of unbounded memory."""
+        of unbounded memory.
+
+        Routed networks (``register(backend=...)``): the request goes to the
+        backend with the cheapest predicted marginal cost; when that
+        backend's queue is full the next-cheapest is tried before the
+        request is rejected (DESIGN.md §9)."""
         x = np.asarray(x, np.float32)
         with self._cond:
-            # validate against the state the ticket will actually land in —
-            # a concurrent re-register may have changed the topology
-            if net not in self._nets:
-                raise KeyError(f"network {net!r} not registered")
-            state = self._nets[net]
-            n0 = state.opt.spec.nodes[0]
+            # validate/route against the states the ticket may land in — a
+            # concurrent re-register may have changed the topology
+            keys = self._route_keys_locked(net)
+            if len(keys) > 1:       # plain registrations skip the scorer
+                keys.sort(key=lambda k:
+                          self._route_score_locked(self._nets[k]))
+            n0 = self._nets[keys[0]].opt.spec.nodes[0]
             if x.shape != (n0.c, n0.im, n0.im):
                 raise ValueError(f"{net!r} expects one ({n0.c}, {n0.im}, "
                                  f"{n0.im}) image per request, got {x.shape}")
-            t = Ticket(net=net, x=x, submitted_s=self._clock(),
+            t = Ticket(net=keys[0], x=x, submitted_s=self._clock(),
                        clock=self._clock)
-            if not state.queue.push(t):
-                state.rejected += 1
-                t.finish(error=f"rejected: {net!r} queue at depth "
-                               f"{state.queue.depth} (backpressure)",
-                         rejected=True)
-                return t
-            self._cond.notify()
+            for k in keys:
+                t.net = k
+                if self._nets[k].queue.push(t):
+                    self._cond.notify()
+                    return t
+            self._nets[keys[0]].rejected += 1
+            t.finish(error=f"rejected: every backend of {net!r} at queue "
+                           f"depth (backpressure)", rejected=True)
         return t
 
     # -- scheduling --------------------------------------------------------
@@ -486,7 +585,9 @@ class OptimisedServer:
         th.start()
 
     def _recalibration_worker(self, net: str, generation: int) -> None:
-        state = self._nets[net]
+        state = self._nets.get(net)
+        if state is None:
+            return                   # backend unregistered while scheduled
         with self._cond:
             if state.generation != generation:
                 return               # swapped while we were scheduled
@@ -558,28 +659,74 @@ class OptimisedServer:
         return [t.result for t in tickets]
 
     # -- introspection -----------------------------------------------------
+    def _state_stats_locked(self, key: str) -> Dict:
+        s = self._nets[key]
+        waits = np.asarray(s.waits, np.float64)
+        return {"batch_cap": s.queue.batch_cap, "generation": s.generation,
+                "dispatches": s.dispatches, "images": s.images,
+                "padded": s.padded, "busy_s": s.busy_s,
+                "images_per_s": (s.images / s.busy_s if s.busy_s else 0.0),
+                "queued": len(s.queue), "inflight": s.inflight,
+                "rejected": s.rejected,
+                "recalibrations": s.recalibrations,
+                "last_recal_error": s.last_recal_error,
+                "recal_sample": s.last_recal_sample,
+                "window_scale": s.queue.window_scale,
+                "effective_wait_ms": s.queue.effective_wait_s() * 1e3,
+                "queue_wait_p50_ms": (float(np.percentile(waits, 50)) * 1e3
+                                      if waits.size else 0.0),
+                "queue_wait_p99_ms": (float(np.percentile(waits, 99)) * 1e3
+                                      if waits.size else 0.0)}
+
     def stats(self, net: str) -> Dict:
+        """Serving stats for ``net`` — a state key or a logical name. A
+        routed network aggregates its backends (sums for counters, pooled
+        percentiles for queue waits) and adds a ``"backends"`` map: per
+        backend, the full per-state stats including dispatch counts and
+        p50/p99 queueing latency."""
         with self._cond:
-            s = self._nets[net]
-            waits = np.asarray(s.waits, np.float64)
-            out = {"batch_cap": s.queue.batch_cap, "generation": s.generation,
-                   "dispatches": s.dispatches, "images": s.images,
-                   "padded": s.padded, "busy_s": s.busy_s,
-                   "images_per_s": (s.images / s.busy_s if s.busy_s else 0.0),
-                   "queued": len(s.queue), "inflight": s.inflight,
-                   "rejected": s.rejected,
-                   "recalibrations": s.recalibrations,
-                   "last_recal_error": s.last_recal_error,
-                   "recal_sample": s.last_recal_sample,
-                   "window_scale": s.queue.window_scale,
-                   "effective_wait_ms": s.queue.effective_wait_s() * 1e3,
-                   "queue_wait_p50_ms": (float(np.percentile(waits, 50)) * 1e3
-                                         if waits.size else 0.0),
-                   "queue_wait_p99_ms": (float(np.percentile(waits, 99)) * 1e3
-                                         if waits.size else 0.0)}
-        out["drift_ratio"] = self._drift.ratio(net)
-        out["observed_dispatches"] = len(self._drift.observations(net))
+            keys = self._route_keys_locked(net)
+            per = {k: self._state_stats_locked(k) for k in keys}
+            names = {k: self._nets[k].backend for k in keys}
+            pooled = [np.asarray(self._nets[k].waits, np.float64)
+                      for k in keys]
+        for k in keys:
+            per[k]["drift_ratio"] = self._drift.ratio(k)
+            per[k]["observed_dispatches"] = len(self._drift.observations(k))
+        if len(keys) == 1 and names[keys[0]] is None:
+            return per[keys[0]]                # plain single-backend network
+        out: Dict = {"backends": {names[k] or k: per[k] for k in keys}}
+        for fld in ("dispatches", "images", "padded", "rejected", "queued",
+                    "inflight", "recalibrations", "observed_dispatches"):
+            out[fld] = sum(per[k][fld] for k in keys)
+        out["busy_s"] = sum(per[k]["busy_s"] for k in keys)
+        out["images_per_s"] = (out["images"] / out["busy_s"]
+                               if out["busy_s"] else 0.0)
+        for fld in ("batch_cap", "generation", "window_scale",
+                    "effective_wait_ms"):
+            out[fld] = max(per[k][fld] for k in keys)
+        ratios = [per[k]["drift_ratio"] for k in keys
+                  if per[k]["drift_ratio"] is not None]
+        out["drift_ratio"] = max(ratios) if ratios else None
+        for fld in ("last_recal_error", "recal_sample"):
+            out[fld] = next((per[k][fld] for k in keys
+                             if per[k][fld] is not None), None)
+        waits = (np.concatenate(pooled) if any(w.size for w in pooled)
+                 else np.empty(0))
+        out["queue_wait_p50_ms"] = (float(np.percentile(waits, 50)) * 1e3
+                                    if waits.size else 0.0)
+        out["queue_wait_p99_ms"] = (float(np.percentile(waits, 99)) * 1e3
+                                    if waits.size else 0.0)
         return out
+
+    def backends(self, net: str) -> List[str]:
+        """Registered backend names for ``net`` (empty for a plain
+        single-backend registration)."""
+        with self._cond:
+            return sorted(self._nets[k].backend
+                          for k in self._routes.get(net, ())
+                          if k in self._nets
+                          and self._nets[k].backend is not None)
 
     @property
     def networks(self) -> List[str]:
@@ -649,7 +796,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     "(concurrent worker-pool serving core).")
     ap.add_argument("--net", default="edge_cnn")
     ap.add_argument("--platform", default="arm",
-                    help="intel | amd | arm (simulated) | host (real CPU)")
+                    help="intel | amd | arm (simulated) | host (real CPU) | "
+                         "tpu (autotuned Pallas tile columns)")
+    ap.add_argument("--backends", default=None, metavar="P1,P2,...",
+                    help="register the net on each of these platforms as a "
+                         "routed backend and dispatch every request to the "
+                         "predicted-cheapest one (default: the single "
+                         "--platform backend, unrouted)")
     ap.add_argument("--transfer-from", default=None, metavar="PLATFORM",
                     help="calibrate from this platform's pretrained model "
                          "(the paper's §4.4 path) instead of native training")
@@ -703,11 +856,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     from repro.service.platforms import get_platform
 
     store = ArtifactStore(args.store, keep=args.keep) if args.store else None
-    # host platforms persist their profiled datasets through the store, so
-    # repeat CLI runs skip the expensive real-CPU measurement pass
-    plat_kw = {"store": store} if args.platform == "host" else \
-        {"max_triplets": args.max_triplets}
-    platform = get_platform(args.platform, **plat_kw)
+    specs = ([s.strip() for s in args.backends.split(",") if s.strip()]
+             if args.backends else [args.platform])
+    routed = len(specs) > 1
 
     base = None
     if args.transfer_from:
@@ -718,12 +869,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"[serve] base model: {args.transfer_from} "
               f"({'warm' if base.warm else 'cold'}, {base.seconds:.2f}s)")
 
-    opt = optimise(args.net, platform, store=store, base=base,
-                   budget=args.calib_budget, executable=True,
-                   max_iters=args.max_iters)
-    print(f"[serve] optimised {opt.net} for {platform.fingerprint()}: "
-          f"{'warm' if opt.warm else 'cold'} in {opt.seconds:.2f}s, "
-          f"predicted {opt.predicted_cost_s*1e3:.3f} ms/img")
+    opts = []
+    for spec_name in specs:
+        # host platforms persist their profiled datasets through the store,
+        # so repeat CLI runs skip the expensive real-CPU measurement pass
+        plat_kw = {"store": store} if spec_name == "host" else \
+            {"max_triplets": args.max_triplets}
+        platform = get_platform(spec_name, **plat_kw)
+        opt = optimise(args.net, platform, store=store, base=base,
+                       budget=args.calib_budget, executable=True,
+                       max_iters=args.max_iters)
+        print(f"[serve] optimised {opt.net} for {platform.fingerprint()}: "
+              f"{'warm' if opt.warm else 'cold'} in {opt.seconds:.2f}s, "
+              f"predicted {opt.predicted_cost_s*1e3:.3f} ms/img")
+        opts.append((spec_name, opt))
+    opt = opts[0][1]
 
     server = OptimisedServer(latency_budget_ms=args.budget_ms,
                              workers=args.workers,
@@ -736,7 +896,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                                  store=store,
                                  sample_n=args.recal_sample_n,
                                  use_served=not args.no_served_reuse))
-    server.register(opt)
+    for spec_name, o in opts:
+        # routed backends serve one at a time each; the worker pool overlaps
+        # them across backends instead
+        server.register(o, backend=spec_name if routed else None,
+                        max_inflight=1 if routed else None)
     s = server.stats(opt.net)
     print(f"[serve] batch cap {s['batch_cap']} "
           f"(budget {args.budget_ms:.0f} ms), workers={args.workers}, "
@@ -756,16 +920,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           f"{s['padded']} padded, queue p50/p99 "
           f"{s['queue_wait_p50_ms']:.2f}/{s['queue_wait_p99_ms']:.2f} ms, "
           f"{s['observed_dispatches']} observations buffered)")
+    if routed:
+        for b, bs in s["backends"].items():
+            print(f"[serve]   backend {b}: {bs['dispatches']} dispatches, "
+                  f"{bs['images']} images, queue p50/p99 "
+                  f"{bs['queue_wait_p50_ms']:.2f}/"
+                  f"{bs['queue_wait_p99_ms']:.2f} ms")
 
     if args.hot_swap:
-        recal = optimise(args.net, platform, store=store, base=opt.models,
+        spec_name, o = opts[0]
+        recal = optimise(args.net, o.platform, store=store, base=o.models,
                          budget=max(args.calib_budget * 5, 0.05),
                          mode="finetune", executable=True,
                          max_iters=args.max_iters)
-        server.hot_swap(opt.net, recal)
+        key = f"{opt.net}#{spec_name}" if routed else opt.net
+        server.hot_swap(key, recal)
         server.serve(opt.net, xs[:8])
         print(f"[serve] hot-swapped to recalibrated assignment "
-              f"(generation {server.stats(opt.net)['generation']})")
+              f"(generation {server.stats(key)['generation']})")
     server.stop()
     return 0
 

@@ -4,8 +4,13 @@ Plan execution is a jitted XLA computation — JAX releases the GIL while it
 runs — so plain ``threading`` genuinely overlaps plan execution across
 networks (and overlaps one network's Python-side batch assembly with
 another's compute). The pool is deliberately dumb: every scheduling decision
-(timed windows, per-network in-flight limits, fairness) lives in the serving
+(timed windows, per-state in-flight limits, fairness) lives in the serving
 core's ``claim_blocking``; a worker just loops claim → execute.
+
+Multi-backend networks (DESIGN.md §9) need no pool support: each backend
+registration is its own claimable state with its own queue and in-flight
+limit, so with ``workers >= 2`` and per-backend ``max_inflight=1`` two
+backends of one network genuinely execute in parallel.
 
 ``stop()`` is graceful by default: workers first drain every queued ticket
 (windows ignored — shutdown must not strand requests), then exit.

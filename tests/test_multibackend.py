@@ -1,0 +1,253 @@
+"""Tile-config registry columns, the autotuned Pallas platform, and
+predicted-cost cross-backend dispatch (DESIGN.md §9)."""
+import numpy as np
+import pytest
+
+from repro.core.autotune import (PALLAS_CONV_BASES, PallasTileProvider,
+                                 conv_tile_time_batch, pallas_columns,
+                                 pallas_dlt_time_batch)
+from repro.core.perfmodel import fit_perf_model
+from repro.models import cnn_zoo
+from repro.primitives.conv import (REGISTRY, compile_traits, is_runnable,
+                                   resolve, split_tile, tile_columns)
+from repro.service import (ArtifactStore, OptimisedNetwork, OptimisedServer,
+                           PallasPlatform, get_platform, optimise)
+from repro.service.artifacts import digest
+
+
+# ---------------------------------------------------------------------------
+# Tile-config registry columns
+# ---------------------------------------------------------------------------
+
+def test_tile_column_name_scheme():
+    cols = tile_columns(["winograd-2x2-3x3"], ["mm-128x128x128", "mm-256x256x256"])
+    assert cols == ["winograd-2x2-3x3@mm-128x128x128",
+                    "winograd-2x2-3x3@mm-256x256x256"]
+    assert split_tile(cols[0]) == ("winograd-2x2-3x3", "mm-128x128x128")
+    assert split_tile("kn2row") == ("kn2row", None)
+    assert resolve(cols[0]) is REGISTRY["winograd-2x2-3x3"]
+    assert is_runnable(cols[0])                      # runs the base impl
+    assert is_runnable("kn2row")
+    assert not is_runnable("nonexistent@mm-128x128x128")
+
+
+def test_compile_traits_over_tile_columns():
+    base = "im2col-copy-ab-ki"
+    names = (base, f"{base}@mm-128x128x128", f"{base}@mm-512x256x256")
+    tr = compile_traits(names)
+    # layouts/family/applicability are tile-invariant: inherited from base
+    assert tr.fam[0] == tr.fam[1] == tr.fam[2]
+    assert tr.in_layout[0] == tr.in_layout[1] == tr.in_layout[2]
+    assert tr.out_layout[0] == tr.out_layout[1] == tr.out_layout[2]
+    # but every tile column gets its own deterministic noise key
+    assert len({int(k) for k in tr.key}) == 3
+    # and the plain-name key is unchanged vs a plain-only compile (the
+    # registry-wide trait cache predates tile columns)
+    tr0 = compile_traits((base,))
+    assert int(tr0.key[0]) == int(tr.key[0])
+
+
+def test_pallas_profile_deterministic_and_tile_sensitive():
+    cols = pallas_columns()
+    assert len(cols) == len(PALLAS_CONV_BASES) * 8
+    cfgs = np.array([[64, 32, 28, 1, 3], [256, 128, 14, 1, 1],
+                     [512, 256, 7, 2, 3]], np.int64)
+    a = conv_tile_time_batch(cfgs, cols)
+    b = conv_tile_time_batch(cfgs, cols)
+    np.testing.assert_array_equal(a, b)              # deterministic noise
+    assert a.shape == (3, len(cols))
+    # NaN follows base applicability: conv-1x1 is inapplicable at f=3
+    j1 = cols.index("conv-1x1-gemm-ab-ki@mm-128x128x128")
+    assert np.isnan(a[0, j1]) and np.isfinite(a[1, j1])
+    # the tile config must MATTER: within one base, different tiles differ
+    im2 = [j for j, c in enumerate(cols)
+           if split_tile(c)[0] == "im2col-copy-ab-ki"]
+    assert len({float(v) for v in a[0, im2]}) > 1
+    d = pallas_dlt_time_batch(np.array([[32, 28], [256, 7]], np.int64))
+    assert d.shape == (2, 6) and np.isfinite(d).all() and (d > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# subset_columns over backend (tile) columns
+# ---------------------------------------------------------------------------
+
+def _lin_model(columns, seed=0):
+    rng = np.random.default_rng(seed)
+    f = np.exp(rng.uniform(0, 3, (60, 5)))
+    t = np.exp(np.log(f) @ rng.uniform(0.5, 2.0, (5, len(columns)))) * 1e-6
+    return fit_perf_model("lin", f[:40], t[:40], f[40:], t[40:],
+                          columns=columns)
+
+
+def test_subset_columns_base_of_expands_tiles():
+    m = _lin_model(["a", "b", "c"])
+    want = ["a@t1", "a@t2", "c@t1", "b"]
+    sub = m.subset_columns(want, base_of=lambda c: c.split("@")[0])
+    assert list(sub.columns) == want
+    x = np.exp(np.random.default_rng(1).uniform(0, 3, (7, 5)))
+    full, tiled = m.predict(x), sub.predict(x)
+    # every tile head starts as its base primitive's head
+    np.testing.assert_allclose(tiled[:, 0], full[:, 0])   # a@t1 == a
+    np.testing.assert_allclose(tiled[:, 1], full[:, 0])   # a@t2 == a
+    np.testing.assert_allclose(tiled[:, 2], full[:, 2])   # c@t1 == c
+    np.testing.assert_allclose(tiled[:, 3], full[:, 1])   # b == b
+    with pytest.raises(Exception):
+        m.subset_columns(["zz@t1"], base_of=lambda c: c.split("@")[0])
+    with pytest.raises(Exception):
+        m.subset_columns(["a@t1"])                   # no base_of: unknown
+
+
+def test_pallas_platform_transfer_and_optimise(tmp_path):
+    tpu = PallasPlatform(max_triplets=5)
+    assert len(tpu.columns) == 40
+    assert tpu.base_column("winograd-2x2-3x3@mm-128x128x128") == "winograd-2x2-3x3"
+    base = get_platform("intel", max_triplets=5).pretrain(max_iters=150,
+                                                          patience=40)
+    models = tpu.calibrate(base, budget=0.05, max_iters=100)
+    assert list(models.prim.columns) == tpu.columns
+    opt = optimise("edge_cnn", tpu, models=models, executable=True)
+    # the PBQP picked tile columns, and they lower/execute via their base
+    chosen = [v for v in opt.assignment.values() if "@" in v]
+    assert chosen, "no tile column selected"
+    from repro.primitives.executor import execute
+    rep = execute(opt.spec, opt.assignment)
+    assert rep.outputs is not None
+
+
+def test_pallas_provider_matches_profile():
+    tpu = PallasPlatform(max_triplets=5)
+    prov = tpu.cost_provider()
+    assert isinstance(prov, PallasTileProvider)
+    cfgs = np.array([[64, 32, 28, 1, 3], [128, 64, 14, 1, 5]], np.int64)
+    np.testing.assert_array_equal(tpu.profile(cfgs),
+                                  prov.primitive_cost_matrix(cfgs))
+
+
+# ---------------------------------------------------------------------------
+# Per-backend artifact keys
+# ---------------------------------------------------------------------------
+
+def test_backend_in_artifact_address():
+    p1 = PallasPlatform(max_triplets=5, name="tpu")
+    p2 = PallasPlatform(max_triplets=5, name="tpu-b")
+    f1 = p1._model_fields("prim", "nn2")
+    f2 = p2._model_fields("prim", "nn2")
+    assert f1["backend"] == "tpu" and f2["backend"] == "tpu-b"
+    assert f1["columns"] == f2["columns"]
+    assert digest(f1) != digest(f2)
+    # even if the platform fingerprint and dataset were ever to coincide,
+    # the backend name alone must keep the addresses apart
+    forced = {**f2, "platform": f1["platform"], "dataset": f1["dataset"]}
+    assert digest(f1) != digest(forced)
+    assert digest(f1) == digest({**forced, "backend": "tpu"})
+
+
+def test_per_backend_warm_start_roundtrip(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    base = get_platform("intel", max_triplets=5).pretrain(max_iters=150,
+                                                          patience=40)
+    kw = dict(base=base, budget=0.05, executable=True, max_iters=100,
+              store=store)
+    cold = {b: optimise("edge_cnn", get_platform(b, max_triplets=5), **kw)
+            for b in ("arm", "tpu")}
+    assert not cold["arm"].warm and not cold["tpu"].warm
+    warm = {b: optimise("edge_cnn", get_platform(b, max_triplets=5), **kw)
+            for b in ("arm", "tpu")}
+    x = np.array([[64, 32, 28, 1, 3]], np.float64)
+    for b in ("arm", "tpu"):
+        # byte-identical warm start: same model content, same assignment
+        assert warm[b].warm_models and warm[b].warm_selection
+        assert warm[b].models.prim.fingerprint() == cold[b].models.prim.fingerprint()
+        np.testing.assert_array_equal(warm[b].models.prim.predict(x),
+                                      cold[b].models.prim.predict(x))
+        assert warm[b].assignment == cold[b].assignment
+    # and the two backends never shared an artifact: their model columns
+    # (hence selections) are backend-specific
+    assert set(cold["arm"].assignment.values()) != set(cold["tpu"].assignment.values())
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend router
+# ---------------------------------------------------------------------------
+
+def _routed(spec, fast_s, slow_s, **server_kw):
+    """A server with two backends of one logical net whose predicted
+    per-image costs are ``fast_s``/``slow_s``. Nothing is executed — the
+    router unit tests inspect queue placement only."""
+    srv = OptimisedServer(**server_kw)
+    for name, cost in (("fast", fast_s), ("slow", slow_s)):
+        opt = OptimisedNetwork.from_assignment(spec, {}, net=spec.name,
+                                               predicted_cost_s=cost)
+        srv.register(opt, backend=name, max_inflight=1)
+    return srv
+
+
+def test_router_picks_predicted_cheapest_and_flips():
+    spec = cnn_zoo.get("edge_cnn")
+    n0 = spec.nodes[0]
+    x = np.zeros((n0.c, n0.im, n0.im), np.float32)
+
+    srv = _routed(spec, 1e-6, 1e-3)
+    t = srv.submit(spec.name, x)
+    assert t.net == f"{spec.name}#fast"
+    s = srv.stats(spec.name)
+    assert s["backends"]["fast"]["queued"] == 1
+    assert s["backends"]["slow"]["queued"] == 0
+
+    # predicted costs flip => the routing decision flips
+    srv2 = _routed(spec, 1e-3, 1e-6)
+    t2 = srv2.submit(spec.name, x)
+    assert t2.net == f"{spec.name}#slow"
+
+
+def test_router_spills_on_backpressure_and_fallback_on_unregister():
+    spec = cnn_zoo.get("edge_cnn")
+    n0 = spec.nodes[0]
+    x = np.zeros((n0.c, n0.im, n0.im), np.float32)
+
+    srv = OptimisedServer(queue_depth=1)
+    for name, cost in (("fast", 1e-6), ("slow", 1e-3)):
+        opt = OptimisedNetwork.from_assignment(spec, {}, net=spec.name,
+                                               predicted_cost_s=cost)
+        srv.register(opt, backend=name, max_inflight=1, queue_depth=1)
+    t1 = srv.submit(spec.name, x)
+    t2 = srv.submit(spec.name, x)        # fast is full: spill to slow
+    assert t1.net.endswith("#fast") and t2.net.endswith("#slow")
+    t3 = srv.submit(spec.name, x)        # both full: backpressure
+    assert t3.rejected
+
+    # unregistering a backend rejects its queued work and routing falls
+    # back cleanly to the remaining backend
+    assert srv.unregister_backend(spec.name, "fast")
+    assert t1.done and t1.rejected
+    assert srv.backends(spec.name) == ["slow"]
+    assert not srv.unregister_backend(spec.name, "fast")
+    srv2_t = srv.submit(spec.name, x)    # slow still full from t2
+    assert srv2_t.rejected
+    # unknown net still raises
+    with pytest.raises(KeyError):
+        srv.submit("no_such_net", x)
+
+
+def test_routed_serving_end_to_end_and_stats(tmp_path):
+    base = get_platform("intel", max_triplets=5).pretrain(max_iters=150,
+                                                          patience=40)
+    kw = dict(base=base, budget=0.05, executable=True, max_iters=100)
+    opt_arm = optimise("edge_cnn", get_platform("arm", max_triplets=5), **kw)
+    opt_tpu = optimise("edge_cnn", get_platform("tpu", max_triplets=5), **kw)
+    srv = OptimisedServer(latency_budget_ms=50.0)
+    srv.register(opt_arm, backend="arm", max_inflight=1)
+    srv.register(opt_tpu, backend="tpu", max_inflight=1)
+    n0 = opt_arm.spec.nodes[0]
+    xs = np.random.default_rng(0).standard_normal(
+        (8, n0.c, n0.im, n0.im)).astype(np.float32)
+    out = srv.serve("edge_cnn", xs)
+    assert len(out) == 8 and all(o is not None for o in out)
+    s = srv.stats("edge_cnn")
+    assert s["images"] == 8
+    assert set(s["backends"]) == {"arm", "tpu"}
+    per_backend = [b["dispatches"] for b in s["backends"].values()]
+    assert sum(per_backend) == s["dispatches"] >= 1
+    for b in s["backends"].values():
+        assert "queue_wait_p50_ms" in b and "queue_wait_p99_ms" in b
+    srv.stop()
