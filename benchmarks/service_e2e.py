@@ -1,7 +1,8 @@
 """Service-layer end to end: cold vs warm optimise time, served img/s,
 concurrent multi-network serving vs the serial pump baseline, zero-cost
 drift recalibration from served traffic, predicted-cost cross-backend
-routing, and deadline-aware batch windows.
+routing, deadline-aware batch windows, and availability under injected
+faults (DESIGN.md §11).
 
 Cold pass: a fresh artifact store — pretrain the base platform model,
 calibrate onto the target platform, PBQP-select. Warm pass: identical calls
@@ -42,9 +43,11 @@ throughput falls below the serial baseline (parity with a 15% noise
 allowance on single-core runners, where the worker pool has no hardware
 to overlap on), the drift recalibration is not
 mostly served-sampled (≥ 50%) and faster than fresh profiling, routed
-multi-backend throughput falls below the best single backend, or the
-deadline-aware window misses the budget on the smoke load — the CI smoke
-gates (``--smoke``).
+multi-backend throughput falls below the best single backend, the
+deadline-aware window misses the budget on the smoke load, or the
+availability row drops below 99% served / loses / duplicates tickets under
+its injected raise+hang+slowdown fault plan — the CI smoke gates
+(``--smoke``).
 
 Run:  PYTHONPATH=src:. python benchmarks/service_e2e.py [--smoke]
 """
@@ -422,6 +425,99 @@ def deadline_pass(opt, requests: int, budget_ms: float,
             "unbounded": run(1e9), "budgeted": run(budget_ms)}
 
 
+def availability_pass(opt, *, budget_ms: float, workers: int = 2) -> Dict:
+    """Fault-tolerant serving under a seeded chaos plan (DESIGN.md §11):
+    backend a of a two-backend route is poisoned — three dispatches raise
+    (retry included), the first half-open probe hangs past the execution
+    deadline, the next stalls past it, the third is clean — while b stays
+    healthy. A closed-loop client drives bursts until the breaker has
+    tripped and recovered, then a little clean traffic. The row reports the
+    availability contract the chaos soak test asserts: accepted vs served,
+    degraded (fallback) count, zero lost, zero duplicated (exact accounting
+    identity), breaker open/close counts, worker restarts."""
+    from repro.primitives.executor import make_weights
+    from repro.primitives.plan import heuristic_assignment
+    from repro.service import (Fault, FaultInjector, OptimisedNetwork,
+                               OptimisedServer)
+
+    spec = opt.spec
+    weights = make_weights(spec)
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(6)
+    imgs = rng.standard_normal((4, n0.c, n0.im, n0.im)).astype(np.float32)
+    net = "avail_cnn"
+
+    def mk(pred):
+        return OptimisedNetwork.from_assignment(
+            spec, heuristic_assignment(spec), net=net, predicted_cost_s=pred)
+
+    # warm the global plan cache so healthy dispatches never pay jit compile
+    # against the execution deadline
+    warm = OptimisedServer(max_batch=4, latency_budget_ms=budget_ms)
+    warm.register(mk(1e-3), weights=weights)
+    for b in (1, 2, 4):
+        warm.serve(net, imgs[:b])
+
+    inj = FaultInjector([
+        Fault("raise", net=f"{net}#a", first=0, last=6),
+        Fault("hang", net=f"{net}#a", first=6, last=7, seconds=0.75),
+        Fault("slowdown", net=f"{net}#a", first=7, last=8, seconds=0.3)])
+    server = OptimisedServer(
+        max_batch=4, latency_budget_ms=budget_ms, workers=workers,
+        max_wait_ms=0.0, queue_depth=10_000, exec_deadline_ms=60.0,
+        breaker_failures=3, breaker_cooldown_ms=120.0, faults=inj)
+    # a predicts far cheaper: preferred whenever its breaker allows, so the
+    # fault schedule is hit deterministically; b is the healthy spill target
+    server.register(mk(1e-6), weights=weights, backend="a")
+    server.register(mk(1e-3), weights=weights, backend="b")
+
+    tickets = []
+    recovered = False
+    t0 = time.perf_counter()
+    deadline = t0 + 90.0
+    while time.perf_counter() < deadline:
+        burst = [server.submit(net, imgs[len(tickets) % 4])
+                 for _ in range(2)]
+        tickets.extend(burst)
+        for t in burst:
+            t.wait(30.0)
+        br = server.stats(net)["backends"]["a"]["breaker"]
+        if br["closes"] >= 1 and br["state"] == "closed":
+            recovered = True
+            break
+        time.sleep(0.01)
+    for _ in range(5):                         # post-recovery clean traffic
+        burst = [server.submit(net, imgs[len(tickets) % 4])
+                 for _ in range(2)]
+        tickets.extend(burst)
+        for t in burst:
+            t.wait(30.0)
+    dt = time.perf_counter() - t0
+    s = server.stats(net)
+    restarts = server._pool.restarts if server._pool is not None else 0
+    server.stop(timeout=60.0)
+
+    accepted = sum(1 for t in tickets if not t.rejected)
+    lost = sum(1 for t in tickets if not t.done)
+    served = [t for t in tickets if t.done and t.result is not None]
+    ba = s["backends"]["a"]["breaker"]
+    return {"tickets": len(tickets), "accepted": accepted, "lost": lost,
+            "served": len(served),
+            "degraded": sum(1 for t in served if t.degraded),
+            "failed_tickets": s["failed_tickets"],
+            "availability": len(served) / max(accepted, 1),
+            # != 0 would mean a ticket was double-delivered or lost between
+            # the primary path and the fallback: the accounting identity
+            "duplicated": (s["images"] + s["fallback_images"]) - len(served),
+            "seconds": dt,
+            "injected_faults": [list(e) for e in inj.injected],
+            "breaker_opens": ba["opens"], "breaker_closes": ba["closes"],
+            "breaker_state": ba["state"], "breaker_recovered": recovered,
+            "worker_restarts": restarts, "rollbacks": s["rollbacks"],
+            "spill_images": s["backends"]["b"]["images"],
+            "failure_ledger": s["failures"]}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -522,6 +618,17 @@ def main() -> int:
              f"unbounded p99 "
              f"{deadline['unbounded']['queue_wait_p99_ms']:.1f} ms)")
 
+        avail = availability_pass(warm["opt"], budget_ms=args.budget_ms,
+                                  workers=max(args.workers, 2))
+        emit("service.unavailability_ppm",
+             (1.0 - avail["availability"]) * 1e6,
+             f"{avail['availability']:.2%} of {avail['accepted']} tickets "
+             f"served under injected faults ({avail['degraded']} degraded, "
+             f"{avail['lost']} lost, {avail['duplicated']:+d} dup, "
+             f"breaker opens/closes "
+             f"{avail['breaker_opens']}/{avail['breaker_closes']}, "
+             f"{avail['worker_restarts']} workers replaced)")
+
         results = {
             "mode": "smoke" if args.smoke else "full",
             "net": args.net, "platform": args.platform, "base": args.base,
@@ -537,6 +644,7 @@ def main() -> int:
             "recalibration": recal,
             "multibackend": mb,
             "deadline_batching": deadline,
+            "availability": avail,
         }
         with open(OUT_PATH, "w") as fh:
             json.dump(results, fh, indent=2)
@@ -585,6 +693,17 @@ def main() -> int:
                 f"deadline windows: steady p99 queueing "
                 f"{deadline['budgeted']['steady_p99_ms']:.1f} ms exceeds the "
                 f"{args.budget_ms:.0f} ms budget")
+        if avail["availability"] < 0.99:
+            failures.append(f"availability {avail['availability']:.2%} under "
+                            f"injected faults (< 99%)")
+        if avail["lost"]:
+            failures.append(f"{avail['lost']} ticket(s) lost under faults")
+        if avail["duplicated"]:
+            failures.append(f"ticket accounting off by {avail['duplicated']} "
+                            f"(duplicated or mis-counted delivery)")
+        if not avail["breaker_recovered"]:
+            failures.append("poisoned backend's breaker never recovered "
+                            "through a half-open probe")
         if failures:
             print("FAIL: " + "; ".join(failures), file=sys.stderr)
             return 1

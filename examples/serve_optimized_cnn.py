@@ -139,6 +139,12 @@ def main():
                   f"{s['queue_wait_p50_ms']:6.2f}/{s['queue_wait_p99_ms']:6.2f} ms "
                   f"({s['dispatches']} dispatches, {s['padded']} padded, "
                   f"{s['rejected']} rejected)")
+            if s["failed_dispatches"] or s["fallback_images"]:
+                # failures absorbed by the DESIGN.md §11 fault-tolerance layer
+                print(f"   {'':20s}  {s['failed_dispatches']} dispatches "
+                      f"failed ({s['retries']} retried), "
+                      f"{s['fallback_images']} images served degraded, "
+                      f"ledger {s['failures']}")
         print(f"   both nets: {served/dt:8.1f} img/s overlapped "
               f"({dropped} failed/rejected) "
               f"vs {2*args.requests*args.batch/(t_base+t_opt):8.1f} sequential")

@@ -12,21 +12,26 @@ observe → recalibrate pipeline as a subsystem instead of per-script glue.
     server.register(opt)
 """
 from repro.service.artifacts import ArtifactStore, digest
-from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
+from repro.service.pipeline import (OptimisedNetwork, optimise, reoptimise,
+                                    safe_assignment)
 from repro.service.platforms import (HostPlatform, PallasPlatform, Platform,
                                      PlatformModels, SimulatedPlatform,
                                      get_platform, host_machine_id)
-from repro.service.serving import (DriftMonitor, DriftStats, LayerProfile,
+from repro.service.serving import (CircuitBreaker, CorruptOutput,
+                                   DriftMonitor, DriftStats, Fault,
+                                   FaultError, FaultInjector, LayerProfile,
                                    NetQueue, OptimisedServer,
                                    ServedObservation, Ticket, WorkerPool,
                                    layer_profile, make_recalibrator)
 
 __all__ = [
     "ArtifactStore", "digest",
-    "DriftMonitor", "DriftStats", "HostPlatform", "LayerProfile", "NetQueue",
+    "CircuitBreaker", "CorruptOutput",
+    "DriftMonitor", "DriftStats", "Fault", "FaultError", "FaultInjector",
+    "HostPlatform", "LayerProfile", "NetQueue",
     "OptimisedNetwork", "OptimisedServer", "PallasPlatform", "Platform",
     "PlatformModels",
     "ServedObservation", "SimulatedPlatform", "Ticket", "WorkerPool",
     "get_platform", "host_machine_id", "layer_profile", "make_recalibrator",
-    "optimise", "reoptimise",
+    "optimise", "reoptimise", "safe_assignment",
 ]

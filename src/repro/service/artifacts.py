@@ -174,12 +174,17 @@ class ArtifactStore:
         shutil.rmtree(d, ignore_errors=True)
         return True
 
-    # -- retention -----------------------------------------------------------
-    def sweep(self, keep: int, category: Optional[str] = None) -> int:
-        """Keep the newest ``keep`` artifacts per category (manifest
-        ``created`` time; ties broken by key for determinism), delete the
-        rest plus any stale tmp dirs from crashed writers. Returns the number
-        of artifacts removed."""
+    # -- retention / GC ------------------------------------------------------
+    def sweep(self, keep: Optional[int] = None,
+              category: Optional[str] = None) -> int:
+        """Garbage-collect the store. Always removed: corrupt or partially
+        written entries (missing/unparsable manifest, payload checksum
+        mismatch — invisible to reads but otherwise immortal) and stale
+        ``tmp.`` dirs from crashed writers. With ``keep`` additionally
+        retain only the newest ``keep`` valid artifacts per category
+        (manifest ``created`` time; ties broken by key for determinism).
+        ``keep=None`` is the pure GC pass: collect garbage, trim nothing.
+        Returns the number of artifacts removed."""
         removed = 0
         cats = [category] if category else sorted(
             d for d in os.listdir(self.root)
@@ -208,7 +213,8 @@ class ArtifactStore:
                     continue
                 aged.append((created, key))
             aged.sort()
-            for _, key in aged[:-keep] if keep > 0 else []:
+            stale = aged[:-keep] if keep is not None and keep > 0 else []
+            for _, key in stale:
                 shutil.rmtree(os.path.join(cat_dir, key), ignore_errors=True)
                 removed += 1
         return removed

@@ -56,6 +56,26 @@ class OptimisedNetwork:
                    warm_models=False, warm_selection=False, seconds=0.0)
 
 
+def safe_assignment(spec: CNNSpec) -> Dict[int, str]:
+    """The *fallback* plan for serving degradation (DESIGN.md §11.1): a
+    reference-only assignment — naive direct summation for every conv (the
+    dedicated pointwise GEMM for 1x1 layers, their reference lowering),
+    ``chw`` joins, no layout tricks. Deliberately the dumbest runnable choice: when
+    an optimised plan is failing, the fallback's job is to share as little
+    machinery with it as possible, not to be fast. Executed through the
+    interpreted per-image path (``executor.execute(compiled=False)``), it
+    also avoids the whole-graph jit/compile pipeline the optimised plan
+    runs on."""
+    from repro.models.cnn_zoo import ConvLayer
+    asg: Dict[int, str] = {}
+    for i, node in enumerate(spec.nodes):
+        if isinstance(node, ConvLayer):
+            asg[i] = "conv-1x1-gemm-ab-ki" if node.f == 1 else "direct-sum2d"
+        else:
+            asg[i] = "chw"
+    return asg
+
+
 def _spec_fingerprint(spec: CNNSpec) -> str:
     """Content hash of the network topology — selection artifacts must go
     stale when a zoo net's definition changes, not just when models do."""

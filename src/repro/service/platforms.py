@@ -401,7 +401,8 @@ class SimulatedPlatform(Platform):
 
     def __init__(self, name: str, *, noisy: bool = True,
                  max_triplets: Optional[int] = None,
-                 time_scale: float = 1.0):
+                 time_scale: float = 1.0,
+                 faults=None):
         from repro.profiler.simulators import PLATFORMS
         if name not in PLATFORMS:
             raise KeyError(f"unknown simulated platform {name!r}; "
@@ -415,6 +416,11 @@ class SimulatedPlatform(Platform):
         # drifted platform. Relative primitive costs (and hence the optimal
         # assignment) are unchanged; absolute predictions scale.
         self.time_scale = time_scale
+        # deterministic fault injection into the MEASUREMENT rig (DESIGN.md
+        # §11): a ``serving.faults.FaultInjector`` whose ``profile`` hook
+        # (key ``"profile:<name>"``) can fail or corrupt profiling calls —
+        # the poisoned-recalibration test knob
+        self.faults = faults
         self._plat = PLATFORMS[name]
         self._prim_ds: Optional[PerfDataset] = None
         self._dlt_ds: Optional[PerfDataset] = None
@@ -426,13 +432,19 @@ class SimulatedPlatform(Platform):
 
     def profile(self, configs: np.ndarray) -> np.ndarray:
         from repro.profiler.simulators import primitive_time_batch
-        return self.time_scale * primitive_time_batch(
+        times = self.time_scale * primitive_time_batch(
             self._plat, np.asarray(configs, np.int64), noisy=self.noisy)
+        if self.faults is not None:
+            times = self.faults.profile(self.name, times)
+        return times
 
     def profile_dlt(self, pairs: np.ndarray) -> np.ndarray:
         from repro.profiler.simulators import dlt_time_batch
-        return self.time_scale * dlt_time_batch(
+        times = self.time_scale * dlt_time_batch(
             self._plat, np.asarray(pairs, np.int64), noisy=self.noisy)
+        if self.faults is not None:
+            times = self.faults.profile(self.name, times)
+        return times
 
     def primitive_dataset(self) -> PerfDataset:
         if self._prim_ds is None:

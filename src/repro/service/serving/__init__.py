@@ -13,13 +13,16 @@ observe → recalibrate loop.
 """
 from repro.service.serving.drift import (DriftMonitor, DriftStats,
                                          LayerProfile, ServedObservation)
+from repro.service.serving.faults import Fault, FaultError, FaultInjector
+from repro.service.serving.health import CircuitBreaker, CorruptOutput
 from repro.service.serving.queues import NetQueue, Ticket
 from repro.service.serving.server import (OptimisedServer, layer_profile,
                                           main, make_recalibrator)
 from repro.service.serving.workers import WorkerPool
 
 __all__ = [
-    "DriftMonitor", "DriftStats", "LayerProfile", "NetQueue",
+    "CircuitBreaker", "CorruptOutput", "DriftMonitor", "DriftStats",
+    "Fault", "FaultError", "FaultInjector", "LayerProfile", "NetQueue",
     "OptimisedServer", "ServedObservation", "Ticket", "WorkerPool",
     "layer_profile", "main", "make_recalibrator",
 ]

@@ -135,6 +135,12 @@ class DriftMonitor:
         self.obs_alpha = obs_alpha
         self.clock = clock if clock is not None else time.monotonic
         self._stats: Dict[str, DriftStats] = {}
+        # failure ledger (DESIGN.md §11.1): net -> generation -> kind ->
+        # count. Kept OUTSIDE _stats on purpose: a hot_swap resets drift
+        # stats (new prediction scale) but must not erase the record of why
+        # previous generations failed — the ledger is the post-incident
+        # audit trail, keyed by the generation that misbehaved.
+        self._failures: Dict[str, Dict[int, Dict[str, int]]] = {}
         self._lock = threading.Lock()
 
     def reset(self, net: str, generation: int,
@@ -293,6 +299,38 @@ class DriftMonitor:
             s.waits_since_adjust = 0
             s.waits.clear()            # judge the new cap on fresh samples
             return new
+
+    # -- failure ledger (DESIGN.md §11.1) ----------------------------------
+    def record_failure(self, net: str, generation: int, kind: str) -> None:
+        """Count one serving failure for ``(net, generation)``. ``kind`` is
+        the taxonomy bucket: "error" (plan raised), "fault" (injected),
+        "corrupt" (output validation), "deadline" (supervisor abandoned a
+        hung dispatch), "died" (worker thread died mid-dispatch), "canary"
+        (candidate rejected by the swap gate), "rollback" (auto-rollback
+        fired)."""
+        with self._lock:
+            gens = self._failures.setdefault(net, {})
+            kinds = gens.setdefault(int(generation), {})
+            kinds[kind] = kinds.get(kind, 0) + 1
+
+    def failures(self, net: str,
+                 generation: Optional[int] = None) -> Dict[str, int]:
+        """Ledger kind→count for ``net`` — one generation, or all merged."""
+        with self._lock:
+            gens = self._failures.get(net, {})
+            if generation is not None:
+                return dict(gens.get(int(generation), {}))
+            out: Dict[str, int] = {}
+            for kinds in gens.values():
+                for k, n in kinds.items():
+                    out[k] = out.get(k, 0) + n
+            return out
+
+    def failure_ledger(self, net: str) -> Dict[int, Dict[str, int]]:
+        """Full per-generation ledger snapshot for ``net``."""
+        with self._lock:
+            return {g: dict(k) for g, k in
+                    self._failures.get(net, {}).items()}
 
     def window_scale(self, net: str) -> float:
         s = self.stats(net)

@@ -68,6 +68,7 @@ class Ticket:
     done: bool = False
     error: Optional[str] = None
     rejected: bool = False             # refused at submit (backpressure)
+    degraded: bool = False             # served by the safe fallback plan
     submitted_s: float = 0.0           # clock timestamps
     dispatched_s: float = 0.0
     completed_s: float = 0.0
@@ -75,6 +76,8 @@ class Ticket:
         default=None, repr=False, compare=False)
     _done_event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
+    _finish_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         """Block until this ticket is finished (True) or ``timeout`` expires
@@ -87,13 +90,25 @@ class Ticket:
         return max(self.dispatched_s - self.submitted_s, 0.0)
 
     def finish(self, *, result: Optional[np.ndarray] = None,
-               error: Optional[str] = None, rejected: bool = False) -> None:
-        self.result = result
-        self.error = error
-        self.rejected = rejected
-        self.completed_s = (self.clock or monotonic)()
-        self.done = True
+               error: Optional[str] = None, rejected: bool = False,
+               degraded: bool = False) -> bool:
+        """Settle the ticket. First finish wins: a supervisor abandoning a
+        hung dispatch and the dispatch eventually completing must not both
+        deliver — whichever settles first is the result the waiter saw, and
+        the loser's call is a no-op (returns False). This is what makes
+        "zero duplicated tickets" a structural property rather than a timing
+        accident."""
+        with self._finish_lock:
+            if self.done:
+                return False
+            self.result = result
+            self.error = error
+            self.rejected = rejected
+            self.degraded = degraded
+            self.completed_s = (self.clock or monotonic)()
+            self.done = True
         self._done_event.set()
+        return True
 
 
 class NetQueue:

@@ -68,6 +68,9 @@ import numpy as np
 
 from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
 from repro.service.serving.drift import DriftMonitor, LayerProfile
+from repro.service.serving.faults import (FaultInjector, classify,
+                                          validate_output)
+from repro.service.serving.health import (CircuitBreaker, merge_failures)
 from repro.service.serving.queues import (NetQueue, Ticket, monotonic,
                                           pow2_ceil, pow2_floor)
 from repro.service.serving.workers import WorkerPool
@@ -110,13 +113,21 @@ class _Batch:
     network's in-flight slot already taken. Snapshots opt/weights at claim
     time so an already-claimed batch finishes on the plan it was claimed
     under even if a hot_swap lands before execution, and carries the
-    _NetState so accounting survives a re-register replacing the state."""
+    _NetState so accounting survives a re-register replacing the state.
+
+    ``claimed_s`` is the claim timestamp the worker supervisor ages against
+    the execution deadline; ``settled`` guards the release of the in-flight
+    slot — the executing worker, its ``finally``, a late zombie, and the
+    supervisor's ``abandon`` may all race to settle, and exactly one wins
+    (DESIGN.md §11.3)."""
     net: str
     tickets: List[Ticket]
     generation: int
     state: "_NetState"
     opt: OptimisedNetwork
     weights: Dict
+    claimed_s: float = 0.0
+    settled: bool = False              # mutated only under the server lock
 
 
 @dataclasses.dataclass
@@ -138,6 +149,22 @@ class _NetState:
     last_recal_error: Optional[str] = None
     last_recal_sample: Optional[Dict] = None   # served/fresh mix (§8.5)
     busy_s: float = 0.0
+    # fault tolerance (DESIGN.md §11)
+    breaker: Optional[CircuitBreaker] = None   # set by register()
+    history: Deque = dataclasses.field(        # rollback ring: (gen, opt)
+        default_factory=deque)
+    fallback_asg: Optional[Dict[int, str]] = None   # lazily-built safe plan
+    retries: int = 0                   # primary attempts retried
+    failed_dispatches: int = 0         # dispatches whose primary path failed
+    failed_tickets: int = 0            # tickets finished with error=
+    fallback_dispatches: int = 0       # failed dispatches rescued (≥1 ticket)
+    fallback_images: int = 0           # tickets served degraded
+    canary_rejected: int = 0           # hot_swap candidates the canary vetoed
+    last_canary: Optional[str] = None  # last canary rejection reason
+    rollbacks: int = 0                 # generations reverted (manual + auto)
+    # consecutive primary failures since this generation went live; -1 once
+    # it has ANY success (a proven generation is never auto-rolled-back)
+    gen_bad_streak: int = 0
     # (generation, batch_bucket) -> completion time of the FIRST execution:
     # any dispatch that STARTED before that instant may have paid (or waited
     # on) jit compile and must not feed the drift EWMA — this also covers
@@ -169,12 +196,49 @@ class OptimisedServer:
                  drift_alpha: float = 0.25,
                  drift_calib_obs: int = 3,
                  obs_cap: int = 256,
+                 exec_deadline_ms: Optional[float] = None,
+                 fallback: bool = True,
+                 canary: bool = False,
+                 canary_batch: int = 2,
+                 canary_slowdown: float = 8.0,
+                 auto_rollback: int = 3,
+                 rollback_history: int = 4,
+                 breaker_failures: int = 3,
+                 breaker_window: int = 16,
+                 breaker_rate: float = 0.5,
+                 breaker_cooldown_ms: float = 250.0,
+                 breaker_probes: int = 1,
+                 faults: Optional[FaultInjector] = None,
                  clock: Optional[Callable[[], float]] = None):
+        """Fault-tolerance knobs (DESIGN.md §11): ``exec_deadline_ms`` is the
+        per-dispatch execution deadline the worker supervisor enforces (None
+        disables hung-dispatch detection); ``fallback`` degrades a failed
+        dispatch to the per-net safe plan instead of failing its tickets;
+        ``canary``/``canary_batch``/``canary_slowdown`` gate ``hot_swap``
+        candidates behind a canary batch; ``auto_rollback`` consecutive
+        never-succeeded primary failures of a freshly swapped generation
+        revert it (0 disables); ``rollback_history`` bounds the per-net undo
+        ring; ``breaker_*`` configure the per-backend circuit breakers the
+        multi-backend router consults; ``faults`` injects a deterministic
+        fault plan into every plan execution (tests/chaos drills)."""
         self.max_batch = max_batch
         self.latency_budget_ms = latency_budget_ms
         self.max_wait_ms = max_wait_ms
         self.queue_depth = queue_depth
         self.max_inflight = max_inflight
+        self.exec_deadline_s = (exec_deadline_ms * 1e-3
+                                if exec_deadline_ms else None)
+        self.fallback = fallback
+        self.canary_default = canary
+        self.canary_batch = max(int(canary_batch), 1)
+        self.canary_slowdown = canary_slowdown
+        self.auto_rollback = int(auto_rollback)
+        self.rollback_history = max(int(rollback_history), 0)
+        self._breaker_kw = dict(failures=breaker_failures,
+                                window=breaker_window, rate=breaker_rate,
+                                cooldown_s=breaker_cooldown_ms * 1e-3,
+                                probes=breaker_probes)
+        self._faults = faults
         self._clock = clock if clock is not None else monotonic
         self._nets: Dict[str, _NetState] = {}
         # logical net -> state keys (DESIGN.md §9). A plain register keeps
@@ -204,9 +268,13 @@ class OptimisedServer:
         """Drain queued tickets, stop workers, join pending recalibrations."""
         if self._pool is not None:
             self._pool.stop(timeout)
-        for t in list(self._recal_threads):
+        with self._cond:
+            pending = list(self._recal_threads)
+        for t in pending:
             t.join(timeout)
-        self._recal_threads = []
+        with self._cond:
+            self._recal_threads = [t for t in self._recal_threads
+                                   if t.is_alive()]
 
     def wake_all(self) -> None:
         """Wake every thread blocked in ``claim_blocking`` (WorkerPool stop)."""
@@ -265,7 +333,9 @@ class OptimisedServer:
             max_inflight=(max_inflight if max_inflight is not None
                           else self.max_inflight),
             latency_budget_ms=latency_budget_ms,
-            logical=opt.net, backend=backend)
+            logical=opt.net, backend=backend,
+            breaker=CircuitBreaker(**self._breaker_kw),
+            history=deque(maxlen=self.rollback_history))
         with self._cond:
             route = self._routes.setdefault(opt.net, [])
             for k in route:
@@ -323,7 +393,8 @@ class OptimisedServer:
 
     def hot_swap(self, net: str, opt: OptimisedNetwork, *,
                  latency_budget_ms: Optional[float] = None,
-                 expect_generation: Optional[int] = None) -> bool:
+                 expect_generation: Optional[int] = None,
+                 canary: Optional[bool] = None) -> bool:
         """Atomically replace ``net``'s assignment (platform recalibrated).
         Weights are kept; already-claimed batches finish on the old plan; the
         next dispatch compiles (or cache-hits) the new one. Drift stats —
@@ -332,7 +403,19 @@ class OptimisedServer:
         makes the swap conditional (a background recalibration must not
         clobber a newer manual swap); returns False when the expectation
         fails. ``net`` may be a state key (``"net#backend"``) to swap one
-        backend of a routed network."""
+        backend of a routed network.
+
+        ``canary`` (None = the server-wide default) gates the swap behind a
+        canary batch (DESIGN.md §11.4): the candidate serves a deterministic
+        synthetic batch *before* commit, and is rejected — previous
+        generation keeps serving, rejection recorded under ``canary_rejected``
+        / the failure ledger — if it raises, corrupts output, or runs slower
+        than ``canary_slowdown`` × the live generation's observed (else
+        predicted) per-image cost. The committed swap pushes the outgoing
+        generation onto a bounded rollback ring (``rollback(net)`` /
+        auto-rollback revert to it)."""
+        if canary is None:
+            canary = self.canary_default
         with self._cond:
             net = self._resolve_key_locked(net)
             state = self._nets[net]
@@ -342,23 +425,119 @@ class OptimisedServer:
             if (expect_generation is not None
                     and state.generation != expect_generation):
                 return False
-            if latency_budget_ms is not None:
-                state.latency_budget_ms = latency_budget_ms
-            state.opt = opt
-            pred = opt.predicted_cost_s
-            state.queue.batch_cap = self._batch_cap(pred,
-                                                    state.latency_budget_ms)
-            state.queue.budget_s = self._budget_s(state.latency_budget_ms)
-            state.queue.predicted_s = (pred if np.isfinite(pred) and pred > 0
-                                       else 0.0)
-            state.queue.window_scale = 1.0     # re-learn under the new model
-            state.generation += 1
+            if not canary:
+                self._commit_swap_locked(state, opt,
+                                         latency_budget_ms=latency_budget_ms)
+                generation = state.generation
+            else:
+                before = state.generation
+                baseline = (state.busy_s / state.images if state.images
+                            else state.opt.predicted_cost_s)
+        if not canary:
+            self._drift.reset(net, generation, layers=layer_profile(opt))
+            return True
+        # canary outside the lock: the live generation keeps serving while
+        # the candidate proves itself (it executes under the CANDIDATE
+        # generation number, so fault plans can target exactly it)
+        if not self._canary_gate(net, state, opt, before + 1, baseline):
+            return False
+        with self._cond:
+            if (self._nets.get(net) is not state
+                    or state.generation != before):
+                return False       # re-registered or swapped while canarying
+            self._commit_swap_locked(state, opt,
+                                     latency_budget_ms=latency_budget_ms)
             generation = state.generation
-            # superseded generations' bucket entries are never read again
-            state.bucket_ready = {k: v for k, v in state.bucket_ready.items()
-                                  if k[0] >= generation}
-            self._cond.notify_all()
         self._drift.reset(net, generation, layers=layer_profile(opt))
+        return True
+
+    def _commit_swap_locked(self, state: _NetState, opt: OptimisedNetwork, *,
+                            latency_budget_ms: Optional[float] = None,
+                            remember: bool = True) -> None:
+        """The swap itself (caller holds the lock). ``remember`` pushes the
+        outgoing (generation, opt) onto the rollback ring — rollbacks pass
+        False so the reverted-FROM generation cannot be rolled back INTO."""
+        if remember and self.rollback_history > 0:
+            state.history.append((state.generation, state.opt))
+        if latency_budget_ms is not None:
+            state.latency_budget_ms = latency_budget_ms
+        state.opt = opt
+        state.fallback_asg = None      # rebuild lazily for the new opt
+        pred = opt.predicted_cost_s
+        state.queue.batch_cap = self._batch_cap(pred,
+                                                state.latency_budget_ms)
+        state.queue.budget_s = self._budget_s(state.latency_budget_ms)
+        state.queue.predicted_s = (pred if np.isfinite(pred) and pred > 0
+                                   else 0.0)
+        state.queue.window_scale = 1.0     # re-learn under the new model
+        state.generation += 1
+        state.gen_bad_streak = 0           # unproven: auto-rollback is armed
+        # superseded generations' bucket entries are never read again
+        state.bucket_ready = {k: v for k, v in state.bucket_ready.items()
+                              if k[0] >= state.generation}
+        self._cond.notify_all()
+
+    def _canary_gate(self, key: str, state: _NetState, opt: OptimisedNetwork,
+                     generation: int, baseline: float) -> bool:
+        """Serve one deterministic canary batch on the candidate, pre-commit
+        (DESIGN.md §11.4). Two executions: the first warms (or cache-hits)
+        the jit compile, the second is the timed verdict. Rejects on
+        exception, corrupt output, or pathological slowdown vs the live
+        generation's observed-or-predicted per-image cost."""
+        b = pow2_ceil(self.canary_batch)
+        n0 = opt.spec.nodes[0]
+        rng = np.random.default_rng(generation)    # deterministic inputs
+        xs = rng.standard_normal((b, n0.c, n0.im, n0.im)).astype(np.float32)
+        reason = None
+        try:
+            self._run_faulted(key, generation, opt, xs, state.weights)
+            t0 = self._clock()
+            out = self._run_faulted(key, generation, opt, xs, state.weights)
+            t1 = self._clock()
+            validate_output(out, b)
+            per_image = (t1 - t0) / b
+            if (np.isfinite(baseline) and baseline > 0
+                    and per_image > self.canary_slowdown * baseline):
+                reason = (f"canary slowdown: {per_image * 1e3:.3f} ms/img vs "
+                          f"baseline {baseline * 1e3:.3f} ms/img "
+                          f"(gate {self.canary_slowdown:g}x)")
+        except Exception as e:
+            reason = f"canary failed: {e}"
+        if reason is None:
+            return True
+        with self._cond:
+            state.canary_rejected += 1
+            state.last_canary = reason
+        self._drift.record_failure(key, generation, "canary")
+        return False
+
+    # -- rollback ----------------------------------------------------------
+    def rollback(self, net: str) -> bool:
+        """Revert ``net`` (a state key for routed networks) to the previous
+        generation's assignment from the rollback ring. False when there is
+        no history to revert to."""
+        return self._rollback(net, expect_generation=None)
+
+    def _rollback(self, net: str,
+                  expect_generation: Optional[int]) -> bool:
+        with self._cond:
+            try:
+                key = self._resolve_key_locked(net)
+            except KeyError:
+                return False
+            state = self._nets[key]
+            if (expect_generation is not None
+                    and state.generation != expect_generation):
+                return False       # a newer swap already replaced the bad one
+            if not state.history:
+                return False
+            bad_generation = state.generation
+            _old_gen, old_opt = state.history.pop()
+            self._commit_swap_locked(state, old_opt, remember=False)
+            state.rollbacks += 1
+            generation = state.generation
+        self._drift.record_failure(key, bad_generation, "rollback")
+        self._drift.reset(key, generation, layers=layer_profile(old_opt))
         return True
 
     # -- request path ------------------------------------------------------
@@ -404,26 +583,48 @@ class OptimisedServer:
         Routed networks (``register(backend=...)``): the request goes to the
         backend with the cheapest predicted marginal cost; when that
         backend's queue is full the next-cheapest is tried before the
-        request is rejected (DESIGN.md §9)."""
+        request is rejected (DESIGN.md §9). Backends whose circuit breaker
+        is open are skipped — the request spills to the healthy ones
+        (DESIGN.md §11.2); a half-open breaker admits up to its probe quota.
+        When EVERY breaker refuses, the full route is used anyway: degrading
+        through a suspect backend beats black-holing the request."""
         x = np.asarray(x, np.float32)
         with self._cond:
             # validate/route against the states the ticket may land in — a
             # concurrent re-register may have changed the topology
             keys = self._route_keys_locked(net)
-            if len(keys) > 1:       # plain registrations skip the scorer
-                keys.sort(key=lambda k:
-                          self._route_score_locked(self._nets[k]))
             n0 = self._nets[keys[0]].opt.spec.nodes[0]
             if x.shape != (n0.c, n0.im, n0.im):
                 raise ValueError(f"{net!r} expects one ({n0.c}, {n0.im}, "
                                  f"{n0.im}) image per request, got {x.shape}")
+            granted: List[str] = []
+            if len(keys) > 1:       # plain registrations skip the gate/scorer
+                now = self._clock()
+                allowed = []
+                for k in keys:
+                    if self._nets[k].breaker.allow(now):
+                        allowed.append(k)
+                        granted.append(k)
+                keys = allowed if allowed else keys
+                keys.sort(key=lambda k:
+                          self._route_score_locked(self._nets[k]))
             t = Ticket(net=keys[0], x=x, submitted_s=self._clock(),
                        clock=self._clock)
+            pushed = None
             for k in keys:
                 t.net = k
                 if self._nets[k].queue.push(t):
-                    self._cond.notify()
-                    return t
+                    pushed = k
+                    break
+            # probe slots granted to backends the ticket did NOT land on are
+            # returned — a half-open breaker's quota meters dispatches that
+            # actually happen, not routing considerations
+            for k in granted:
+                if k != pushed:
+                    self._nets[k].breaker.cancel_probe()
+            if pushed is not None:
+                self._cond.notify()
+                return t
             self._nets[keys[0]].rejected += 1
             t.finish(error=f"rejected: every backend of {net!r} at queue "
                            f"depth (backpressure)", rejected=True)
@@ -457,7 +658,8 @@ class OptimisedServer:
             self._rr = (self._rr + k + 1) % n
             return _Batch(net=name, tickets=tickets,
                           generation=state.generation, state=state,
-                          opt=state.opt, weights=state.weights)
+                          opt=state.opt, weights=state.weights,
+                          claimed_s=t_claim)
         return None
 
     def claim_blocking(self, stop_event: threading.Event) -> Optional[_Batch]:
@@ -499,37 +701,45 @@ class OptimisedServer:
         out = plan(jnp.asarray(xs), weights)[plan.sinks[-1]]
         return np.asarray(jax.block_until_ready(out))
 
-    def execute(self, batch: _Batch) -> None:
-        """Run one claimed batch to completion: pad to the pow2 bucket,
-        execute, deliver results (slicing pad rows), feed the drift monitor,
-        release the in-flight slot. Never raises: a failed dispatch marks its
-        tickets instead of losing them."""
-        state = batch.state
-        opt, weights = batch.opt, batch.weights    # claim-time snapshot
-        tickets = batch.tickets
-        take = len(tickets)
-        b = pow2_ceil(take)
-        xs = np.stack([t.x for t in tickets])
-        if b != take:
-            pad = np.broadcast_to(xs[-1:], (b - take,) + xs.shape[1:])
-            xs = np.concatenate([xs, pad])
-        err: Optional[str] = None
-        t0 = self._clock()
-        try:
-            out = self._run_plan(opt, xs, weights)
-        except Exception as e:       # mark this batch failed, keep serving
-            err = str(e)
-        t1 = self._clock()
-        elapsed = t1 - t0
+    def _run_faulted(self, key: str, generation: int, opt: OptimisedNetwork,
+                     xs: np.ndarray, weights: Dict) -> np.ndarray:
+        """One plan execution, routed through the fault injector when one is
+        configured — the single choke point shared by dispatches and canary
+        batches, so a fault plan covers both."""
+        if self._faults is not None:
+            return self._faults.run(key, generation,
+                                    lambda: self._run_plan(opt, xs, weights))
+        return self._run_plan(opt, xs, weights)
 
-        clean_timing = False
+    def _attempt(self, batch: _Batch, xs: np.ndarray, b: int) -> np.ndarray:
+        """One primary execution attempt: compiled plan under the fault
+        injector, output-validated (a silently corrupt result is a failure,
+        not a delivery)."""
+        out = self._run_faulted(batch.net, batch.generation, batch.opt, xs,
+                                batch.weights)
+        return validate_output(out, b)
+
+    def _settle(self, batch: _Batch, *, primary_ok: bool, take: int, b: int,
+                t0: float, t1: float) -> Tuple[bool, bool, bool]:
+        """Release one claim exactly once: the in-flight slot, serving
+        counters, compile bookkeeping, and the per-generation failure
+        streak. Idempotent — the executing worker, its ``finally`` guard, a
+        late-completing zombie, and the supervisor's ``abandon`` may all
+        race here; the first caller wins and owns the outcome. Returns
+        ``(settled_now, clean_timing, rollback_due)``."""
+        state = batch.state
+        clean = False
+        roll = False
         with self._cond:
+            if batch.settled:
+                return False, False, False
+            batch.settled = True
             state.inflight -= 1
-            if err is None:
+            if primary_ok:
                 state.dispatches += 1
                 state.images += take
                 state.padded += b - take
-                state.busy_s += elapsed
+                state.busy_s += t1 - t0
                 # a dispatch only times cleanly if it STARTED after the
                 # bucket's first execution completed (no jit compile paid or
                 # waited on — holds for any max_inflight)
@@ -537,25 +747,184 @@ class OptimisedServer:
                 if ready_at is None:
                     state.bucket_ready[(batch.generation, b)] = t1
                 else:
-                    clean_timing = t0 >= ready_at
+                    clean = t0 >= ready_at
+                if state.generation == batch.generation:
+                    state.gen_bad_streak = -1   # proven: never auto-rolled
+            else:
+                state.failed_dispatches += 1
+                if (state.generation == batch.generation
+                        and state.gen_bad_streak >= 0):
+                    state.gen_bad_streak += 1
+                    # == (not >=): concurrent failing batches of the same
+                    # generation must trigger ONE rollback, not one each
+                    roll = (self.auto_rollback > 0
+                            and state.gen_bad_streak == self.auto_rollback
+                            and len(state.history) > 0)
             self._cond.notify_all()
+        return True, clean, roll
 
-        if err is not None:
-            for t in tickets:
-                t.finish(error=err)
+    def _fallback_asg(self, state: _NetState) -> Optional[Dict[int, str]]:
+        """The state's safe-plan assignment, built lazily (reference-only
+        primitives — see ``pipeline.safe_assignment``). ``{}`` caches an
+        unbuildable spec so a broken topology is not re-attempted per
+        failure."""
+        if state.fallback_asg is None:
+            from repro.service.pipeline import safe_assignment
+            try:
+                asg = safe_assignment(state.opt.spec)
+            except Exception:
+                asg = {}
+            with self._cond:
+                state.fallback_asg = asg
+        return state.fallback_asg or None
+
+    def _run_fallback(self, batch: _Batch, err: str) -> bool:
+        """Degrade a failed dispatch to the safe plan (DESIGN.md §11.1):
+        each ticket is served individually through the *interpreted*
+        reference path (``executor.execute(compiled=False)``) — maximal
+        independence from the compiled machinery that just failed, at
+        reference-primitive speed. Per-ticket isolation: one pathological
+        input fails its own ticket, not its batch peers. Returns True when
+        the batch's tickets were all settled here (served or failed)."""
+        state = batch.state
+        asg = self._fallback_asg(state)
+        if asg is None:
+            return False
+        import jax.numpy as jnp
+        from repro.primitives.executor import execute as execute_reference
+        from repro.primitives.plan import sink_nodes
+        sink = sink_nodes(batch.opt.spec)[-1]
+        served = 0
+        for t in batch.tickets:
+            if t.done:
+                continue               # already settled (late rescue race)
+            try:
+                rep = execute_reference(batch.opt.spec, asg,
+                                        weights=batch.weights,
+                                        x=jnp.asarray(t.x), compiled=False)
+                out = np.asarray(rep.outputs[sink])
+                if t.finish(result=out, degraded=True):
+                    served += 1
+            except Exception as e:
+                t.finish(error=f"{err}; fallback also failed: {e}")
+        with self._cond:
+            if served:
+                state.fallback_dispatches += 1
+                state.fallback_images += served
+        return True
+
+    def execute(self, batch: _Batch) -> None:
+        """Run one claimed batch to completion: assemble and pad to the pow2
+        bucket, execute the compiled plan (one retry on failure, then
+        degrade to the safe fallback plan), deliver results, feed the
+        breaker / failure ledger / drift monitor, release the in-flight
+        slot. Never raises, and never leaks: batch assembly runs inside the
+        guarded region (a malformed ticket fails its batch, not the worker),
+        and the ``finally`` settle guarantees the in-flight slot and every
+        ticket are released even if delivery itself blew up."""
+        state = batch.state
+        tickets = batch.tickets
+        take = len(tickets)
+        b = pow2_ceil(take)
+        err: Optional[str] = None
+        kind: Optional[str] = None
+        out = None
+        abandoned = False
+        t0 = t1 = self._clock()
+        try:
+            try:
+                xs = np.stack([t.x for t in tickets])
+                if b != take:
+                    pad = np.broadcast_to(xs[-1:], (b - take,) + xs.shape[1:])
+                    xs = np.concatenate([xs, pad])
+                t0 = self._clock()
+                try:
+                    out = self._attempt(batch, xs, b)
+                except Exception as e:
+                    kind = classify(e)
+                    with self._cond:
+                        state.retries += 1
+                    try:   # one retry: a transient fault should cost a
+                        out = self._attempt(batch, xs, b)   # retry, not
+                    except Exception as e2:                 # degradation
+                        err, kind = str(e2), classify(e2)
+                t1 = self._clock()
+            except Exception as e:     # batch assembly / bookkeeping failed
+                err, kind = str(e), "error"
+                t1 = self._clock()
+
+            settled, clean_timing, roll = self._settle(
+                batch, primary_ok=err is None, take=take, b=b, t0=t0, t1=t1)
+            if not settled:
+                # abandoned by the supervisor: it owns the outcome — a
+                # zombie returning here must not touch the tickets, or it
+                # races the supervisor's in-progress fallback rescue and
+                # error-finishes tickets the rescue would have served
+                abandoned = True
+                return
+            with self._cond:
+                state.breaker.record(err is None, self._clock())
+            if err is None:
+                for j, t in enumerate(tickets):
+                    t.finish(result=out[j])
+                # drift: per-image served latency vs model prediction. A
+                # cleanly timed dispatch is also one free measurement —
+                # ``batch=b`` buffers it for served-sample recalibration
+                pred = batch.opt.predicted_cost_s
+                if (clean_timing and np.isfinite(pred) and pred > 0
+                        and self._drift.observe(batch.net, batch.generation,
+                                                (t1 - t0) / b, pred, batch=b)):
+                    self._schedule_recalibration(batch.net, batch.generation)
+                return
+            self._drift.record_failure(batch.net, batch.generation,
+                                       kind or "error")
+            if not (self.fallback and self._run_fallback(batch, err)):
+                for t in tickets:
+                    t.finish(error=err)
+            with self._cond:
+                state.failed_tickets += sum(1 for t in tickets
+                                            if t.error is not None)
+            if roll:
+                self._rollback(batch.net,
+                               expect_generation=batch.generation)
+        finally:
+            # leak-proofing: if anything above escaped, the claim still
+            # settles and every ticket still finishes (both idempotent)
+            self._settle(batch, primary_ok=False, take=take, b=b,
+                         t0=t0, t1=t1)
+            if not abandoned:
+                for t in tickets:
+                    t.finish(error=err or "internal serving error")
+
+    def abandon(self, batch: _Batch, reason: str) -> None:
+        """Give up on a claim whose worker hung past the execution deadline
+        or died (called by the ``WorkerPool`` supervisor — DESIGN.md §11.3).
+        Settles the batch (no-op if the dispatch actually finished first),
+        trips the breaker/ledger, and rescues the tickets through the
+        fallback plan so a hung backend costs latency, not answers. The
+        zombie worker's own eventual settle/finish attempts lose the race
+        by construction."""
+        take = len(batch.tickets)
+        b = pow2_ceil(take)
+        settled, _clean, roll = self._settle(batch, primary_ok=False,
+                                             take=take, b=b, t0=0.0, t1=0.0)
+        if not settled:
             return
-        for j, t in enumerate(tickets):
-            t.finish(result=out[j])
-
-        # drift: per-image served latency vs model prediction. A cleanly
-        # timed dispatch is also one free measurement — ``batch=b`` buffers
-        # it for served-sample recalibration (compile dispatches never get
-        # here, so the buffer only holds steady-state timings)
-        pred = opt.predicted_cost_s
-        if (clean_timing and np.isfinite(pred) and pred > 0
-                and self._drift.observe(batch.net, batch.generation,
-                                        elapsed / b, pred, batch=b)):
-            self._schedule_recalibration(batch.net, batch.generation)
+        kind = "deadline" if reason == "deadline" else "died"
+        with self._cond:
+            batch.state.breaker.record(False, self._clock())
+        self._drift.record_failure(batch.net, batch.generation, kind)
+        msg = (f"abandoned: worker {reason} executing {batch.net!r} "
+               f"generation {batch.generation}")
+        try:
+            rescued = self.fallback and self._run_fallback(batch, msg)
+        except Exception:
+            rescued = False
+        if not rescued:
+            for t in batch.tickets:
+                t.finish(error=msg)
+        if roll:
+            self._rollback(batch.net, expect_generation=batch.generation)
 
     # -- drift-triggered recalibration ------------------------------------
     def served_sample(self, net: str):
@@ -580,8 +949,12 @@ class OptimisedServer:
         th = threading.Thread(target=self._recalibration_worker,
                               args=(net, generation), daemon=True,
                               name=f"recal-{net}-g{generation}")
-        self._recal_threads = [t for t in self._recal_threads if t.is_alive()]
-        self._recal_threads.append(th)
+        # _recal_threads is touched from worker threads (here) and the
+        # caller's thread (recalibrations_idle/stop): mutate under the lock
+        with self._cond:
+            self._recal_threads = [t for t in self._recal_threads
+                                   if t.is_alive()]
+            self._recal_threads.append(th)
         th.start()
 
     def _recalibration_worker(self, net: str, generation: int) -> None:
@@ -610,8 +983,10 @@ class OptimisedServer:
 
     def recalibrations_idle(self) -> bool:
         """True when no background recalibration is in flight (tests/CLI)."""
-        self._recal_threads = [t for t in self._recal_threads if t.is_alive()]
-        return not self._recal_threads
+        with self._cond:
+            self._recal_threads = [t for t in self._recal_threads
+                                   if t.is_alive()]
+            return not self._recal_threads
 
     # -- synchronous path --------------------------------------------------
     def pump(self, drain: bool = True) -> int:
@@ -676,7 +1051,18 @@ class OptimisedServer:
                 "queue_wait_p50_ms": (float(np.percentile(waits, 50)) * 1e3
                                       if waits.size else 0.0),
                 "queue_wait_p99_ms": (float(np.percentile(waits, 99)) * 1e3
-                                      if waits.size else 0.0)}
+                                      if waits.size else 0.0),
+                # fault tolerance (DESIGN.md §11)
+                "breaker": (s.breaker.snapshot(self._clock())
+                            if s.breaker is not None else None),
+                "retries": s.retries,
+                "failed_dispatches": s.failed_dispatches,
+                "failed_tickets": s.failed_tickets,
+                "fallback_dispatches": s.fallback_dispatches,
+                "fallback_images": s.fallback_images,
+                "canary_rejected": s.canary_rejected,
+                "last_canary": s.last_canary,
+                "rollbacks": s.rollbacks}
 
     def stats(self, net: str) -> Dict:
         """Serving stats for ``net`` — a state key or a logical name. A
@@ -693,12 +1079,20 @@ class OptimisedServer:
         for k in keys:
             per[k]["drift_ratio"] = self._drift.ratio(k)
             per[k]["observed_dispatches"] = len(self._drift.observations(k))
+            per[k]["failures"] = self._drift.failures(k)
         if len(keys) == 1 and names[keys[0]] is None:
             return per[keys[0]]                # plain single-backend network
         out: Dict = {"backends": {names[k] or k: per[k] for k in keys}}
         for fld in ("dispatches", "images", "padded", "rejected", "queued",
-                    "inflight", "recalibrations", "observed_dispatches"):
+                    "inflight", "recalibrations", "observed_dispatches",
+                    "retries", "failed_dispatches", "failed_tickets",
+                    "fallback_dispatches", "fallback_images",
+                    "canary_rejected", "rollbacks"):
             out[fld] = sum(per[k][fld] for k in keys)
+        failures: Dict[str, int] = {}
+        for k in keys:
+            merge_failures(failures, per[k]["failures"])
+        out["failures"] = failures
         out["busy_s"] = sum(per[k]["busy_s"] for k in keys)
         out["images_per_s"] = (out["images"] / out["busy_s"]
                                if out["busy_s"] else 0.0)
@@ -708,7 +1102,7 @@ class OptimisedServer:
         ratios = [per[k]["drift_ratio"] for k in keys
                   if per[k]["drift_ratio"] is not None]
         out["drift_ratio"] = max(ratios) if ratios else None
-        for fld in ("last_recal_error", "recal_sample"):
+        for fld in ("last_recal_error", "recal_sample", "last_canary"):
             out[fld] = next((per[k][fld] for k in keys
                              if per[k][fld] is not None), None)
         waits = (np.concatenate(pooled) if any(w.size for w in pooled)
@@ -850,6 +1244,36 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--max-iters", type=int, default=2000)
     ap.add_argument("--hot-swap", action="store_true",
                     help="recalibrate mid-run and hot-swap the assignment")
+    ap.add_argument("--exec-deadline-ms", type=float, default=None,
+                    help="per-dispatch execution deadline: the worker "
+                         "supervisor abandons (and rescues via fallback) "
+                         "dispatches exceeding it, replacing the hung "
+                         "worker (default: disabled)")
+    ap.add_argument("--no-fallback", action="store_true",
+                    help="disable graceful degradation: a failed dispatch "
+                         "fails its tickets instead of retrying them on "
+                         "the safe reference plan")
+    ap.add_argument("--canary", action="store_true",
+                    help="gate every hot_swap behind a canary batch: a "
+                         "candidate that errors, corrupts output, or runs "
+                         "pathologically slow is rejected and the previous "
+                         "generation keeps serving")
+    ap.add_argument("--breaker-failures", type=int, default=3,
+                    help="consecutive dispatch failures that open a "
+                         "backend's circuit breaker (routed traffic then "
+                         "spills to healthy backends)")
+    ap.add_argument("--breaker-window", type=int, default=16,
+                    help="sliding outcome window for the breaker's "
+                         "error-rate trip")
+    ap.add_argument("--breaker-rate", type=float, default=0.5,
+                    help="error rate over a full window that opens the "
+                         "breaker")
+    ap.add_argument("--breaker-cooldown-ms", type=float, default=250.0,
+                    help="open-state hold before half-open probe dispatches "
+                         "test the backend again")
+    ap.add_argument("--rollback-history", type=int, default=4,
+                    help="hot-swap generations kept per net for "
+                         "rollback (0 disables)")
     args = ap.parse_args(argv)
 
     from repro.service.artifacts import ArtifactStore
@@ -892,6 +1316,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              drift_threshold=args.drift_threshold,
                              drift_alpha=args.drift_alpha,
                              obs_cap=args.obs_cap,
+                             exec_deadline_ms=args.exec_deadline_ms,
+                             fallback=not args.no_fallback,
+                             canary=args.canary,
+                             breaker_failures=args.breaker_failures,
+                             breaker_window=args.breaker_window,
+                             breaker_rate=args.breaker_rate,
+                             breaker_cooldown_ms=args.breaker_cooldown_ms,
+                             rollback_history=args.rollback_history,
                              recalibrate=make_recalibrator(
                                  store=store,
                                  sample_n=args.recal_sample_n,
@@ -925,7 +1357,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"[serve]   backend {b}: {bs['dispatches']} dispatches, "
                   f"{bs['images']} images, queue p50/p99 "
                   f"{bs['queue_wait_p50_ms']:.2f}/"
-                  f"{bs['queue_wait_p99_ms']:.2f} ms")
+                  f"{bs['queue_wait_p99_ms']:.2f} ms, "
+                  f"breaker {bs['breaker']['state']}")
+    if s["failed_dispatches"] or s["fallback_images"]:
+        print(f"[serve] faults: {s['failed_dispatches']} failed dispatches "
+              f"({s['retries']} retried), {s['fallback_images']} images "
+              f"served degraded, ledger {s['failures']}")
 
     if args.hot_swap:
         spec_name, o = opts[0]

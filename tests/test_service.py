@@ -113,6 +113,30 @@ def test_artifact_store_sweep_keeps_newest_k(tmp_path):
     assert kept == {3, 4}        # newest two by manifest creation time
 
 
+def test_artifact_store_sweep_collects_truncated_and_partial(tmp_path):
+    """sweep() with no retention is a pure GC pass: corrupt entries (payload
+    truncated after the manifest was written) and dead tmp dirs are
+    collected; valid artifacts are untouched (DESIGN.md §11)."""
+    import time as _time
+    store = ArtifactStore(str(tmp_path))
+    store.put_json("selections", {"k": "good"}, {"v": 1})
+    bad = store.put_json("selections", {"k": "bad"}, {"v": 2})
+    with open(os.path.join(bad, "data.json"), "w") as f:
+        f.write('{"v":')                        # truncated payload
+    partial = os.path.join(str(tmp_path), "selections", "no-manifest")
+    os.makedirs(partial)                        # writer died before manifest
+    stale_tmp = os.path.join(str(tmp_path), "selections", "tmp.dead.1")
+    os.makedirs(stale_tmp)
+    old = _time.time() - 7200
+    os.utime(stale_tmp, (old, old))             # crashed writer, hours ago
+    assert store.get_json("selections", {"k": "bad"}) is None   # invisible
+    assert store.sweep() == 2                   # truncated + manifest-less
+    assert not os.path.exists(bad) and not os.path.exists(partial)
+    assert not os.path.exists(stale_tmp)        # stale tmp reaped too
+    assert store.get_json("selections", {"k": "good"}) == {"v": 1}
+    assert len(store.entries("selections")) == 1
+
+
 def test_artifact_store_opportunistic_gc_bounds_growth(tmp_path):
     """keep= makes every put GC its category — drift-loop recalibration
     generations cannot grow the store without bound."""

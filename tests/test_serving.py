@@ -618,3 +618,63 @@ def test_drifted_platform_recalibrates_and_hot_swaps():
         server.stop()
     # exactly one excursion -> exactly one recalibration
     assert server.stats(opt.net)["recalibrations"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Failure paths (DESIGN.md §11): ticket expiry, batch failure, client deadline
+# ---------------------------------------------------------------------------
+
+def test_ticket_wait_timeout_expiry():
+    t = Ticket(net="n", x=np.zeros(1))
+    assert not t.wait(0.01)                    # expires: not finished
+    assert not t.done
+    assert t.finish(result=np.ones(1))
+    assert t.wait(0.0) and t.done
+    # first finish wins: a late settle attempt must not change the answer
+    assert not t.finish(error="late loser")
+    assert t.error is None and t.result is not None
+
+
+def test_batch_failure_finishes_tickets_and_releases_inflight(served_net):
+    class BrokenServer(OptimisedServer):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.broken = True
+
+        def _run_plan(self, opt, xs, weights):
+            if self.broken:
+                raise RuntimeError("device wedged")
+            return super()._run_plan(opt, xs, weights)
+
+    server = BrokenServer(max_batch=8, fallback=False, clock=FakeClock())
+    server.register(served_net)
+    ts = [server.submit(served_net.net, x)
+          for x in _requests(served_net.spec, 3)]
+    server.pump()
+    assert all(t.done and t.result is None for t in ts)
+    assert all("device wedged" in t.error for t in ts)
+    s = server.stats(served_net.net)
+    assert s["failed_dispatches"] == 1 and s["retries"] == 1
+    assert s["failed_tickets"] == 3
+    assert s["inflight"] == 0                  # the claim settled: no leak
+    server.broken = False                      # serving resumes afterwards
+    t = server.submit(served_net.net, _requests(served_net.spec, 1)[0])
+    server.pump()
+    assert t.done and t.error is None and t.result is not None
+
+
+def test_serve_raises_on_client_deadline(served_net):
+    from repro.service.serving.faults import Fault, FaultInjector
+    clock = FakeClock()
+    inj = FaultInjector([Fault("hang", net=served_net.net, seconds=1e6)],
+                        clock=clock)
+    server = OptimisedServer(max_batch=8, workers=1, max_wait_ms=0.0,
+                             faults=inj, clock=clock)
+    server.register(served_net)
+    try:
+        with pytest.raises(TimeoutError):
+            server.serve(served_net.net, _requests(served_net.spec, 1),
+                         timeout=0.3)
+    finally:
+        clock.advance(2e6)                     # un-stick the hung dispatch
+        server.stop(timeout=60.0)

@@ -1,0 +1,583 @@
+"""Fault-tolerant serving (DESIGN.md §11): deterministic fault injection,
+retry → safe-plan degradation, per-backend circuit breakers with half-open
+probing, supervised workers (hung-dispatch abandonment, zombie shedding),
+canaried hot_swap with bounded rollback, and the chaos soak asserting the
+system-level availability invariants — zero lost tickets, zero duplicated
+tickets, ≥99% served under injected raise/hang/slowdown faults.
+
+Determinism: fault plans match on (state key, generation, per-key dispatch
+index) — no randomness; unit tests drive time through the injected fake
+clock. The soak runs on the real clock (workers + supervisor are real
+threads) but its fault schedule, routing preferences, and accounting
+identities are exact, not statistical.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.models import cnn_zoo
+from repro.primitives.plan import heuristic_assignment
+from repro.service import (CircuitBreaker, CorruptOutput, Fault, FaultError,
+                           FaultInjector, OptimisedNetwork, OptimisedServer,
+                           safe_assignment)
+from repro.service.platforms import SimulatedPlatform
+from repro.service.serving.faults import classify, validate_output
+
+
+class FakeClock:
+    """Deterministic injectable clock: time moves only when a test says so."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+# ---------------------------------------------------------------------------
+# Fixtures / helpers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spec():
+    return cnn_zoo.get("edge_cnn")
+
+
+def _net(spec, *, net="edge_cnn", predicted=2e-3):
+    return OptimisedNetwork.from_assignment(spec, heuristic_assignment(spec),
+                                            net=net, predicted_cost_s=predicted)
+
+
+def _requests(spec, n, seed=0):
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n0.c, n0.im, n0.im)).astype(np.float32)
+
+
+def _wait_for(pred, timeout=30.0, what=""):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return
+        time.sleep(0.005)
+    raise AssertionError(f"timed out waiting for {what or pred}")
+
+
+# ---------------------------------------------------------------------------
+# Fault plans are deterministic (pure, no server)
+# ---------------------------------------------------------------------------
+
+def test_fault_matching_and_injection_log():
+    f = Fault("raise", net="n#a", generation=1, first=2, last=8, every=3)
+    assert not f.matches("n#b", 1, 2)          # wrong key
+    assert not f.matches("n#a", 0, 2)          # wrong generation
+    assert f.matches("n#a", None, 2)           # generation unknown: matches
+    assert [i for i in range(10) if f.matches("n#a", 1, i)] == [2, 5]
+    with pytest.raises(ValueError):
+        Fault("explode")
+    with pytest.raises(ValueError):
+        Fault("raise", every=0)
+
+    inj = FaultInjector([Fault("raise", net="n", first=1, last=2)])
+    assert inj.run("n", 0, lambda: np.zeros(1)) is not None     # index 0
+    with pytest.raises(FaultError):
+        inj.run("n", 0, lambda: np.zeros(1))                    # index 1
+    assert inj.run("m", 0, lambda: np.zeros(1)) is not None     # other key
+    assert inj.count("n") == 2 and inj.count("m") == 1
+    assert inj.injected == [("n", 0, 1, "raise")]
+
+
+def test_corrupt_fault_and_output_validation():
+    inj = FaultInjector([Fault("corrupt", net="n")])
+    out = inj.run("n", 0, lambda: np.ones((4, 3), np.float32))
+    assert np.isnan(out[0]).all() and np.isfinite(out[1:]).all()
+    with pytest.raises(CorruptOutput):
+        validate_output(out, 4)
+    with pytest.raises(CorruptOutput):
+        validate_output(np.ones((2, 3)), 4)    # wrong leading dim
+    assert validate_output(np.ones((4, 3)), 4).shape == (4, 3)
+    assert classify(CorruptOutput("x")) == "corrupt"
+    assert classify(FaultError("x")) == "fault"
+    assert classify(ValueError("x")) == "error"
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine (pure)
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_recovers_via_half_open_probe():
+    br = CircuitBreaker(failures=3, cooldown_s=1.0, probes=1)
+    for t in range(3):
+        assert br.allow(float(t))
+        br.record(False, float(t))
+    assert br.state == "open" and br.opens == 1
+    assert not br.allow(2.5)                   # cooling down
+    assert br.allow(3.1)                       # cooldown over: probe granted
+    assert br.state == "half_open" and br.inflight_probes == 1
+    assert not br.allow(3.1)                   # probe quota exhausted
+    br.record(False, 3.2)                      # probe failed: re-open
+    assert br.state == "open" and br.opens == 2
+    assert br.allow(4.3)                       # second probe
+    br.record(True, 4.4)                       # probe succeeded: close
+    assert br.state == "closed" and br.closes == 1
+    assert br.inflight_probes == 0 and br.consecutive == 0
+    snap = br.snapshot(4.5)
+    assert snap["state"] == "closed" and snap["opens"] == 2
+
+
+def test_breaker_window_rate_trip_and_probe_cancel():
+    br = CircuitBreaker(failures=100, window=4, rate=0.5, cooldown_s=1.0)
+    for ok in (True, False, True, False):      # 50% over a full window
+        br.record(ok, 0.0)
+    assert br.state == "open"
+    assert br.allow(1.5) and br.inflight_probes == 1
+    br.cancel_probe()                          # admitted but never dispatched
+    assert br.inflight_probes == 0
+    assert br.allow(1.5)                       # slot returned: re-grantable
+
+
+# ---------------------------------------------------------------------------
+# Retry and graceful degradation (synchronous pump, fake clock)
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_costs_a_retry_not_degradation(spec):
+    inj = FaultInjector([Fault("raise", net="edge_cnn", first=0, last=1)])
+    server = OptimisedServer(max_batch=4, faults=inj, clock=FakeClock())
+    server.register(_net(spec))
+    ts = [server.submit("edge_cnn", x) for x in _requests(spec, 2)]
+    server.pump()
+    assert all(t.done and t.error is None and not t.degraded for t in ts)
+    s = server.stats("edge_cnn")
+    assert s["retries"] == 1 and s["failed_dispatches"] == 0
+    assert s["dispatches"] == 1 and s["images"] == 2
+    assert s["failures"] == {}                 # ledger: failed dispatches only
+    assert s["breaker"]["state"] == "closed"
+
+
+def test_persistent_fault_degrades_to_safe_plan(spec):
+    from repro.primitives.executor import make_weights
+    inj = FaultInjector([Fault("raise", net="edge_cnn", first=0, last=2)])
+    server = OptimisedServer(max_batch=4, faults=inj, clock=FakeClock())
+    weights = make_weights(spec)
+    server.register(_net(spec), weights=weights)
+    xs = _requests(spec, 2, seed=3)
+    ts = [server.submit("edge_cnn", x) for x in xs]
+    server.pump()
+    assert all(t.done and t.error is None and t.degraded for t in ts)
+    assert all(t.result is not None for t in ts)
+    s = server.stats("edge_cnn")
+    assert s["failed_dispatches"] == 1 and s["retries"] == 1
+    assert s["fallback_dispatches"] == 1 and s["fallback_images"] == 2
+    assert s["failed_tickets"] == 0 and s["images"] == 0
+    assert s["failures"] == {"fault": 1}
+    assert s["breaker"]["consecutive_failures"] == 1
+    # the degraded answer is the same inference: the next dispatch (faults
+    # exhausted) serves the identical input through the primary plan
+    t2 = server.submit("edge_cnn", xs[0])
+    server.pump()
+    assert t2.error is None and not t2.degraded
+    np.testing.assert_allclose(ts[0].result, t2.result, rtol=1e-2, atol=1e-3)
+
+
+def test_corrupt_output_is_detected_and_rescued(spec):
+    inj = FaultInjector([Fault("corrupt", net="edge_cnn", first=0, last=2)])
+    server = OptimisedServer(max_batch=4, faults=inj, clock=FakeClock())
+    server.register(_net(spec))
+    t = server.submit("edge_cnn", _requests(spec, 1)[0])
+    server.pump()
+    assert t.done and t.error is None and t.degraded
+    assert np.isfinite(t.result).all()         # NaN never reached the client
+    s = server.stats("edge_cnn")
+    assert s["failures"] == {"corrupt": 1}
+
+
+def test_no_fallback_fails_tickets_with_the_error(spec):
+    inj = FaultInjector([Fault("raise", net="edge_cnn")])
+    server = OptimisedServer(max_batch=4, faults=inj, fallback=False,
+                             clock=FakeClock())
+    server.register(_net(spec))
+    ts = [server.submit("edge_cnn", x) for x in _requests(spec, 2)]
+    server.pump()
+    assert all(t.done and t.result is None for t in ts)
+    assert all("injected fault" in t.error for t in ts)
+    s = server.stats("edge_cnn")
+    assert s["failed_tickets"] == 2 and s["fallback_images"] == 0
+    # the claim settled: the in-flight slot is free and serving continues
+    assert s["inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Breaker-aware routing: spill to healthy backends, recover via probe
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_spills_to_healthy_backend_and_recovers(spec):
+    clock = FakeClock()
+    inj = FaultInjector([Fault("raise", net="edge_cnn#a", first=0, last=4)],
+                        clock=clock)
+    server = OptimisedServer(max_batch=4, faults=inj, clock=clock,
+                             breaker_failures=2, breaker_cooldown_ms=1000.0)
+    # backend a predicts far cheaper, so the router prefers it while allowed
+    server.register(_net(spec, predicted=1e-6), backend="a")
+    server.register(_net(spec, predicted=1e-3), backend="b")
+    xs = _requests(spec, 5, seed=1)
+
+    t1 = server.submit("edge_cnn", xs[0]);  server.pump()
+    t2 = server.submit("edge_cnn", xs[1]);  server.pump()
+    st = server.stats("edge_cnn")["backends"]
+    assert st["a"]["failed_dispatches"] == 2
+    assert st["a"]["breaker"]["state"] == "open"
+    assert t1.degraded and t2.degraded         # rescued, not lost
+
+    t3 = server.submit("edge_cnn", xs[2]);  server.pump()
+    st = server.stats("edge_cnn")["backends"]
+    assert st["b"]["images"] == 1 and not t3.degraded    # spilled to b
+
+    clock.advance(1.1)                         # cooldown elapses
+    t4 = server.submit("edge_cnn", xs[3])      # half-open: probe lands on a
+    assert server.stats("edge_cnn")["backends"]["a"]["breaker"]["state"] \
+        == "half_open"
+    t5 = server.submit("edge_cnn", xs[4])      # probe quota spent: goes to b
+    server.pump()
+    st = server.stats("edge_cnn")["backends"]
+    assert st["a"]["breaker"]["state"] == "closed"       # probe succeeded
+    assert st["a"]["breaker"]["opens"] == 1
+    assert st["a"]["breaker"]["closes"] == 1
+    assert st["a"]["images"] == 1 and st["b"]["images"] == 2
+    assert all(t.done and t.error is None for t in (t3, t4, t5))
+    agg = server.stats("edge_cnn")
+    assert agg["failures"] == {"fault": 2}
+    assert agg["images"] + agg["fallback_images"] == 5   # nothing lost/dup
+
+
+# ---------------------------------------------------------------------------
+# Supervised workers: hung dispatch abandoned, rescued, worker replaced
+# ---------------------------------------------------------------------------
+
+def test_hung_worker_is_abandoned_rescued_and_replaced(spec):
+    clock = FakeClock()
+    inj = FaultInjector(
+        [Fault("hang", net="edge_cnn", first=0, last=1, seconds=5.0)],
+        clock=clock)
+    server = OptimisedServer(max_batch=4, workers=1, max_wait_ms=0.0,
+                             exec_deadline_ms=100.0, faults=inj, clock=clock)
+    server.register(_net(spec))
+    xs = _requests(spec, 2, seed=2)
+    try:
+        t1 = server.submit("edge_cnn", xs[0])
+        _wait_for(lambda: inj.count("edge_cnn") == 1, what="worker to claim")
+        clock.advance(0.2)                     # past the execution deadline
+        _wait_for(lambda: t1.done, what="supervisor rescue")
+        assert t1.error is None and t1.degraded and t1.result is not None
+        s = server.stats("edge_cnn")
+        assert s["failures"] == {"deadline": 1}
+        assert s["fallback_images"] == 1 and s["images"] == 0
+        assert server._pool.restarts == 1 and server._pool.zombies == 1
+
+        # the replacement worker serves fresh traffic immediately
+        t2 = server.submit("edge_cnn", xs[1])
+        _wait_for(lambda: t2.done, what="replacement worker")
+        assert t2.error is None and not t2.degraded
+
+        # un-stick the zombie: it completes, loses every settle/finish race,
+        # and exits — the rescued ticket's answer must not change
+        clock.advance(10.0)
+        _wait_for(lambda: server._pool.zombies == 0, timeout=60.0,
+                  what="zombie exit")
+        assert t1.degraded and server.stats("edge_cnn")["images"] == 1
+    finally:
+        clock.advance(100.0)                   # free any residual stall
+        server.stop(timeout=60.0)
+
+
+def test_zombie_waking_mid_rescue_cannot_error_the_tickets(spec):
+    # Race regression: the supervisor abandons a hung dispatch and starts
+    # the (slow) fallback rescue; the zombie's plan completes while the
+    # rescue is still in flight. The zombie's execute() lost the settle
+    # race, so it owns nothing — it must return without touching the
+    # tickets, or first-finish-wins turns its "internal serving error"
+    # into the delivered outcome and locks the rescue out.
+    clock = FakeClock()
+    inj = FaultInjector(
+        [Fault("hang", net="edge_cnn", first=0, last=1, seconds=5.0)],
+        clock=clock)
+    server = OptimisedServer(max_batch=4, workers=1, max_wait_ms=0.0,
+                             exec_deadline_ms=100.0, faults=inj, clock=clock)
+    server.register(_net(spec))
+    rescue_started = threading.Event()
+    rescue_resume = threading.Event()
+    real_rescue = server._run_fallback
+
+    def slow_rescue(batch, err):
+        rescue_started.set()
+        rescue_resume.wait(60.0)
+        return real_rescue(batch, err)
+
+    server._run_fallback = slow_rescue
+    xs = _requests(spec, 2, seed=7)
+    try:
+        t1 = server.submit("edge_cnn", xs[0])
+        _wait_for(lambda: inj.count("edge_cnn") == 1, what="worker to claim")
+        clock.advance(0.2)                     # past the execution deadline
+        _wait_for(rescue_started.is_set, what="supervisor rescue to start")
+        assert not t1.done                     # rescue is deliberately stuck
+
+        # wake the zombie mid-rescue; it must pass through execute()'s
+        # cleanup without finishing t1. A follow-up ticket proves the
+        # worker made it back to its claim loop.
+        clock.advance(10.0)
+        t2 = server.submit("edge_cnn", xs[1])
+        _wait_for(lambda: t2.done, what="worker to serve fresh traffic")
+        assert t2.error is None and not t2.degraded
+        assert not t1.done                     # the zombie did not touch it
+
+        rescue_resume.set()                    # rescue finishes the job
+        _wait_for(lambda: t1.done, what="rescue to settle the ticket")
+        assert t1.error is None and t1.degraded and t1.result is not None
+        s = server.stats("edge_cnn")
+        assert s["failures"] == {"deadline": 1}
+        assert s["fallback_images"] == 1 and s["images"] == 1
+    finally:
+        rescue_resume.set()
+        clock.advance(100.0)                   # free any residual stall
+        server.stop(timeout=60.0)
+
+
+# ---------------------------------------------------------------------------
+# Canaried hot_swap and rollback
+# ---------------------------------------------------------------------------
+
+def test_canary_rejects_candidate_that_faults(spec):
+    # the fault targets generation 1 — exactly the candidate's number — so
+    # the live generation 0 keeps serving untouched before and after
+    inj = FaultInjector([Fault("raise", net="edge_cnn", generation=1,
+                               first=0, last=1)])
+    server = OptimisedServer(max_batch=4, faults=inj, clock=FakeClock())
+    server.register(_net(spec))
+    cand = _net(spec)
+    assert not server.hot_swap("edge_cnn", cand, canary=True)
+    s = server.stats("edge_cnn")
+    assert s["generation"] == 0 and s["canary_rejected"] == 1
+    assert "canary failed" in s["last_canary"]
+    assert s["failures"] == {"canary": 1}
+    t = server.submit("edge_cnn", _requests(spec, 1)[0])
+    server.pump()
+    assert t.error is None and not t.degraded  # live generation unaffected
+    # a clean candidate passes the same gate
+    assert server.hot_swap("edge_cnn", cand, canary=True)
+    assert server.stats("edge_cnn")["generation"] == 1
+
+
+def test_canary_rejects_pathological_slowdown(spec):
+    clock = FakeClock()
+    slow = {}
+
+    class PacedServer(OptimisedServer):
+        def _run_plan(self, o, xs, weights):
+            out = super()._run_plan(o, xs, weights)
+            clock.advance(slow.get(id(o), 0.0) * xs.shape[0])
+            return out
+
+    server = PacedServer(max_batch=4, clock=clock, canary_slowdown=8.0)
+    server.register(_net(spec, predicted=2e-3))   # baseline: predicted cost
+    bad = _net(spec)
+    slow[id(bad)] = 0.1                        # 50x the 2 ms baseline
+    assert not server.hot_swap("edge_cnn", bad, canary=True)
+    s = server.stats("edge_cnn")
+    assert s["generation"] == 0 and "slowdown" in s["last_canary"]
+    good = _net(spec)
+    assert server.hot_swap("edge_cnn", good, canary=True)
+    assert server.stats("edge_cnn")["generation"] == 1
+
+
+def test_poisoned_recalibration_is_rejected_within_one_canary_batch(spec):
+    # the drift loop's recalibration path (hot_swap with expect_generation)
+    # hands back a poisoned candidate: its executions corrupt output under
+    # the candidate generation. The canary gate must veto it pre-commit.
+    bad = _net(spec)
+    inj = FaultInjector([Fault("corrupt", net="edge_cnn", generation=1)])
+    server = OptimisedServer(max_batch=4, faults=inj, canary=True,
+                             recalibrate=lambda opt: bad, clock=FakeClock())
+    server.register(_net(spec))
+    server._recalibration_worker("edge_cnn", 0)
+    s = server.stats("edge_cnn")
+    assert s["generation"] == 0 and s["recalibrations"] == 0
+    assert s["canary_rejected"] == 1
+    t = server.submit("edge_cnn", _requests(spec, 1)[0])
+    server.pump()
+    assert t.error is None and not t.degraded  # serving never saw the poison
+
+
+def test_auto_rollback_reverts_never_succeeded_generation(spec):
+    inj = FaultInjector([Fault("raise", net="edge_cnn", generation=1)])
+    server = OptimisedServer(max_batch=4, faults=inj, auto_rollback=2,
+                             clock=FakeClock())
+    server.register(_net(spec))
+    xs = _requests(spec, 3, seed=5)
+    t0 = server.submit("edge_cnn", xs[0]);  server.pump()
+    assert not t0.degraded                     # generation 0 proven
+    assert server.hot_swap("edge_cnn", _net(spec))      # -> generation 1
+    t1 = server.submit("edge_cnn", xs[1]);  server.pump()
+    assert server.stats("edge_cnn")["generation"] == 1  # one strike: held
+    t2 = server.submit("edge_cnn", xs[2]);  server.pump()
+    s = server.stats("edge_cnn")
+    assert s["generation"] == 2 and s["rollbacks"] == 1  # reverted
+    assert s["failures"]["rollback"] == 1 and s["failures"]["fault"] == 2
+    assert t1.degraded and t2.degraded         # rescued while it failed
+    # the restored assignment serves cleanly (fault matched generation 1)
+    t3 = server.submit("edge_cnn", xs[0]);  server.pump()
+    assert t3.error is None and not t3.degraded
+
+
+def test_manual_rollback_ring_is_bounded(spec):
+    server = OptimisedServer(max_batch=4, rollback_history=2,
+                             clock=FakeClock())
+    server.register(_net(spec))
+    for _ in range(4):
+        assert server.hot_swap("edge_cnn", _net(spec))
+    assert server.stats("edge_cnn")["generation"] == 4
+    assert server.rollback("edge_cnn") and server.rollback("edge_cnn")
+    assert not server.rollback("edge_cnn")     # ring depth 2: history spent
+    s = server.stats("edge_cnn")
+    assert s["rollbacks"] == 2 and s["generation"] == 6
+
+
+# ---------------------------------------------------------------------------
+# Poisoned measurement rig (SimulatedPlatform profile hook)
+# ---------------------------------------------------------------------------
+
+def test_simulated_platform_profile_faults():
+    inj = FaultInjector([
+        Fault("corrupt", net="profile:arm", factor=100.0, first=0, last=1),
+        Fault("raise", net="profile:arm", first=1, last=2)])
+    from repro.profiler import pools
+    clean = SimulatedPlatform("arm", noisy=False)
+    poisoned = SimulatedPlatform("arm", noisy=False, faults=inj)
+    cfgs = np.asarray(pools.config_pool()[:3])
+    np.testing.assert_allclose(poisoned.profile(cfgs),
+                               clean.profile(cfgs) * 100.0, rtol=1e-12)
+    with pytest.raises(FaultError):
+        poisoned.profile(cfgs)                 # the rig itself fails
+    assert np.isfinite(poisoned.profile_dlt(
+        np.asarray([[16, 32]]))).any()         # index 2: plan exhausted
+
+
+# ---------------------------------------------------------------------------
+# Chaos soak: raise + hang + slowdown on one backend of a routed pair
+# ---------------------------------------------------------------------------
+
+def test_chaos_soak_availability(spec):
+    """One sustained run against a seeded fault plan poisoning backend a of
+    a two-backend route: 3 dispatches raise (twice each — retry included),
+    the first half-open probe hangs past the execution deadline, the second
+    stalls past it after running; the third probe is clean and closes the
+    breaker. Asserts the availability contract: zero lost tickets, zero
+    duplicated tickets (exact accounting identity), 100% of accepted tickets
+    served (primary, spill, or degraded fallback — the ≥99% CI gate with no
+    slack needed), breaker opened and recovered via probing, hung workers
+    replaced and their zombies drained."""
+    from repro.primitives.executor import make_weights
+    weights = make_weights(spec)
+    imgs = _requests(spec, 4, seed=42)
+
+    # warm the global plan cache so healthy dispatches never pay jit compile
+    # against the execution deadline
+    warm = OptimisedServer(max_batch=4)
+    warm.register(_net(spec), weights=weights)
+    for b in (1, 2, 4):
+        warm.serve("edge_cnn", imgs[:b])
+
+    inj = FaultInjector([
+        Fault("raise", net="edge_cnn#a", first=0, last=6),
+        Fault("hang", net="edge_cnn#a", first=6, last=7, seconds=0.75),
+        Fault("slowdown", net="edge_cnn#a", first=7, last=8, seconds=0.3),
+    ])
+    server = OptimisedServer(
+        max_batch=4, workers=2, max_wait_ms=0.0, queue_depth=10_000,
+        exec_deadline_ms=60.0, breaker_failures=3, breaker_cooldown_ms=120.0,
+        faults=inj)
+    # a predicts far cheaper: preferred whenever its breaker allows, so the
+    # fault schedule is hit deterministically; b is the healthy spill target
+    server.register(_net(spec, predicted=1e-6), weights=weights, backend="a")
+    server.register(_net(spec, predicted=1e-3), weights=weights, backend="b")
+
+    tickets = []
+    try:
+        # closed-loop bursts until backend a's breaker has tripped AND
+        # recovered through a successful probe (bounded by wall-clock)
+        deadline = time.time() + 90.0
+        while time.time() < deadline:
+            burst = [server.submit("edge_cnn", imgs[len(tickets) % 4])
+                     for _ in range(2)]
+            tickets.extend(burst)
+            for t in burst:
+                assert t.wait(30.0), "lost ticket: never finished"
+            br = server.stats("edge_cnn")["backends"]["a"]["breaker"]
+            if br["closes"] >= 1 and br["state"] == "closed":
+                break
+            time.sleep(0.01)
+        for _ in range(5):                     # post-recovery clean traffic
+            burst = [server.submit("edge_cnn", imgs[len(tickets) % 4])
+                     for _ in range(2)]
+            tickets.extend(burst)
+            for t in burst:
+                assert t.wait(30.0)
+    finally:
+        server.stop(timeout=60.0)
+
+    # -- the full injected fault schedule actually ran ---------------------
+    kinds = {k for (_net_, _g, _i, k) in inj.injected}
+    assert kinds == {"raise", "hang", "slowdown"}, inj.injected
+
+    # -- zero lost tickets -------------------------------------------------
+    assert tickets and all(t.done for t in tickets)
+    assert not any(t.rejected for t in tickets)
+    failed = [t for t in tickets if t.error is not None]
+    served = [t for t in tickets if t.result is not None]
+    assert len(failed) + len(served) == len(tickets)
+
+    # -- availability: ≥99% of accepted tickets served ---------------------
+    availability = len(served) / len(tickets)
+    assert availability >= 0.99, f"availability {availability:.4f}"
+    assert not failed                          # fallback rescued everything
+
+    # -- zero duplicated tickets: exact accounting identity ----------------
+    s = server.stats("edge_cnn")
+    assert s["images"] + s["fallback_images"] == len(served)
+    assert s["failed_tickets"] == len(failed)
+
+    # -- breaker opened, spilled, and recovered via half-open probes -------
+    ba = s["backends"]["a"]["breaker"]
+    assert ba["opens"] >= 2 and ba["closes"] >= 1    # trip + failed probes,
+    assert ba["state"] == "closed"                   # then a clean probe
+    assert s["backends"]["b"]["images"] > 0          # spill served traffic
+    assert s["backends"]["a"]["images"] > 0          # a recovered and served
+    led = s["backends"]["a"]["failures"]
+    assert led.get("fault", 0) >= 3 and led.get("deadline", 0) >= 2
+
+    # -- hung workers were replaced; zombies drained -----------------------
+    assert server._pool.restarts >= 2
+    _wait_for(lambda: server._pool.zombies == 0, timeout=60.0,
+              what="soak zombies to drain")
+    # no spurious generation churn: both backends still on generation 0
+    assert all(b["generation"] == 0 and b["rollbacks"] == 0
+               for b in s["backends"].values())
+
+
+# ---------------------------------------------------------------------------
+# The safe plan itself
+# ---------------------------------------------------------------------------
+
+def test_safe_assignment_uses_reference_primitives_only(spec):
+    from repro.models.cnn_zoo import ConvLayer
+    asg = safe_assignment(spec)
+    for i, node in enumerate(spec.nodes):
+        if isinstance(node, ConvLayer):
+            assert asg[i] == ("conv-1x1-gemm-ab-ki" if node.f == 1
+                              else "direct-sum2d")
+        else:
+            assert asg[i] == "chw"
