@@ -170,6 +170,25 @@ class PerfModel:
             yt = mlp_apply(self.params, xt)
         return self.out_norm.inverse(np.asarray(yt))
 
+    def predict_per_image(self, feats: np.ndarray,
+                          column: Optional[str] = None, *,
+                          bucket: Optional[int] = None,
+                          head: Optional["BucketScaleHead"] = None) -> np.ndarray:
+        """Per-image predicted seconds for (config, primitive) pairs, made
+        batch-shape-aware: ``head`` is a :class:`BucketScaleHead` fitted from
+        served traffic and ``bucket`` the dispatch's pow2 batch bucket — the
+        base prediction is multiplied by the head's relative scale at that
+        bucket. Without a head (or bucket) this is the plain linear
+        per-image prediction. ``column`` selects one primitive; otherwise
+        all ``n_outputs`` columns are returned."""
+        pred = self.predict(feats)
+        if column is not None:
+            j = list(self.columns).index(column)
+            pred = pred[:, j]
+        if head is not None and bucket is not None:
+            pred = pred * head.scale(bucket)
+        return pred
+
     def mdrae(self, feats: np.ndarray, runtimes: np.ndarray) -> float:
         return mdrae(self.predict(feats), runtimes)
 
@@ -489,3 +508,75 @@ class FactorCorrectedModel(PerfModel):
 
     def predict(self, feats: np.ndarray) -> np.ndarray:
         return self.base.predict(feats) * np.exp(self.log_factor)[None, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketScaleHead:
+    """Per-pow2-bucket scale head: the batch-shape correction on top of a
+    per-image perf model (DESIGN.md §12.3).
+
+    The base models predict per-image cost as batch-size-invariant, but the
+    pow2-bucketed serving reality is not linear: fixed dispatch overhead
+    amortises with batch size and pad rows inflate small partial batches.
+    The head captures that *shape* as a log-space multiplier per observed
+    bucket, fitted from the served-traffic buffer (``DriftMonitor`` keys
+    ``ServedObservation`` by bucket). It is normalised so the count-weighted
+    mean log scale is zero — common drift (the whole platform getting
+    slower) stays the drift EWMA's job; the head only redistributes cost
+    across batch shapes. Unseen buckets interpolate linearly in log2(bucket)
+    space and clamp at the observed ends."""
+
+    log2_buckets: np.ndarray       # (B,) sorted log2 of observed pow2 buckets
+    log_scale: np.ndarray          # (B,) log multiplier per bucket
+
+    def __post_init__(self):
+        lb = np.asarray(self.log2_buckets, np.float64)
+        ls = np.asarray(self.log_scale, np.float64)
+        if lb.shape != ls.shape or lb.ndim != 1 or lb.size == 0:
+            raise ValueError(f"bucket/scale shape mismatch: {lb.shape} vs "
+                             f"{ls.shape}")
+        if not (np.isfinite(lb).all() and np.isfinite(ls).all()):
+            raise ValueError("non-finite bucket scale head")
+        if np.any(np.diff(lb) <= 0):
+            raise ValueError("buckets must be strictly increasing")
+        object.__setattr__(self, "log2_buckets", lb)
+        object.__setattr__(self, "log_scale", ls)
+
+    def scale(self, bucket: int) -> float:
+        """Relative per-image cost multiplier at pow2 ``bucket`` (1.0 means
+        'costs exactly the across-bucket mean')."""
+        x = np.log2(max(int(bucket), 1))
+        return float(np.exp(np.interp(x, self.log2_buckets, self.log_scale)))
+
+    def buckets(self) -> list:
+        return [int(b) for b in np.round(2.0 ** self.log2_buckets)]
+
+    @classmethod
+    def fit(cls, observations, *, alpha: float = 0.5,
+            normalize: bool = True,
+            min_obs: int = 1) -> Optional["BucketScaleHead"]:
+        """Fit from ``(bucket, log_ratio)`` pairs, oldest → newest — exactly
+        the served-traffic buffer's shape, where ``log_ratio`` is
+        log(observed / predicted) per-image for one cleanly-timed dispatch.
+        Per bucket an exponentially-weighted mean (fresh entries dominate);
+        buckets with fewer than ``min_obs`` entries are dropped as noise.
+        ``normalize`` subtracts the count-weighted mean so the head carries
+        shape only. None when nothing (finite) was observed."""
+        ew: Dict[int, float] = {}
+        counts: Dict[int, int] = {}
+        for bucket, log_r in observations:
+            b = int(bucket)
+            r = float(log_r)
+            if b < 1 or not np.isfinite(r):
+                continue
+            ew[b] = r if b not in ew else ew[b] + alpha * (r - ew[b])
+            counts[b] = counts.get(b, 0) + 1
+        kept = sorted(b for b in ew if counts[b] >= max(int(min_obs), 1))
+        if not kept:
+            return None
+        vals = np.asarray([ew[b] for b in kept], np.float64)
+        if normalize:
+            w = np.asarray([counts[b] for b in kept], np.float64)
+            vals = vals - float(np.average(vals, weights=w))
+        return cls(log2_buckets=np.log2(np.asarray(kept, np.float64)),
+                   log_scale=vals)

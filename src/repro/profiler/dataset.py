@@ -106,7 +106,8 @@ def observations_to_dataset(feats: np.ndarray,
                             columns: Sequence[str],
                             platform: str,
                             feature_names: Sequence[str] = ("k", "c", "im",
-                                                            "s", "f")) -> PerfDataset:
+                                                            "s", "f"),
+                            info: Optional[Dict] = None) -> PerfDataset:
     """Fold served-dispatch attributions into a ``PerfDataset`` the
     calibration path can consume (DESIGN.md §8.5).
 
@@ -122,6 +123,12 @@ def observations_to_dataset(feats: np.ndarray,
     The output is deterministic for deterministic input: rows are ordered by
     (bucket, config), so the same buffer snapshot always fingerprints — and
     ``save``/``load`` round-trips — byte-identically.
+
+    ``info`` (the attribution summary: dispatches, per-bucket counts and
+    drift) is attached as ``served_info`` so downstream consumers —
+    ``platforms.compose_sample`` and the recalibration report — can surface
+    the batch-shape mix the served sample was drawn from. It is metadata
+    only: ``save``/``load`` does not persist it.
     """
     feats = np.asarray(feats, np.float64)
     assigned = list(assigned)
@@ -153,8 +160,11 @@ def observations_to_dataset(feats: np.ndarray,
             out_times.append(rows[key])
     if not out_feats:
         raise ValueError("no observations to convert")
-    return PerfDataset(np.stack(out_feats), np.stack(out_times),
-                       columns, list(feature_names), platform)
+    ds = PerfDataset(np.stack(out_feats), np.stack(out_times),
+                     columns, list(feature_names), platform)
+    if info is not None:
+        ds.served_info = dict(info)
+    return ds
 
 
 def simulate_primitive_dataset(platform: str,

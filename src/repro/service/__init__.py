@@ -17,21 +17,23 @@ from repro.service.pipeline import (OptimisedNetwork, optimise, reoptimise,
 from repro.service.platforms import (HostPlatform, PallasPlatform, Platform,
                                      PlatformModels, SimulatedPlatform,
                                      get_platform, host_machine_id)
-from repro.service.serving import (CircuitBreaker, CorruptOutput,
-                                   DriftMonitor, DriftStats, Fault,
-                                   FaultError, FaultInjector, LayerProfile,
-                                   NetQueue, OptimisedServer,
-                                   ServedObservation, Ticket, WorkerPool,
+from repro.service.serving import (BatchGroup, CircuitBreaker,
+                                   CorruptOutput, DriftMonitor, DriftStats,
+                                   Fault, FaultError, FaultInjector,
+                                   LayerProfile, NetQueue, OptimisedServer,
+                                   ProcessFrontend, ServedObservation,
+                                   SlabHandle, SlabPool, Ticket, WorkerPool,
                                    layer_profile, make_recalibrator)
 
 __all__ = [
     "ArtifactStore", "digest",
-    "CircuitBreaker", "CorruptOutput",
+    "BatchGroup", "CircuitBreaker", "CorruptOutput",
     "DriftMonitor", "DriftStats", "Fault", "FaultError", "FaultInjector",
     "HostPlatform", "LayerProfile", "NetQueue",
     "OptimisedNetwork", "OptimisedServer", "PallasPlatform", "Platform",
-    "PlatformModels",
-    "ServedObservation", "SimulatedPlatform", "Ticket", "WorkerPool",
+    "PlatformModels", "ProcessFrontend",
+    "ServedObservation", "SimulatedPlatform", "SlabHandle", "SlabPool",
+    "Ticket", "WorkerPool",
     "get_platform", "host_machine_id", "layer_profile", "make_recalibrator",
     "optimise", "reoptimise", "safe_assignment",
 ]

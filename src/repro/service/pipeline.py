@@ -40,6 +40,19 @@ class OptimisedNetwork:
     def warm(self) -> bool:
         return self.warm_models and self.warm_selection
 
+    def predict_per_image(self, bucket: Optional[int] = None,
+                          head=None) -> float:
+        """Model-predicted per-image runtime, optionally conditioned on the
+        pow2 batch ``bucket`` through a fitted
+        :class:`~repro.core.perfmodel.BucketScaleHead` (DESIGN.md §12.3).
+        Without a head (or bucket) this is ``predicted_cost_s`` — the
+        batch-size-invariant prediction the PBQP optimised for."""
+        import math
+        cost = self.predicted_cost_s
+        if head is not None and bucket is not None and math.isfinite(cost):
+            cost *= head.scale(bucket)
+        return cost
+
     @classmethod
     def from_assignment(cls, spec: CNNSpec, assignment: Dict[int, str], *,
                         net: Optional[str] = None,

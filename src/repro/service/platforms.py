@@ -347,6 +347,12 @@ class Platform(abc.ABC):
         info = {"served_rows": int(served.n), "fresh_rows": int(fresh_rows),
                 "served_fraction": served.n / total,
                 "covered_configs": len(covered), "requested_n": int(n)}
+        # surface the batch-shape mix the served rows came from (attached by
+        # observations_to_dataset): recalibration reports can then show which
+        # pow2 buckets — and how much per-bucket drift — fed the sample
+        served_info = getattr(served, "served_info", None)
+        if served_info:
+            info["served"] = dict(served_info)
         return sample, info
 
     def invalidate_datasets(self) -> None:

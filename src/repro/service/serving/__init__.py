@@ -14,15 +14,18 @@ observe → recalibrate loop.
 from repro.service.serving.drift import (DriftMonitor, DriftStats,
                                          LayerProfile, ServedObservation)
 from repro.service.serving.faults import Fault, FaultError, FaultInjector
+from repro.service.serving.frontend import (ProcessFrontend, SlabHandle,
+                                            SlabPool)
 from repro.service.serving.health import CircuitBreaker, CorruptOutput
-from repro.service.serving.queues import NetQueue, Ticket
+from repro.service.serving.queues import BatchGroup, NetQueue, Ticket
 from repro.service.serving.server import (OptimisedServer, layer_profile,
                                           main, make_recalibrator)
 from repro.service.serving.workers import WorkerPool
 
 __all__ = [
-    "CircuitBreaker", "CorruptOutput", "DriftMonitor", "DriftStats",
-    "Fault", "FaultError", "FaultInjector", "LayerProfile", "NetQueue",
-    "OptimisedServer", "ServedObservation", "Ticket", "WorkerPool",
+    "BatchGroup", "CircuitBreaker", "CorruptOutput", "DriftMonitor",
+    "DriftStats", "Fault", "FaultError", "FaultInjector", "LayerProfile",
+    "NetQueue", "OptimisedServer", "ProcessFrontend", "ServedObservation",
+    "SlabHandle", "SlabPool", "Ticket", "WorkerPool",
     "layer_profile", "main", "make_recalibrator",
 ]

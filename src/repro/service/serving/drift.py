@@ -215,6 +215,34 @@ class DriftMonitor:
             s = self._stats.get(net)
             return list(s.buffer) if s is not None else []
 
+    def _ew_by_bucket(self, entries: Sequence[ServedObservation]
+                      ) -> Tuple[Dict[int, float], Dict[int, int]]:
+        """Exponentially-weighted mean log-ratio and count per pow2 bucket,
+        oldest → newest (the EW mean converges onto the most recent
+        observations) — shared by ``attributed`` and ``bucket_head``."""
+        by_bucket: Dict[int, float] = {}
+        counts: Dict[int, int] = {}
+        for e in entries:
+            if e.batch in by_bucket:
+                by_bucket[e.batch] += self.obs_alpha * (e.log_r
+                                                        - by_bucket[e.batch])
+            else:
+                by_bucket[e.batch] = e.log_r
+            counts[e.batch] = counts.get(e.batch, 0) + 1
+        return by_bucket, counts
+
+    def bucket_head(self, net: str, *, min_obs: int = 1):
+        """Fit a :class:`~repro.core.perfmodel.BucketScaleHead` from the
+        buffered served observations — the batch-shape correction the server
+        threads through batch caps, deadline windows, router scores, and the
+        canary gate (DESIGN.md §12.3). None when nothing is buffered."""
+        from repro.core.perfmodel import BucketScaleHead
+        with self._lock:
+            s = self._stats.get(net)
+            entries = list(s.buffer) if s is not None else []
+        return BucketScaleHead.fit(((e.batch, e.log_r) for e in entries),
+                                   alpha=self.obs_alpha, min_obs=min_obs)
+
     def coverage(self, net: str) -> int:
         """Distinct layer configs the buffer covers — every buffered dispatch
         timed the whole plan, so one clean dispatch covers every assigned
@@ -225,10 +253,11 @@ class DriftMonitor:
                 return 0
             return len({tuple(map(float, row)) for row in s.layers.feats})
 
-    def attributed(self, net: str) -> Optional[Tuple[np.ndarray,
-                                                     Tuple[str, ...],
-                                                     List[Tuple[int, np.ndarray]],
-                                                     Dict]]:
+    def attributed(self, net: str, *, min_obs: int = 1
+                   ) -> Optional[Tuple[np.ndarray,
+                                       Tuple[str, ...],
+                                       List[Tuple[int, np.ndarray]],
+                                       Dict]]:
         """Attribute the buffered whole-plan timings to per-layer configs.
 
         Returns ``(feats, columns, [(bucket, times), ...], info)`` — for each
@@ -236,8 +265,12 @@ class DriftMonitor:
         ``predicted * exp(δ_bucket)`` where δ is the exponentially-weighted
         mean of the bucket's buffered log-ratios minus the calibration
         reference (newest observations dominate, so a buffer holding
-        pre-drift history still yields a post-drift sample). None when the
-        buffer is empty or the network has no attribution profile.
+        pre-drift history still yields a post-drift sample). Buckets with
+        fewer than ``min_obs`` buffered dispatches are dropped from the
+        sample rows (a lone noisy dispatch should not mint calibration
+        rows) but still counted in ``info``. None when the buffer is empty,
+        the network has no attribution profile, or no bucket clears
+        ``min_obs``.
         """
         with self._lock:
             s = self._stats.get(net)
@@ -245,16 +278,13 @@ class DriftMonitor:
                 return None
             entries = list(s.buffer)
             layers, ref = s.layers, s.ref_log
-        by_bucket: Dict[int, float] = {}
-        counts: Dict[int, int] = {}
-        for e in entries:              # oldest -> newest: EW mean converges
-            if e.batch in by_bucket:   # onto the most recent observations
-                by_bucket[e.batch] += self.obs_alpha * (e.log_r - by_bucket[e.batch])
-            else:
-                by_bucket[e.batch] = e.log_r
-            counts[e.batch] = counts.get(e.batch, 0) + 1
+        by_bucket, counts = self._ew_by_bucket(entries)
+        kept = sorted(b for b in by_bucket
+                      if counts[b] >= max(int(min_obs), 1))
+        if not kept:
+            return None
         rows = [(b, layers.predicted * math.exp(by_bucket[b] - ref))
-                for b in sorted(by_bucket)]
+                for b in kept]
         info = {"dispatches": len(entries),
                 "buckets": {int(b): int(counts[b]) for b in sorted(counts)},
                 "images": int(sum(e.batch for e in entries)),

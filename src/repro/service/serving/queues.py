@@ -36,7 +36,7 @@ import math
 import threading
 import time
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,8 +63,11 @@ class Ticket:
     dispatch marks its tickets instead of losing them."""
 
     net: str
-    x: np.ndarray                      # (c, im, im)
+    x: np.ndarray                      # (c, im, im) — for slab-backed
+    # tickets this is a zero-copy row view into a shared-memory slab
     result: Optional[np.ndarray] = None
+    slab: Optional[object] = None      # SlabHandle provenance (frontend.py)
+    row: int = -1                      # row index inside the slab, -1 = none
     done: bool = False
     error: Optional[str] = None
     rejected: bool = False             # refused at submit (backpressure)
@@ -111,13 +114,30 @@ class Ticket:
         return True
 
 
+@dataclasses.dataclass
+class BatchGroup:
+    """A pre-assembled dispatch from the process front end (DESIGN.md §12):
+    tickets whose payload rows already live contiguously — and pow2-padded —
+    in one shared-memory slab. ``xs`` is the zero-copy padded batch view the
+    worker executes directly (no ``np.stack``, no pad concat in the serving
+    process); ``on_done(tickets, out)`` fires exactly once when the dispatch
+    settles (delivered, degraded, failed, or rejected) so the front end can
+    ship results back and recycle the slab."""
+
+    tickets: List[Ticket]
+    xs: np.ndarray                     # (pow2 bucket, c, im, im) padded view
+    on_done: Optional[Callable[[List[Ticket],
+                                Optional[np.ndarray]], None]] = None
+
+
 class NetQueue:
     """Bounded FIFO + deadline-aware batch window for one network. All
     methods must be called under the serving core's lock."""
 
     def __init__(self, *, depth: int, batch_cap: int, max_wait_s: float,
                  budget_s: Optional[float] = None,
-                 predicted_s: float = 0.0):
+                 predicted_s: float = 0.0,
+                 bucket_scale: Optional[Callable[[int], float]] = None):
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
         self.depth = depth
@@ -128,11 +148,15 @@ class NetQueue:
         # the static max_wait, scaled by window_scale)
         self.budget_s = budget_s
         self.predicted_s = predicted_s
+        # batch-shape correction (BucketScaleHead.scale): per-image cost as
+        # a function of the pending batch's pow2 bucket. None = linear.
+        self.bucket_scale = bucket_scale
         self.window_scale = 1.0        # shrunk/restored by the drift monitor
         self._q: Deque[Ticket] = deque()
+        self._groups: Deque[BatchGroup] = deque()
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._q) + sum(len(g.tickets) for g in self._groups)
 
     def effective_wait_s(self) -> float:
         """Current batch window: ``max_wait`` capped by the latency budget
@@ -141,33 +165,64 @@ class NetQueue:
         *capped* window — when observed waits blow the budget anyway
         (optimistic predictions, claim contention), the monitor's shrink
         must bite below the deadline cap too, not just below ``max_wait``.
-        Never negative — a pending batch whose predicted execution alone
-        exceeds the budget dispatches immediately (waiting cannot help
-        it)."""
+        The predicted execution is batch-shape-aware when a ``bucket_scale``
+        head is fitted: per-image cost is scaled for the pending bucket
+        instead of assumed batch-size-invariant. Never negative — a pending
+        batch whose predicted execution alone exceeds the budget dispatches
+        immediately (waiting cannot help it)."""
         w = self.max_wait_s
         if (self.budget_s is not None and math.isfinite(self.budget_s)
                 and self.predicted_s > 0.0
                 and math.isfinite(self.predicted_s)):
             b = pow2_ceil(len(self._q)) if self._q else 1
-            w = min(w, self.budget_s - self.predicted_s * b)
+            per = self.predicted_s
+            if self.bucket_scale is not None:
+                per *= float(self.bucket_scale(b))
+            w = min(w, self.budget_s - per * b)
         return max(w, 0.0) * self.window_scale
 
     def backlog_images(self, inflight: int = 0) -> int:
         """Queued images plus an in-flight allowance (``inflight`` batches
         at ``batch_cap`` each) — the cross-backend router's load proxy
         (DESIGN.md §9: predicted per-image cost × backlog)."""
-        return len(self._q) + inflight * self.batch_cap
+        return len(self) + inflight * self.batch_cap
 
     def push(self, t: Ticket) -> bool:
         """Enqueue; False when the queue is at depth (backpressure)."""
-        if len(self._q) >= self.depth:
+        if len(self) >= self.depth:
             return False
         self._q.append(t)
         return True
 
+    def push_group(self, g: BatchGroup) -> bool:
+        """Enqueue a pre-assembled slab batch; False when the group would
+        push the queue past depth (backpressure, same bound as ``push``)."""
+        if len(self) + len(g.tickets) > self.depth:
+            return False
+        self._groups.append(g)
+        return True
+
+    def group_ready(self) -> bool:
+        return bool(self._groups)
+
+    def take_group(self) -> BatchGroup:
+        """Pop the oldest pre-assembled batch (caller checked group_ready)."""
+        return self._groups.popleft()
+
+    def drain(self) -> Tuple[List[Ticket], List[BatchGroup]]:
+        """Empty the queue entirely: loose tickets and pre-assembled groups
+        (re-register / unregister — nothing may be stranded queued)."""
+        tickets, groups = list(self._q), list(self._groups)
+        self._q.clear()
+        self._groups.clear()
+        return tickets, groups
+
     def ready(self, now: float, *, drain: bool = False) -> bool:
-        """Should a batch dispatch now? Full batch, expired window, or an
-        explicit drain (synchronous pump / shutdown)."""
+        """Should a batch dispatch now? A pre-assembled group (its window
+        already ran in the intake process), full batch, expired window, or
+        an explicit drain (synchronous pump / shutdown)."""
+        if self._groups:
+            return True
         if not self._q:
             return False
         if drain or len(self._q) >= self.batch_cap:
@@ -176,13 +231,17 @@ class NetQueue:
 
     def next_deadline(self) -> Optional[float]:
         """Clock time at which the oldest ticket's window expires (the
-        worker-pool wait bound); None when empty."""
+        worker-pool wait bound); None when empty. A pending group is ready
+        immediately."""
+        if self._groups:
+            return self._groups[0].tickets[0].submitted_s
         if not self._q:
             return None
         return self._q[0].submitted_s + self.effective_wait_s()
 
     def take(self, n: int) -> List[Ticket]:
-        """Pop up to ``n`` tickets in FIFO order."""
+        """Pop up to ``n`` loose tickets in FIFO order (groups dispatch
+        whole, via ``take_group``)."""
         out = []
         while self._q and len(out) < n:
             out.append(self._q.popleft())

@@ -71,9 +71,14 @@ from repro.service.serving.drift import DriftMonitor, LayerProfile
 from repro.service.serving.faults import (FaultInjector, classify,
                                           validate_output)
 from repro.service.serving.health import (CircuitBreaker, merge_failures)
-from repro.service.serving.queues import (NetQueue, Ticket, monotonic,
-                                          pow2_ceil, pow2_floor)
+from repro.service.serving.queues import (BatchGroup, NetQueue, Ticket,
+                                          monotonic, pow2_ceil, pow2_floor)
 from repro.service.serving.workers import WorkerPool
+
+# batch-shape cost model (DESIGN.md §12.3): fit the per-bucket scale head
+# once this many clean observations are buffered, refit every this many more
+BUCKET_MIN_OBS = 8
+BUCKET_REFRESH_EVERY = 8
 
 
 def layer_profile(opt: OptimisedNetwork) -> Optional[LayerProfile]:
@@ -128,6 +133,10 @@ class _Batch:
     weights: Dict
     claimed_s: float = 0.0
     settled: bool = False              # mutated only under the server lock
+    # pre-assembled slab dispatch (DESIGN.md §12): the pow2-padded zero-copy
+    # batch view (skips np.stack/pad) and the front end's settle callback
+    xs: Optional[np.ndarray] = None
+    on_done: Optional[Callable] = None
 
 
 @dataclasses.dataclass
@@ -165,6 +174,11 @@ class _NetState:
     # consecutive primary failures since this generation went live; -1 once
     # it has ANY success (a proven generation is never auto-rolled-back)
     gen_bad_streak: int = 0
+    # batch-shape cost model (DESIGN.md §12.3): per-bucket scale head fitted
+    # from this backend's served-traffic buffer, refit every
+    # BUCKET_REFRESH_EVERY clean observations
+    bucket_head: Optional[object] = None
+    bucket_obs_at_fit: int = 0
     # (generation, batch_bucket) -> completion time of the FIRST execution:
     # any dispatch that STARTED before that instant may have paid (or waited
     # on) jit compile and must not feed the drift EWMA — this also covers
@@ -209,6 +223,9 @@ class OptimisedServer:
                  breaker_cooldown_ms: float = 250.0,
                  breaker_probes: int = 1,
                  faults: Optional[FaultInjector] = None,
+                 bucket_cost_model: bool = True,
+                 frontend_procs: int = 0,
+                 frontend_slots: int = 16,
                  clock: Optional[Callable[[], float]] = None):
         """Fault-tolerance knobs (DESIGN.md §11): ``exec_deadline_ms`` is the
         per-dispatch execution deadline the worker supervisor enforces (None
@@ -220,7 +237,16 @@ class OptimisedServer:
         revert it (0 disables); ``rollback_history`` bounds the per-net undo
         ring; ``breaker_*`` configure the per-backend circuit breakers the
         multi-backend router consults; ``faults`` injects a deterministic
-        fault plan into every plan execution (tests/chaos drills)."""
+        fault plan into every plan execution (tests/chaos drills).
+
+        ``bucket_cost_model`` (DESIGN.md §12.3) fits a per-pow2-bucket scale
+        head from each backend's served-traffic buffer and threads it
+        through batch caps, deadline windows, router scores, and the canary
+        gate — predicted per-image cost becomes a function of batch shape
+        instead of assumed linear. ``frontend_procs`` > 0 enables the
+        process front end (``frontend()``): intake processes assemble
+        request batches in shared-memory slabs and hand them to the worker
+        pool by reference (requires ``workers`` >= 1)."""
         self.max_batch = max_batch
         self.latency_budget_ms = latency_budget_ms
         self.max_wait_ms = max_wait_ms
@@ -257,6 +283,15 @@ class OptimisedServer:
         self._recal_served = _accepts_served(recalibrate)
         self._recal_threads: List[threading.Thread] = []
         self._pool = WorkerPool(self, workers) if workers > 0 else None
+        self.bucket_cost_model = bool(bucket_cost_model)
+        if frontend_procs > 0 and workers < 1:
+            raise ValueError(
+                "frontend_procs requires workers >= 1: intake processes "
+                "feed pre-assembled batches to the worker pool; pump mode "
+                "has no concurrent consumer")
+        self.frontend_procs = int(frontend_procs)
+        self.frontend_slots = int(frontend_slots)
+        self._frontend = None
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "OptimisedServer":
@@ -264,8 +299,35 @@ class OptimisedServer:
             self._pool.start()
         return self
 
+    def frontend(self, procs: Optional[int] = None, *,
+                 slots: Optional[int] = None):
+        """The process front end (DESIGN.md §12), created and started on
+        first use — intake processes assembling request batches in
+        shared-memory slabs. Register every network first: the front end
+        sizes its slab pools from the registered image shapes and batch
+        caps."""
+        if self._frontend is None:
+            from repro.service.serving.frontend import ProcessFrontend
+            n = procs if procs is not None else self.frontend_procs
+            if n < 1:
+                raise ValueError("frontend requires procs >= 1 (pass procs= "
+                                 "or construct with frontend_procs=)")
+            if self._pool is None:
+                raise ValueError(
+                    "the process front end requires workers >= 1: intake "
+                    "processes feed pre-assembled batches to the worker "
+                    "pool; pump mode has no concurrent consumer")
+            self._frontend = ProcessFrontend(
+                self, n,
+                slots=slots if slots is not None else self.frontend_slots)
+            self._frontend.start()
+        return self._frontend
+
     def stop(self, timeout: float = 10.0) -> None:
         """Drain queued tickets, stop workers, join pending recalibrations."""
+        if self._frontend is not None:
+            self._frontend.stop(timeout)
+            self._frontend = None
         if self._pool is not None:
             self._pool.stop(timeout)
         with self._cond:
@@ -299,6 +361,57 @@ class OptimisedServer:
             return pow2_floor(self.max_batch)
         cap = int(np.clip(budget_s / predicted_cost_s, 1, self.max_batch))
         return pow2_floor(cap)
+
+    def _bucket_batch_cap_locked(self, state: "_NetState") -> int:
+        """Batch-shape-aware batch cap (DESIGN.md §12.3): the largest pow2
+        bucket whose *bucket-scaled* predicted execution fits the backend's
+        latency budget — ``pred × scale(b) × b <= budget``. Falls back to
+        the linear ``_batch_cap`` until a head is fitted."""
+        pred = state.queue.predicted_s
+        head = state.bucket_head if self.bucket_cost_model else None
+        if head is None or not (np.isfinite(pred) and pred > 0):
+            return self._batch_cap(pred if pred > 0
+                                   else state.opt.predicted_cost_s,
+                                   state.latency_budget_ms)
+        budget_s = self._budget_s(state.latency_budget_ms)
+        cap, b = 1, 1
+        top = pow2_floor(self.max_batch)
+        while b <= top:
+            if pred * head.scale(b) * b <= budget_s:
+                cap = b
+            b *= 2
+        return cap
+
+    def _per_image_locked(self, state: "_NetState",
+                          bucket: Optional[int] = None, *,
+                          observed_first: bool = False) -> float:
+        """Predicted per-image cost of this backend, optionally conditioned
+        on the pow2 ``bucket`` through the fitted scale head. The head is
+        mean-normalised over served buckets, so it composes with either base
+        (observed mean or model prediction) as a pure shape correction.
+        0.0 when no usable base exists (modelless entry, nothing served)."""
+        per = 0.0
+        if observed_first and state.images:
+            per = state.busy_s / state.images
+        if not (np.isfinite(per) and per > 0):
+            per = state.queue.predicted_s
+        if not (np.isfinite(per) and per > 0) and state.images:
+            per = state.busy_s / state.images
+        if not (np.isfinite(per) and per > 0):
+            return 0.0
+        head = state.bucket_head if self.bucket_cost_model else None
+        if head is not None and bucket is not None:
+            per *= head.scale(bucket)
+        return per
+
+    def predict_per_image(self, net: str,
+                          bucket: Optional[int] = None) -> float:
+        """Model-predicted per-image cost for ``net`` (a state key or an
+        unambiguous logical name), batch-shape-conditioned when ``bucket``
+        is given and a scale head has been fitted from served traffic."""
+        with self._cond:
+            key = self._resolve_key_locked(net)
+            return self._per_image_locked(self._nets[key], bucket)
 
     def register(self, opt: OptimisedNetwork, *, backend: Optional[str] = None,
                  weights: Optional[Dict] = None,
@@ -354,13 +467,17 @@ class OptimisedServer:
                 # and must not reuse its generation numbers — stale drift
                 # observations and pending recalibration hot_swaps carry the
                 # old generation and would otherwise pass the CAS checks
-                stranded = old.queue.take(len(old.queue))
+                stranded, sgroups = old.queue.drain()
                 state.generation = old.generation + 1
             self._nets[key] = state
         if old is not None:
+            err = f"rejected: {key!r} was re-registered"
             for t in stranded:
-                t.finish(error=f"rejected: {key!r} was re-registered",
-                         rejected=True)
+                t.finish(error=err, rejected=True)
+            for g in sgroups:
+                for t in g.tickets:
+                    t.finish(error=err, rejected=True)
+                self._notify_done(g, None)
         self._drift.reset(key, state.generation,
                           layers=layer_profile(opt))
         self.start()
@@ -384,11 +501,16 @@ class OptimisedServer:
             route = self._routes.get(net)
             if route and key in route:
                 route.remove(key)
-            stranded = state.queue.take(len(state.queue))
+            stranded, sgroups = state.queue.drain()
             self._cond.notify_all()
+        err = (f"rejected: backend {backend!r} of {net!r} "
+               f"was unregistered")
         for t in stranded:
-            t.finish(error=f"rejected: backend {backend!r} of {net!r} "
-                           f"was unregistered", rejected=True)
+            t.finish(error=err, rejected=True)
+        for g in sgroups:
+            for t in g.tickets:
+                t.finish(error=err, rejected=True)
+            self._notify_done(g, None)
         return True
 
     def hot_swap(self, net: str, opt: OptimisedNetwork, *,
@@ -431,8 +553,14 @@ class OptimisedServer:
                 generation = state.generation
             else:
                 before = state.generation
-                baseline = (state.busy_s / state.images if state.images
-                            else state.opt.predicted_cost_s)
+                # the gate compares per-image cost AT THE CANARY BUCKET:
+                # bucket-condition the live baseline the same way the
+                # candidate is measured (§12.3) — a net whose small batches
+                # are intrinsically pricier per image must not read as a
+                # candidate slowdown
+                baseline = self._per_image_locked(
+                    state, pow2_ceil(self.canary_batch),
+                    observed_first=True)
         if not canary:
             self._drift.reset(net, generation, layers=layer_profile(opt))
             return True
@@ -470,6 +598,11 @@ class OptimisedServer:
         state.queue.predicted_s = (pred if np.isfinite(pred) and pred > 0
                                    else 0.0)
         state.queue.window_scale = 1.0     # re-learn under the new model
+        # the scale head was fitted against the OLD model's predictions and
+        # the drift buffer resets with the swap: refit from fresh traffic
+        state.bucket_head = None
+        state.bucket_obs_at_fit = 0
+        state.queue.bucket_scale = None
         state.generation += 1
         state.gen_bad_streak = 0           # unproven: auto-rollback is armed
         # superseded generations' bucket entries are never read again
@@ -484,7 +617,12 @@ class OptimisedServer:
         the jit compile, the second is the timed verdict. Rejects on
         exception, corrupt output, or pathological slowdown vs the live
         generation's observed-or-predicted per-image cost."""
-        b = pow2_ceil(self.canary_batch)
+        # the canary serves `take` real rows padded to the pow2 bucket `b` —
+        # per-image cost divides by the REAL row count: counting pad rows as
+        # served images would optimistically shrink per-image cost whenever
+        # canary_batch isn't a power of two, waving slow candidates through
+        take = self.canary_batch
+        b = pow2_ceil(take)
         n0 = opt.spec.nodes[0]
         rng = np.random.default_rng(generation)    # deterministic inputs
         xs = rng.standard_normal((b, n0.c, n0.im, n0.im)).astype(np.float32)
@@ -495,7 +633,7 @@ class OptimisedServer:
             out = self._run_faulted(key, generation, opt, xs, state.weights)
             t1 = self._clock()
             validate_output(out, b)
-            per_image = (t1 - t0) / b
+            per_image = (t1 - t0) / take
             if (np.isfinite(baseline) and baseline > 0
                     and per_image > self.canary_slowdown * baseline):
                 reason = (f"canary slowdown: {per_image * 1e3:.3f} ms/img vs "
@@ -567,12 +705,20 @@ class OptimisedServer:
         per-image cost (observed when it has served, else the perf model's
         prediction) times its backlog. Cheapest predicted backend wins an
         empty route; under load the score grows with the queue, spilling
-        traffic to slower-but-idle backends (de Prado et al., 2018)."""
-        per_image = (state.busy_s / state.images if state.images
-                     else state.queue.predicted_s)
+        traffic to slower-but-idle backends (de Prado et al., 2018).
+
+        The per-image cost is conditioned on the pow2 bucket the NEXT
+        dispatch would run at (backlog + this request, capped at the batch
+        cap) through the fitted scale head (§12.3) — a backend whose large
+        buckets are super-linear stops looking artificially cheap under
+        load."""
+        backlog = state.queue.backlog_images(state.inflight)
+        bucket = pow2_ceil(max(min(backlog + 1,
+                                   max(state.queue.batch_cap, 1)), 1))
+        per_image = self._per_image_locked(state, bucket,
+                                           observed_first=True)
         if not (np.isfinite(per_image) and per_image > 0):
             per_image = 1e-6           # modelless entry: load-balance only
-        backlog = state.queue.backlog_images(state.inflight)
         return per_image * (backlog + 1)
 
     def submit(self, net: str, x: np.ndarray) -> Ticket:
@@ -630,6 +776,75 @@ class OptimisedServer:
                            f"depth (backpressure)", rejected=True)
         return t
 
+    def _notify_done(self, holder, out: Optional[np.ndarray]) -> None:
+        """Fire a group/batch ``on_done`` exactly once (the executing
+        worker's ``finally``, the supervisor's ``abandon``, and a drain all
+        converge here — the callback swap under the lock picks one winner).
+        ``out`` is the primary plan's padded output when every ticket was
+        served by it, else None (results travel per-ticket)."""
+        with self._cond:
+            cb, holder.on_done = holder.on_done, None
+        if cb is None:
+            return
+        try:
+            cb(holder.tickets, out)
+        except Exception:
+            pass                       # front-end delivery is best-effort
+
+    def _submit_group(self, net: str, xs: np.ndarray, rows: int, *,
+                      handle=None, on_done: Optional[Callable] = None
+                      ) -> BatchGroup:
+        """Enqueue one pre-assembled slab batch from the process front end
+        (DESIGN.md §12.2): ``xs`` is the pow2-padded batch (a zero-copy
+        shared-memory view), ``rows`` of it real. Routing mirrors ``submit``
+        — breaker-gated, cheapest-predicted-first, spilling on backpressure,
+        whole-group — so the fault-tolerance contracts hold unchanged for
+        slab dispatches. When every candidate queue is full the group is
+        rejected whole: tickets finish rejected and ``on_done`` fires so the
+        front end recycles the slab."""
+        now = self._clock()
+        tickets = [Ticket(net=net, x=xs[i], slab=handle, row=i,
+                          submitted_s=now, clock=self._clock)
+                   for i in range(rows)]
+        g = BatchGroup(tickets=tickets, xs=xs, on_done=on_done)
+        err = None
+        with self._cond:
+            try:
+                keys = self._route_keys_locked(net)
+            except KeyError as e:
+                keys, err = [], str(e)
+            granted: List[str] = []
+            if len(keys) > 1:
+                allowed = []
+                for k in keys:
+                    if self._nets[k].breaker.allow(now):
+                        allowed.append(k)
+                        granted.append(k)
+                keys = allowed if allowed else keys
+                keys.sort(key=lambda k:
+                          self._route_score_locked(self._nets[k]))
+            pushed = None
+            for k in keys:
+                for t in tickets:
+                    t.net = k
+                if self._nets[k].queue.push_group(g):
+                    pushed = k
+                    break
+            for k in granted:
+                if k != pushed:
+                    self._nets[k].breaker.cancel_probe()
+            if pushed is not None:
+                self._cond.notify()
+                return g
+            if keys:
+                self._nets[keys[0]].rejected += len(tickets)
+                err = (f"rejected: every backend of {net!r} at queue "
+                       f"depth (backpressure)")
+        for t in tickets:
+            t.finish(error=err, rejected=True)
+        self._notify_done(g, None)
+        return g
+
     # -- scheduling --------------------------------------------------------
     def _claim_locked(self, now: float, *, drain: bool = False) -> Optional[_Batch]:
         """Pop the next dispatchable batch (round-robin across networks),
@@ -642,7 +857,14 @@ class OptimisedServer:
                 continue
             if not state.queue.ready(now, drain=drain):
                 continue
-            tickets = state.queue.take(state.queue.batch_cap)
+            if state.queue.group_ready():
+                # pre-assembled slab batch: dispatch whole, payload already
+                # padded in shared memory (its window ran in the intake)
+                group = state.queue.take_group()
+                tickets, gxs, gdone = group.tickets, group.xs, group.on_done
+            else:
+                tickets = state.queue.take(state.queue.batch_cap)
+                gxs = gdone = None
             state.inflight += 1
             t_claim = self._clock()
             for t in tickets:
@@ -659,33 +881,45 @@ class OptimisedServer:
             return _Batch(net=name, tickets=tickets,
                           generation=state.generation, state=state,
                           opt=state.opt, weights=state.weights,
-                          claimed_s=t_claim)
+                          claimed_s=t_claim, xs=gxs, on_done=gdone)
         return None
 
     def claim_blocking(self, stop_event: threading.Event) -> Optional[_Batch]:
         """Worker-pool entry: block until a batch is dispatchable. During
         shutdown (``stop_event`` set) windows are ignored so queued tickets
         drain; returns None once stopping and every queue is empty."""
+        idle = 0
         with self._cond:
             while True:
                 stopping = stop_event.is_set()
                 batch = self._claim_locked(self._clock(), drain=stopping)
                 if batch is not None:
                     return batch
-                if stopping and not any(len(s.queue)
-                                        for s in self._nets.values()):
-                    return None
                 now = self._clock()
                 deadlines = [s.queue.next_deadline()
                              for s in self._nets.values()
                              if len(s.queue) and s.inflight < s.max_inflight]
                 deadlines = [d for d in deadlines if d is not None]
                 if stopping:
+                    if not any(len(s.queue) for s in self._nets.values()):
+                        return None
                     timeout = 0.01     # draining: re-check promptly
                 elif deadlines:
-                    timeout = max(min(deadlines) - now, 0.0) + 1e-4
+                    gap = min(deadlines) - now
+                    if gap <= 0.0:
+                        # window already expired yet the claim was refused
+                        # (in-flight cap, a competing pump won the race):
+                        # geometric backoff instead of a hot re-poll loop
+                        timeout = min(1e-4 * (1 << min(idle, 7)), 0.01)
+                        idle += 1
+                    else:
+                        idle = 0
+                        timeout = gap + 1e-4
                 else:
-                    timeout = None     # woken by submit/execute/stop
+                    # empty queues: sleep until submit/execute/stop notify —
+                    # an idle server burns no CPU here
+                    idle = 0
+                    timeout = None
                 self._cond.wait(timeout)
 
     # -- execution ---------------------------------------------------------
@@ -825,7 +1059,7 @@ class OptimisedServer:
         state = batch.state
         tickets = batch.tickets
         take = len(tickets)
-        b = pow2_ceil(take)
+        b = batch.xs.shape[0] if batch.xs is not None else pow2_ceil(take)
         err: Optional[str] = None
         kind: Optional[str] = None
         out = None
@@ -833,10 +1067,16 @@ class OptimisedServer:
         t0 = t1 = self._clock()
         try:
             try:
-                xs = np.stack([t.x for t in tickets])
-                if b != take:
-                    pad = np.broadcast_to(xs[-1:], (b - take,) + xs.shape[1:])
-                    xs = np.concatenate([xs, pad])
+                if batch.xs is not None:
+                    # slab dispatch: the batch is already assembled, padded,
+                    # and pow2-bucketed in shared memory — zero copies here
+                    xs = batch.xs
+                else:
+                    xs = np.stack([t.x for t in tickets])
+                    if b != take:
+                        pad = np.broadcast_to(xs[-1:],
+                                              (b - take,) + xs.shape[1:])
+                        xs = np.concatenate([xs, pad])
                 t0 = self._clock()
                 try:
                     out = self._attempt(batch, xs, b)
@@ -875,6 +1115,8 @@ class OptimisedServer:
                         and self._drift.observe(batch.net, batch.generation,
                                                 (t1 - t0) / b, pred, batch=b)):
                     self._schedule_recalibration(batch.net, batch.generation)
+                if clean_timing and self.bucket_cost_model:
+                    self._refresh_bucket_head(batch.net, state)
                 return
             self._drift.record_failure(batch.net, batch.generation,
                                        kind or "error")
@@ -895,6 +1137,10 @@ class OptimisedServer:
             if not abandoned:
                 for t in tickets:
                     t.finish(error=err or "internal serving error")
+                # slab dispatches: tell the front end this batch settled
+                # (every ticket finished above) so it can recycle the slab
+                # and ship results; an abandoned batch's supervisor owns it
+                self._notify_done(batch, out if err is None else None)
 
     def abandon(self, batch: _Batch, reason: str) -> None:
         """Give up on a claim whose worker hung past the execution deadline
@@ -923,25 +1169,53 @@ class OptimisedServer:
         if not rescued:
             for t in batch.tickets:
                 t.finish(error=msg)
+        self._notify_done(batch, None)
         if roll:
             self._rollback(batch.net, expect_generation=batch.generation)
+
+    # -- batch-shape cost model -------------------------------------------
+    def _refresh_bucket_head(self, key: str, state: _NetState) -> None:
+        """Refit the per-bucket scale head from the served-traffic buffer
+        (DESIGN.md §12.3) once enough clean observations accumulated, then
+        re-derive everything that consumes batch-shape-aware cost: the
+        queue's ``bucket_scale`` (deadline windows) and the backend's batch
+        cap. Cheap (a handful of EW means), so it runs on the dispatch path;
+        the refit cadence bounds it further."""
+        n_obs = len(self._drift.observations(key))
+        with self._cond:
+            if (n_obs < BUCKET_MIN_OBS
+                    or n_obs - state.bucket_obs_at_fit < BUCKET_REFRESH_EVERY):
+                return
+            state.bucket_obs_at_fit = n_obs
+        head = self._drift.bucket_head(key, min_obs=2)
+        with self._cond:
+            if self._nets.get(key) is not state:
+                return                 # re-registered while fitting
+            state.bucket_head = head
+            state.queue.bucket_scale = (head.scale if head is not None
+                                        else None)
+            state.queue.batch_cap = self._bucket_batch_cap_locked(state)
 
     # -- drift-triggered recalibration ------------------------------------
     def served_sample(self, net: str):
         """The buffered served observations attributed to layer configs, as
         a ``PerfDataset`` ready for ``platform.calibrate(served=...)`` —
-        None when nothing attributable was served (§8.5)."""
+        None when nothing attributable was served (§8.5). The dataset
+        carries the attribution summary (dispatches, per-bucket counts and
+        drift) as ``served_info`` so recalibration reports can surface the
+        batch-shape mix the sample was drawn from."""
         att = self._drift.attributed(net)
         if att is None:
             return None
-        feats, cols, bucket_rows, _info = att
+        feats, cols, bucket_rows, info = att
         with self._cond:
             state = self._nets.get(net)
             platform = state.opt.platform if state is not None else None
         from repro.profiler.dataset import observations_to_dataset
         return observations_to_dataset(
             feats, cols, bucket_rows, columns=sorted(set(cols)),
-            platform=platform.name if platform is not None else "served")
+            platform=platform.name if platform is not None else "served",
+            info=info)
 
     def _schedule_recalibration(self, net: str, generation: int) -> None:
         if self._recalibrate is None:
@@ -989,18 +1263,42 @@ class OptimisedServer:
             return not self._recal_threads
 
     # -- synchronous path --------------------------------------------------
-    def pump(self, drain: bool = True) -> int:
+    def pump(self, drain: bool = True, idle_wait_s: float = 0.0) -> int:
         """Serve queued tickets inline on the calling thread, returning the
         dispatch count. ``drain=True`` (the ``workers=0`` serving mode)
         ignores batch windows — pump IS the arrival of serving capacity.
         ``drain=False`` dispatches only batches that are *ready* (full, or
         window expired against the injected clock) — the deterministic poll
         used by window-semantics tests. With a worker pool running, pump
-        simply competes for claims and remains safe."""
+        simply competes for claims and remains safe.
+
+        ``idle_wait_s`` > 0 adds idle backoff for external polling loops:
+        when nothing is dispatchable, pump blocks on the server condition —
+        woken by ``submit`` or bounded by the earliest window deadline, up
+        to ``idle_wait_s`` — instead of returning immediately and letting
+        the caller busy-spin a core against an empty queue. The default (0)
+        keeps the exact non-blocking contract (window tests drive an
+        injected clock and must never sleep)."""
         dispatches = 0
+        waited = False
         while True:
             with self._cond:
                 batch = self._claim_locked(self._clock(), drain=drain)
+                if (batch is None and idle_wait_s > 0.0 and not waited
+                        and dispatches == 0):
+                    waited = True
+                    now = self._clock()
+                    deadlines = [d for d in
+                                 (s.queue.next_deadline()
+                                  for s in self._nets.values()
+                                  if len(s.queue))
+                                 if d is not None]
+                    timeout = idle_wait_s
+                    if deadlines:
+                        timeout = min(idle_wait_s,
+                                      max(min(deadlines) - now, 0.0) + 1e-4)
+                    self._cond.wait(timeout)
+                    batch = self._claim_locked(self._clock(), drain=drain)
             if batch is None:
                 return dispatches
             self.execute(batch)
@@ -1037,7 +1335,17 @@ class OptimisedServer:
     def _state_stats_locked(self, key: str) -> Dict:
         s = self._nets[key]
         waits = np.asarray(s.waits, np.float64)
+        head = s.bucket_head
         return {"batch_cap": s.queue.batch_cap, "generation": s.generation,
+                # per-backend cap derivation (§12.3): the resolved latency
+                # budget and the bucket-conditioned per-image cost at the cap
+                "latency_budget_ms": self._budget_s(s.latency_budget_ms)
+                * 1e3,
+                "predicted_per_image_ms": self._per_image_locked(
+                    s, s.queue.batch_cap) * 1e3,
+                "bucket_scales": ({int(b): head.scale(b)
+                                   for b in head.buckets()}
+                                  if head is not None else None),
                 "dispatches": s.dispatches, "images": s.images,
                 "padded": s.padded, "busy_s": s.busy_s,
                 "images_per_s": (s.images / s.busy_s if s.busy_s else 0.0),
@@ -1216,6 +1524,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "batching)")
     ap.add_argument("--workers", type=int, default=0,
                     help="serving worker threads; 0 = synchronous pump mode")
+    ap.add_argument("--frontend-procs", type=int, default=0,
+                    help="intake processes assembling request batches in "
+                         "shared-memory slabs and handing them to the "
+                         "worker pool by reference (requires --workers >= "
+                         "1); 0 = thread-only front end")
+    ap.add_argument("--no-bucket-cost-model", action="store_true",
+                    help="disable the batch-shape-aware cost model: batch "
+                         "caps, deadline windows, router scores, and the "
+                         "canary gate assume per-image cost is "
+                         "batch-size-invariant (the pre-§12.3 behaviour)")
+    ap.add_argument("--backend-budget-ms", default=None,
+                    metavar="P1=MS,P2=MS,...",
+                    help="per-backend latency budgets for routed serving "
+                         "(--backends): each backend derives its own batch "
+                         "cap from its budget and its bucket-aware "
+                         "predicted cost (default: --latency-budget-ms for "
+                         "every backend)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="batch window cap: max time a ticket waits for "
                          "batch peers before its partial batch dispatches "
@@ -1309,6 +1634,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         opts.append((spec_name, opt))
     opt = opts[0][1]
 
+    budgets: Dict[str, float] = {}
+    if args.backend_budget_ms:
+        for part in args.backend_budget_ms.split(","):
+            name, _, ms = part.partition("=")
+            if not ms:
+                raise SystemExit(f"--backend-budget-ms expects P=MS pairs, "
+                                 f"got {part!r}")
+            budgets[name.strip()] = float(ms)
+
     server = OptimisedServer(latency_budget_ms=args.budget_ms,
                              workers=args.workers,
                              max_wait_ms=args.max_wait_ms,
@@ -1324,6 +1658,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              breaker_rate=args.breaker_rate,
                              breaker_cooldown_ms=args.breaker_cooldown_ms,
                              rollback_history=args.rollback_history,
+                             bucket_cost_model=not args.no_bucket_cost_model,
+                             frontend_procs=args.frontend_procs,
                              recalibrate=make_recalibrator(
                                  store=store,
                                  sample_n=args.recal_sample_n,
@@ -1332,6 +1668,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         # routed backends serve one at a time each; the worker pool overlaps
         # them across backends instead
         server.register(o, backend=spec_name if routed else None,
+                        latency_budget_ms=budgets.get(spec_name),
                         max_inflight=1 if routed else None)
     s = server.stats(opt.net)
     print(f"[serve] batch cap {s['batch_cap']} "
@@ -1375,6 +1712,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         server.serve(opt.net, xs[:8])
         print(f"[serve] hot-swapped to recalibrated assignment "
               f"(generation {server.stats(key)['generation']})")
+
+    if args.frontend_procs > 0:
+        fe = server.frontend()
+        agg = fe.drive(opt.net, args.requests, seed=1)
+        print(f"[serve] frontend: {args.frontend_procs} intake procs, "
+              f"{agg['requests']} requests -> {agg['served']} served "
+              f"({agg['degraded']} degraded, {agg['failed']} failed, "
+              f"{agg['rejected']} rejected) at {agg['images_per_s']:.1f} "
+              f"img/s, mean latency {agg['latency_mean_ms']:.2f} ms")
     server.stop()
     return 0
 

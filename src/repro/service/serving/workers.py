@@ -32,6 +32,13 @@ registration is its own claimable state with its own queue and in-flight
 limit, so with ``workers >= 2`` and per-backend ``max_inflight=1`` two
 backends of one network genuinely execute in parallel.
 
+The process front end (DESIGN.md §12) needs no pool support either: a
+pre-assembled slab batch arrives through ``claim_blocking`` as an ordinary
+claim whose ``xs`` is already a padded shared-memory view, so the worker
+skips batch assembly entirely and executes straight out of the slab —
+supervision, abandonment, and zombie replacement apply to it unchanged
+(a zombie's stale slab read is discarded by the first-finish-wins settle).
+
 ``stop()`` is graceful by default: workers first drain every queued ticket
 (windows ignored — shutdown must not strand requests), then exit.
 """

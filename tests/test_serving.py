@@ -678,3 +678,155 @@ def test_serve_raises_on_client_deadline(served_net):
     finally:
         clock.advance(2e6)                     # un-stick the hung dispatch
         server.stop(timeout=60.0)
+
+
+# ---------------------------------------------------------------------------
+# Batch-shape-aware cost model (DESIGN.md §12.3)
+# ---------------------------------------------------------------------------
+
+def test_bucket_scale_head_fit_monotone_interp_clamp():
+    from repro.core.perfmodel import BucketScaleHead
+    obs = []
+    for _ in range(4):                         # nonlinear synthetic curve
+        obs += [(1, 0.6), (4, 0.0), (16, -0.4)]
+    head = BucketScaleHead.fit(obs, normalize=False)
+    assert head.buckets() == [1, 4, 16]
+    np.testing.assert_allclose(head.scale(1), np.exp(0.6))
+    np.testing.assert_allclose(head.scale(16), np.exp(-0.4))
+    assert head.scale(1) > head.scale(2) > head.scale(4) > head.scale(16)
+    np.testing.assert_allclose(head.scale(2), np.exp(0.3))  # log2 interp
+    assert head.scale(64) == head.scale(16)    # clamped extrapolation
+    # count-weighted normalisation: the head carries shape only
+    norm = BucketScaleHead.fit(obs, normalize=True)
+    logs = np.log([norm.scale(b) for b in (1, 4, 16)])
+    np.testing.assert_allclose(np.average(logs, weights=[4, 4, 4]), 0.0,
+                               atol=1e-12)
+    # min_obs drops noise buckets; nothing kept -> None
+    assert BucketScaleHead.fit([(8, 0.1)], min_obs=2) is None
+    assert BucketScaleHead.fit([]) is None
+
+
+def test_netqueue_effective_wait_uses_bucket_scale():
+    clock = FakeClock()
+    q = NetQueue(depth=16, batch_cap=8, max_wait_s=20e-3, budget_s=10e-3,
+                 predicted_s=1e-3)
+    for i in range(2):
+        q.push(Ticket(net="n", x=np.zeros(1), submitted_s=clock(),
+                      clock=clock))
+    assert q.effective_wait_s() == pytest.approx(8e-3)   # 10 - 1e-3*2
+    q.bucket_scale = lambda b: 2.0             # super-linear bucket: window
+    assert q.effective_wait_s() == pytest.approx(6e-3)   # 10 - 2e-3*2
+    q.bucket_scale = lambda b: 10.0            # execution alone > budget
+    assert q.effective_wait_s() == 0.0
+
+
+def test_bucket_head_fitted_from_served_traffic(optimised_net):
+    """Superlinear pacing: per-image cost grows with the pow2 bucket. After
+    enough clean dispatches the server fits the scale head from the served
+    buffer and threads it through predict_per_image and stats."""
+    clock = FakeClock()
+    pred = optimised_net.predicted_cost_s
+
+    class PacedServer(OptimisedServer):
+        def _run_plan(self, o, xs, weights):
+            out = super()._run_plan(o, xs, weights)
+            b = xs.shape[0]
+            clock.advance(pred * (1.0 + np.log2(b)) * b)
+            return out
+
+    # a roomy budget keeps the initial cap at 4 so bucket-4 bursts
+    # dispatch whole regardless of the model's predicted cost
+    server = PacedServer(max_batch=4, clock=clock, drift_threshold=50.0,
+                         latency_budget_ms=10000.0)
+    server.register(optimised_net)
+    net = optimised_net.net
+    xs = _requests(optimised_net.spec, 4)
+    for b in (1, 2, 4):                        # 1 warm + 3 clean each
+        for _ in range(4):
+            server.serve(net, xs[:b])
+    s = server.stats(net)
+    scales = s["bucket_scales"]
+    assert scales is not None and set(scales) == {1, 2, 4}
+    assert scales[4] > scales[2] > scales[1] > 0
+    # the public prediction is bucket-conditioned through the head
+    assert (server.predict_per_image(net, 4)
+            > server.predict_per_image(net, 1) > 0)
+    assert server.predict_per_image(net) == pytest.approx(
+        server.predict_per_image(net, 1) / scales[1])
+    # the served sample surfaces the batch-shape mix it was drawn from
+    ds = server.served_sample(net)
+    assert ds is not None and set(ds.served_info["buckets"]) == {1, 2, 4}
+    server.stop()
+
+
+def test_bucket_batch_cap_tightens_and_stats_surface(served_net):
+    from repro.core.perfmodel import BucketScaleHead
+    server = OptimisedServer(max_batch=32, latency_budget_ms=16.0)
+    state = server.register(served_net)        # predicted 2 ms/img
+    with server._cond:
+        linear = server._bucket_batch_cap_locked(state)
+    assert linear == 8                         # 16 ms / 2 ms, pow2 floor
+    # super-linear head: scale(1)=1, scale(8)=4 (log2-interpolated between)
+    state.bucket_head = BucketScaleHead.fit([(1, 0.0), (8, np.log(4.0))],
+                                            normalize=False)
+    with server._cond:
+        cap = server._bucket_batch_cap_locked(state)
+    # 2ms*scale(4)*4 = 20ms > 16ms; 2ms*scale(2)*2 ≈ 6.3ms fits
+    assert cap == 2
+    s = server.stats(served_net.net)
+    assert s["latency_budget_ms"] == pytest.approx(16.0)
+    assert s["predicted_per_image_ms"] > 0
+    assert s["bucket_scales"] == {1: pytest.approx(1.0),
+                                  8: pytest.approx(4.0)}
+    server.stop()
+
+
+def test_router_score_is_bucket_conditioned(served_net):
+    from repro.core.perfmodel import BucketScaleHead
+    server = OptimisedServer(max_batch=8)
+    server.register(served_net, backend="a")
+    server.register(served_net, backend="b")
+    # same predicted cost, but backend a's bucket-1 dispatches are 3x:
+    # the next request (bucket 1) must route to b
+    server._nets["edge_cnn#a"].bucket_head = BucketScaleHead.fit(
+        [(1, np.log(3.0))], normalize=False)
+    t = server.submit("edge_cnn", _requests(served_net.spec, 1)[0])
+    assert t.net == "edge_cnn#b"
+    server.pump()
+    assert t.done
+    server.stop()
+
+
+def test_pump_idle_backoff(served_net):
+    """``pump(drain=False, idle_wait_s=...)`` parks on the condvar instead
+    of hot-polling — and wakes early for a submit or an expiring window, so
+    dispatch latency is unchanged."""
+    server = OptimisedServer(max_batch=4, workers=0, max_wait_ms=40.0)
+    server.register(served_net)
+    xs = _requests(served_net.spec, 4)
+    # empty queue: waits out the idle budget, no dispatch
+    t0 = time.perf_counter()
+    assert server.pump(drain=False, idle_wait_s=0.15) == 0
+    assert time.perf_counter() - t0 >= 0.1
+    # default remains the exact non-blocking poll
+    t0 = time.perf_counter()
+    assert server.pump(drain=False) == 0
+    assert time.perf_counter() - t0 < 0.05
+    # a pending window: sleeps to the deadline, then dispatches — far
+    # before the idle budget
+    server.submit(served_net.net, xs[0])
+    t0 = time.perf_counter()
+    assert server.pump(drain=False, idle_wait_s=30.0) == 1
+    assert time.perf_counter() - t0 < 5.0
+    # a submit while parked wakes the pump immediately
+    def late_submit():
+        time.sleep(0.2)
+        for x in xs:                           # full batch: ready at once
+            server.submit(served_net.net, x)
+    th = threading.Thread(target=late_submit)
+    th.start()
+    t0 = time.perf_counter()
+    assert server.pump(drain=False, idle_wait_s=30.0) == 1
+    assert time.perf_counter() - t0 < 10.0
+    th.join()
+    server.stop()

@@ -581,3 +581,35 @@ def test_safe_assignment_uses_reference_primitives_only(spec):
                               else "direct-sum2d")
         else:
             assert asg[i] == "chw"
+
+
+def test_canary_gate_counts_real_rows_not_pad(spec):
+    """Regression: a non-pow2 ``canary_batch`` pads to the next pow2 bucket,
+    and per-image cost must divide by the REAL row count. Dividing by the
+    padded bucket shrank per-image cost by pad/bucket — here 3/4 — waving
+    through candidates that are past the slowdown gate."""
+    clock = FakeClock()
+    slow = {}
+
+    class PacedServer(OptimisedServer):
+        def _run_plan(self, o, xs, weights):
+            out = super()._run_plan(o, xs, weights)
+            clock.advance(slow.get(id(o), 0.0) * xs.shape[0])
+            return out
+
+    server = PacedServer(max_batch=4, clock=clock, canary_batch=3,
+                         canary_slowdown=8.0)
+    server.register(_net(spec, predicted=2e-3))    # gate: 16 ms/img
+    bad = _net(spec)
+    # the canary serves 3 real rows padded to 4: 13 ms/row * 4 rows over
+    # 3 real images = 17.3 ms/img > gate — but over the padded 4 it would
+    # be 13 ms/img and (wrongly) pass
+    slow[id(bad)] = 13e-3
+    assert not server.hot_swap("edge_cnn", bad, canary=True)
+    s = server.stats("edge_cnn")
+    assert s["generation"] == 0 and "slowdown" in s["last_canary"]
+    # a genuinely acceptable candidate still passes at the same settings
+    ok = _net(spec)
+    slow[id(ok)] = 2e-3                            # 2.7 ms/img, well under
+    assert server.hot_swap("edge_cnn", ok, canary=True)
+    assert server.stats("edge_cnn")["generation"] == 1

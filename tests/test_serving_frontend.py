@@ -1,0 +1,410 @@
+"""Process-level serving front end (DESIGN.md §12): the shared-memory slab
+pool (alloc/free ring, generation guards, concurrent producers), the
+pre-assembled ``BatchGroup`` dispatch path through the serving core (byte
+equivalence zero-copy vs copy, fault contracts, slab recycling), and the
+multi-process ``ProcessFrontend`` end to end (spawn intake processes,
+ingest round-trip, drive-mode accounting).
+
+Deterministic tests carry the required coverage; the @given variants widen
+the same invariants when ``hypothesis`` is installed and skip otherwise.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.models import cnn_zoo
+from repro.primitives.plan import heuristic_assignment
+from repro.service import (Fault, FaultInjector, OptimisedNetwork,
+                           OptimisedServer, SlabPool)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return cnn_zoo.get("edge_cnn")
+
+
+def _net(spec, *, predicted=2e-3):
+    return OptimisedNetwork.from_assignment(spec, heuristic_assignment(spec),
+                                            predicted_cost_s=predicted)
+
+
+def _requests(spec, n, seed=0):
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n0.c, n0.im, n0.im)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Slab pool (pure, no server)
+# ---------------------------------------------------------------------------
+
+def test_slab_pool_alloc_free_roundtrip():
+    pool = SlabPool((3, 4, 4), max_batch=8, slots=3)
+    try:
+        assert pool.buckets == [1, 2, 4, 8]
+        h = pool.alloc(5)                      # rounds up the pow2 ladder
+        assert h.bucket == 8
+        v = pool.view(h)
+        assert v.shape == (8, 3, 4, 4) and v.dtype == np.float32
+        v[:] = 2.5
+        assert (pool.view(h, rows=3) == 2.5).all()
+        assert pool.available(8) == 2
+        pool.free(h)
+        assert pool.available(8) == 3
+        # buckets are independent rings
+        assert pool.available(1) == 3 and pool.available(4) == 3
+    finally:
+        pool.close()
+
+
+def test_slab_pool_exhaustion_backpressure_and_refill():
+    pool = SlabPool((2, 2, 2), max_batch=4, slots=2)
+    try:
+        a, b = pool.alloc(4), pool.alloc(4)
+        assert a is not None and b is not None and a.slot != b.slot
+        assert pool.alloc(4) is None           # ring empty: backpressure
+        pool.free(a)
+        c = pool.alloc(4)                      # refilled by the free
+        assert c is not None and c.generation == a.generation + 1
+        pool.free(b)
+        pool.free(c)
+        assert pool.available(4) == 2
+    finally:
+        pool.close()
+
+
+def test_slab_pool_generation_guards_double_free_and_stale_view():
+    pool = SlabPool((2, 2, 2), max_batch=2, slots=2)
+    try:
+        h = pool.alloc(2)
+        pool.view(h)[:] = 1.0
+        pool.free(h)
+        with pytest.raises(ValueError):        # double free
+            pool.free(h)
+        with pytest.raises(ValueError):        # use-after-free
+            pool.view(h)
+        # the recycled slot is a NEW allocation: stale handle stays dead
+        both = [pool.alloc(2), pool.alloc(2)]   # FIFO ring: drain it whole
+        h2 = next(x for x in both if x.slot == h.slot)
+        assert h2.generation > h.generation
+        with pytest.raises(ValueError):
+            pool.view(h)
+        for x in both:
+            pool.free(x)
+    finally:
+        pool.close()
+
+
+def test_slab_pool_no_aliasing_across_generations():
+    """Payloads written through one generation never leak into another:
+    every live handle owns disjoint memory, and recycling bumps the
+    generation so the old handle cannot read the new tenant's rows."""
+    pool = SlabPool((1, 2, 2), max_batch=2, slots=4)
+    try:
+        live = {}
+        for round_ in range(3):
+            handles = [pool.alloc(2) for _ in range(4)]
+            assert all(h is not None for h in handles)
+            assert len({h.slot for h in handles}) == 4    # disjoint slots
+            for i, h in enumerate(handles):
+                pool.view(h)[:] = round_ * 10.0 + i
+                live[(h.slot, h.generation)] = round_ * 10.0 + i
+            for h in handles:
+                assert (pool.view(h) == live[(h.slot, h.generation)]).all()
+                pool.free(h)
+    finally:
+        pool.close()
+
+
+def test_slab_pool_concurrent_producers():
+    """N producer threads alloc/write/verify/free in a loop against one
+    pool: no slab is ever handed to two producers at once (each verifies
+    its own tag before freeing), and the ring is whole afterwards."""
+    pool = SlabPool((2, 3, 3), max_batch=4, slots=4)
+    errors = []
+
+    def producer(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            for it in range(120):
+                bucket = int(rng.choice([1, 2, 4]))
+                h = pool.alloc(bucket)
+                if h is None:
+                    continue                   # transient exhaustion: fine
+                tag = tid * 1000.0 + it
+                v = pool.view(h)
+                v[:] = tag
+                if not (pool.view(h) == tag).all():
+                    errors.append(f"aliased slab {h} (producer {tid})")
+                pool.free(h)
+        except Exception as e:                 # pragma: no cover
+            errors.append(f"producer {tid}: {e!r}")
+
+    threads = [threading.Thread(target=producer, args=(i,)) for i in range(4)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert not errors, errors
+        for b in (1, 2, 4):
+            assert pool.available(b) == 4      # every slab returned
+    finally:
+        pool.close()
+
+
+def test_slab_pool_attach_shares_bytes_and_never_unlinks():
+    pool = SlabPool((2, 2, 2), max_batch=2, slots=2)
+    try:
+        other = SlabPool.attach(pool.spec(), pool.lock)
+        h = other.alloc(2)
+        other.view(h)[:] = 9.0
+        assert (pool.view(h) == 9.0).all()     # same physical memory
+        pool.free(h)                           # either side may free
+        assert other.available(2) == 2
+        other.close()                          # non-owner: unmap only
+        h2 = pool.alloc(2)                     # owner's segments still live
+        pool.view(h2)[:] = 1.0
+        pool.free(h2)
+    finally:
+        pool.close()
+
+
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=1,
+                max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_slab_pool_random_alloc_free_invariants(ops):
+    """Property: under any interleaving of allocs and frees, live handles
+    are unique per (bucket, slot), available() counts exactly the free
+    slabs, and every alloc after a free sees a bumped generation."""
+    pool = SlabPool((1, 2, 2), max_batch=4, slots=3)
+    live = []
+    try:
+        for op in ops:
+            if op < 3:                         # alloc from ladder rung `op`
+                bucket = 1 << op
+                h = pool.alloc(bucket)
+                if h is None:
+                    assert pool.available(bucket) == 0
+                else:
+                    assert all(not (h.bucket == o.bucket and h.slot == o.slot)
+                               for o in live), "slab handed out twice"
+                    live.append(h)
+            elif live:                         # free the oldest live handle
+                h = live.pop(0)
+                pool.free(h)
+                with pytest.raises(ValueError):
+                    pool.view(h)
+        for b in pool.buckets:
+            used = sum(1 for h in live if h.bucket == b)
+            assert pool.available(b) == 3 - used
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Group dispatch through the serving core (pump mode, no processes)
+# ---------------------------------------------------------------------------
+
+def test_group_bytes_identical_zero_copy_vs_copy(spec):
+    """The same payload served through the zero-copy slab path and through
+    the per-ticket copy path must produce byte-identical results."""
+    server = OptimisedServer(max_batch=8, latency_budget_ms=50.0)
+    server.register(_net(spec))
+    pool = SlabPool((spec.nodes[0].c, spec.nodes[0].im, spec.nodes[0].im),
+                    max_batch=8, slots=2)
+    try:
+        xs = _requests(spec, 3, seed=7)
+        h = pool.alloc(4)
+        buf = pool.view(h)
+        buf[:3] = xs
+        buf[3] = xs[2]                         # pow2 pad: replicate last row
+        freed = []
+        g = server._submit_group("edge_cnn", pool.view(h), 3,
+                                 handle=h,
+                                 on_done=lambda ts, out:
+                                 (pool.free(h), freed.append(out)))
+        assert server.pump() == 1
+        assert all(t.done and t.error is None for t in g.tickets)
+        assert freed and freed[0] is not None and freed[0].shape[0] == 4
+        assert pool.available(4) == 2          # slab recycled by on_done
+        ref = server.serve("edge_cnn", xs)     # copy path: np.stack + pad
+        for i, t in enumerate(g.tickets):
+            np.testing.assert_array_equal(t.result, ref[i])
+            np.testing.assert_array_equal(freed[0][i], ref[i])
+    finally:
+        pool.close()
+        server.stop()
+
+
+def test_group_rejection_fires_on_done_and_finishes_tickets(spec):
+    server = OptimisedServer(max_batch=4, queue_depth=2)
+    server.register(_net(spec))
+    xs = _requests(spec, 4)
+    fired = []
+    # over depth: the whole group is rejected, on_done still fires
+    g = server._submit_group("edge_cnn", xs, 4,
+                             on_done=lambda ts, out: fired.append(out))
+    assert all(t.done and t.rejected for t in g.tickets)
+    assert fired == [None]
+    assert server.stats("edge_cnn")["rejected"] == 4
+    # unknown net: same contract
+    g2 = server._submit_group("nope", xs, 2,
+                              on_done=lambda ts, out: fired.append(out))
+    assert all(t.done and t.rejected for t in g2.tickets)
+    assert fired == [None, None]
+    server.stop()
+
+
+def test_group_dispatch_degrades_per_ticket_under_faults(spec):
+    """A slab dispatch hit by injected faults degrades to the fallback plan
+    per ticket — the shm path changes where the bytes live, not the
+    fault-tolerance contract — and on_done reports per-row results."""
+    inj = FaultInjector([Fault("raise", net="edge_cnn", first=0, last=2)])
+    server = OptimisedServer(max_batch=4, faults=inj)
+    server.register(_net(spec))
+    xs = _requests(spec, 2, seed=3)
+    outs = []
+    g = server._submit_group("edge_cnn", xs, 2,
+                             on_done=lambda ts, out: outs.append(out))
+    assert server.pump() == 1
+    assert outs == [None]                      # primary failed: per-row path
+    assert all(t.done and t.degraded and t.result is not None
+               for t in g.tickets)
+    s = server.stats("edge_cnn")
+    assert s["fallback_images"] == 2 and s["failed_tickets"] == 0
+    # accounting identity: nothing lost, nothing duplicated
+    assert s["images"] + s["fallback_images"] == 2
+    server.stop()
+
+
+def test_group_and_loose_tickets_coexist_fifo(spec):
+    """Loose submits and slab groups share one queue; a pending group
+    dispatches whole and first (its window already ran in the intake)."""
+    server = OptimisedServer(max_batch=4, latency_budget_ms=50.0)
+    server.register(_net(spec))
+    xs = _requests(spec, 3)
+    t_loose = server.submit("edge_cnn", xs[0])
+    g = server._submit_group("edge_cnn", xs[1:3], 2)
+    assert len(server._nets["edge_cnn"].queue) == 3
+    dispatches = server.pump()
+    assert dispatches == 2                     # the group whole + the loose
+    assert t_loose.done and t_loose.error is None
+    assert all(t.done and t.error is None for t in g.tickets)
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# ProcessFrontend end to end (spawn processes + worker pool)
+# ---------------------------------------------------------------------------
+
+def test_process_frontend_ingest_and_drive(spec):
+    """Full path: intake processes assemble slab batches, the dispatcher
+    hands them to the worker pool by reference, results ship back per
+    batch. ``ingest`` payloads round-trip byte-identically vs the thread
+    front end; ``drive`` accounting loses nothing."""
+    server = OptimisedServer(max_batch=8, latency_budget_ms=50.0, workers=2,
+                             max_wait_ms=2.0, frontend_procs=2)
+    server.register(_net(spec))
+    xs = _requests(spec, 4, seed=11)
+    server.serve("edge_cnn", xs)               # warm the bucket-4 plan
+    fe = server.frontend()
+    try:
+        tickets = fe.ingest("edge_cnn", xs)
+        for t in tickets:
+            assert t.wait(120.0), "ingest ticket never finished"
+            assert t.error is None, t.error
+        ref = server.serve("edge_cnn", xs)
+        for t, r in zip(tickets, ref):
+            np.testing.assert_array_equal(t.result, r)
+
+        agg = fe.drive("edge_cnn", 24, seed=5)
+        assert agg["requests"] == 24
+        assert (agg["served"] + agg["failed"] + agg["rejected"]
+                == 24), f"lost tickets: {agg}"
+        assert agg["served"] >= 23             # ≥99% under no faults: all
+        assert agg["failed"] == 0 and agg["rejected"] == 0
+        assert fe.fatal is None
+    finally:
+        server.stop()
+    # frontend stop released every slab and child
+    assert not fe._children or all(not p.is_alive() for p in fe._children)
+
+
+def test_frontend_requires_worker_pool(spec):
+    with pytest.raises(ValueError):
+        OptimisedServer(workers=0, frontend_procs=2)
+    server = OptimisedServer(workers=0)
+    server.register(_net(spec))
+    with pytest.raises(ValueError):
+        server.frontend(2)
+    server.stop()
+
+
+def test_slab_group_chaos_soak(spec):
+    """The fault-tolerance gates hold on the shm path: slab groups routed
+    across two backends while one raises — zero lost tickets, zero
+    duplicates (accounting identity), ≥99% served, every slab recycled."""
+    # indices 1 and 2: one dispatch loses its attempt AND its retry, so the
+    # fallback degradation path runs on a slab batch; everything else clean
+    inj = FaultInjector([
+        Fault("raise", net="edge_cnn#a", first=1, last=3),
+    ])
+    server = OptimisedServer(max_batch=4, workers=2, max_wait_ms=1.0,
+                             faults=inj, breaker_failures=3)
+    server.register(_net(spec, predicted=1e-6), backend="a")   # preferred
+    server.register(_net(spec, predicted=1e-3), backend="b")
+    pool = SlabPool((spec.nodes[0].c, spec.nodes[0].im, spec.nodes[0].im),
+                    max_batch=4, slots=8)
+    groups, done = [], threading.Event()
+    outstanding = [0]
+    lock = threading.Lock()
+
+    def make_done(h):
+        def on_done(tickets, out):
+            pool.free(h)
+            with lock:
+                outstanding[0] -= 1
+                if outstanding[0] == 0:
+                    done.set()
+        return on_done
+
+    try:
+        rng = np.random.default_rng(0)
+        for i in range(12):
+            rows = int(rng.integers(1, 5))
+            deadline = time.perf_counter() + 60.0
+            while (h := pool.alloc(4)) is None:    # backpressure: frees
+                assert time.perf_counter() < deadline  # refill the ring
+                time.sleep(0.001)
+            buf = pool.view(h)
+            buf[:rows] = _requests(spec, rows, seed=i)
+            buf[rows:] = buf[rows - 1] if rows < 4 else buf[rows:]
+            with lock:
+                outstanding[0] += 1
+            g = server._submit_group("edge_cnn", pool.view(h), rows,
+                                     handle=h, on_done=make_done(h))
+            groups.append(g)
+        assert done.wait(120.0), "groups never settled"
+        tickets = [t for g in groups for t in g.tickets]
+        assert all(t.done for t in tickets), "lost tickets"
+        served = [t for t in tickets if t.error is None]
+        assert not any(t.rejected for t in tickets)
+        assert len(served) / len(tickets) >= 0.99
+        sa, sb = (server.stats(f"edge_cnn#{b}") for b in ("a", "b"))
+        # exactly-once: per-backend served images equal the settled tickets
+        assert (sa["images"] + sa["fallback_images"] + sb["images"]
+                + sb["fallback_images"]) == len(served)
+        assert sa["failed_dispatches"] >= 1          # faults really fired
+        assert sa["fallback_images"] >= 1            # rescued, not dropped
+        assert pool.available(4) == 8                # every slab recycled
+    finally:
+        server.stop()
+        pool.close()
