@@ -620,7 +620,7 @@ def frontend_scaling_pass(opt, requests: int, budget_ms: float, *,
             "chaos": chaos}
 
 
-def bucket_cost_pass(nets, *, buckets=(1, 2, 4), rounds: int = 8) -> Dict:
+def bucket_cost_pass(nets, *, buckets=(1, 2, 4), rounds: int = 24) -> Dict:
     """Batch-shape-aware vs linear per-image cost on really-served traffic
     (DESIGN.md §12.3), per zoo net.
 
@@ -630,8 +630,12 @@ def bucket_cost_pass(nets, *, buckets=(1, 2, 4), rounds: int = 8) -> Dict:
     per-image cost over the fit half (what a batch-size-invariant predictor
     settles on); the bucket model is ``BucketScaleHead`` fitted from the
     same half. Error is the count-weighted mean absolute log-space gap
-    between each bucket's held-out mean and the model. The gate requires
-    the bucket model strictly below linear on every listed net."""
+    between each bucket's held-out **median** and the model — the median
+    (plus the larger round count) keeps a single scheduler stall on a
+    loaded runner from deciding the gate, which matters more now that the
+    §13.3 dispatch fast path has removed most of the fixed per-dispatch
+    overhead the head models. The gate requires the bucket model strictly
+    below linear on every listed net."""
     from repro.core.perfmodel import BucketScaleHead
     from repro.models import cnn_zoo
     from repro.primitives.plan import heuristic_assignment
@@ -670,7 +674,7 @@ def bucket_cost_pass(nets, *, buckets=(1, 2, 4), rounds: int = 8) -> Dict:
             weights=[counts[b] for b in head.buckets()]))
         lin, buc, w = [], [], []
         for b in buckets:
-            m = float(np.mean(ev[b]))
+            m = float(np.median(ev[b]))
             lin.append(abs(m - base))
             buc.append(abs(m - np.log(head.scale(b))))
             w.append(len(ev[b]))
@@ -702,9 +706,15 @@ def main() -> int:
     ap.add_argument("--recal-sample-n", type=int, default=12,
                     help="calibration sample size for the drift "
                          "recalibration row")
-    ap.add_argument("--backends", default="arm,tpu",
+    ap.add_argument("--backends", default="arm,amd",
                     help="comma-separated platform specs for the "
-                         "cross-backend routing row")
+                         "cross-backend routing row (simulated-CPU "
+                         "platforms: the row's device-charge model needs "
+                         "real per-image compute to be incidental, and "
+                         "since tile variants lower to real interpret-mode "
+                         "Pallas kernels (DESIGN.md §13.1) a 'tpu' backend "
+                         "burns enough host CPU to fight the other "
+                         "backend for cores instead of overlapping)")
     ap.add_argument("--frontend-procs", type=int, default=2,
                     help="intake processes for the frontend scaling row")
     ap.add_argument("--bucket-nets", default="edge_cnn,alexnet",

@@ -154,6 +154,29 @@ def _analytic_cost_np(M, K, N, bm: int, bk: int, bn: int,
     return np.maximum(t_compute, t_mem) + t_grid
 
 
+def _variant_blocks(variant: Optional[str]) -> Tuple[int, int, int]:
+    """(bm, bk, bn) GEMM blocks a tile variant lowers to (DESIGN.md §13).
+
+    ``mm-*`` names the blocks directly. ``conv-bkB`` is the fused
+    im2col+GEMM kernel whose B-sized block tiles the output-channel (GEMM M)
+    axis; ``wino-KxT`` tiles the point-GEMM's (K, T) = (M, N) axes. The
+    perf model must price the blocks the kernel actually runs with, or PBQP
+    ranks those columns by a config they never execute."""
+    if variant is None:
+        return (128, 128, 128)
+    if variant in VARIANTS:                            # mm-BMxBKxBN
+        return VARIANTS[variant]
+    if variant.startswith("conv-bk"):
+        from repro.kernels.im2col_gemm.ops import VARIANTS as CONV_VARIANTS
+        b = CONV_VARIANTS.get(variant)
+        return (b, 128, 128) if b else (128, 128, 128)
+    if variant.startswith("wino-"):
+        from repro.kernels.winograd.ops import VARIANTS as WINO_VARIANTS
+        kt = WINO_VARIANTS.get(variant)
+        return (kt[0], 128, kt[1]) if kt else (128, 128, 128)
+    return (128, 128, 128)
+
+
 def conv_tile_time_batch(configs: np.ndarray,
                          columns: Optional[Sequence[str]] = None,
                          *, noisy: bool = True,
@@ -185,7 +208,7 @@ def conv_tile_time_batch(configs: np.ndarray,
     out = np.empty((cfg.shape[0], len(names)), np.float64)
     for j, name in enumerate(names):
         base, variant = split_tile(name)
-        bm, bk, bn = VARIANTS[variant] if variant in VARIANTS else (128, 128, 128)
+        bm, bk, bn = _variant_blocks(variant)
         if base.startswith("conv-1x1"):
             t = _analytic_cost_np(k, c, P, bm, bk, bn)
         elif base.startswith("winograd"):

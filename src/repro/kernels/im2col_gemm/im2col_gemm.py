@@ -18,6 +18,12 @@ Grid: (K blocks, output rows). Weights arrive pre-flattened (K, C*f*f) in
 dimension — grid (N, K blocks, output rows), each program building one
 image's row patch block — so a compiled serving plan feeds whole batches
 through one kernel launch.
+
+Epilogues (DESIGN.md §13): optional bias (per output channel), residual
+(output-shaped) and ReLU finish the output tile in VMEM before its single
+HBM writeback. In interpret mode the epilogue runs once at the wrapper
+level (identical numerics, no per-grid-step interpreter overhead);
+``fuse_store`` forces the in-kernel path.
 """
 from __future__ import annotations
 
@@ -29,10 +35,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _conv_kernel(*refs, stride: int, f: int, ow: int):
+def _finish(y, bias, res, relu: bool, channel_axis: int):
+    if bias is not None:
+        shape = [1] * y.ndim
+        shape[channel_axis] = bias.shape[0]
+        y = y + bias.astype(y.dtype).reshape(shape)
+    if res is not None:
+        y = y + res.astype(y.dtype)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def _conv_kernel(*refs, stride: int, f: int, ow: int, has_bias: bool,
+                 has_res: bool, relu: bool):
     x_rows = refs[:f]            # each (C, 1, W)
-    w_ref = refs[f]              # (bk, C*f*f)
-    o_ref = refs[f + 1]          # (1, bk, ow)
+    it = iter(refs[f:])
+    w_ref = next(it)             # (bk, C*f*f)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_res else None
+    o_ref = next(it)             # (1, bk, ow)
     C = x_rows[0].shape[0]
     cols = []
     for a in range(f):
@@ -41,43 +63,77 @@ def _conv_kernel(*refs, stride: int, f: int, ow: int):
             end = b + (ow - 1) * stride + 1
             cols.append(jax.lax.slice(row, (0, b), (C, end), (1, stride)))
     pat = jnp.stack(cols, axis=1).reshape(C * f * f, ow)  # VMEM-resident
-    o_ref[0] = jnp.dot(w_ref[...], pat,
-                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    acc = jnp.dot(w_ref[...], pat, preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + b_ref[0].astype(jnp.float32)[:, None]
+    if has_res:
+        acc = acc + r_ref[0].astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[0] = acc.astype(o_ref.dtype)
 
 
 def conv_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, *,
-                bk: int = 128, interpret: bool = False) -> jnp.ndarray:
-    """x: (C, H, W); w: (K, C, f, f) -> (K, oh, ow), valid padding."""
+                bk: int = 128, bias: jnp.ndarray | None = None,
+                residual: jnp.ndarray | None = None, relu: bool = False,
+                interpret: bool = False,
+                fuse_store: bool | None = None) -> jnp.ndarray:
+    """x: (C, H, W); w: (K, C, f, f) -> (K, oh, ow), valid padding.
+    ``bias`` is (K,), ``residual`` is (K, oh, ow)."""
     C, H, W = x.shape
     K, _, f, _ = w.shape
     oh = (H - f) // stride + 1
     ow = (W - f) // stride + 1
     wm = w.reshape(K, C * f * f)
+    fuse = (not interpret) if fuse_store is None else fuse_store
     bk = min(bk, K)
     Kp = -(-K // bk) * bk
     if Kp != K:                      # partial K tiles are undefined on TPU
         wm = jnp.pad(wm, ((0, Kp - K), (0, 0)))
     grid = (Kp // bk, oh)
+    has_bias = fuse and bias is not None
+    has_res = fuse and residual is not None
 
     def row_spec(a):
         return pl.BlockSpec((C, 1, W), lambda kb, i, a=a: (0, i * stride + a, 0))
 
+    ins = [x] * f + [wm]
+    in_specs = [row_spec(a) for a in range(f)] \
+        + [pl.BlockSpec((bk, C * f * f), lambda kb, i: (kb, 0))]
+    if has_bias:
+        ins.append(jnp.pad(bias, (0, Kp - K))[None, :] if Kp != K
+                   else bias[None, :])
+        in_specs.append(pl.BlockSpec((1, bk), lambda kb, i: (0, kb)))
+    if has_res:
+        r = residual.transpose(1, 0, 2)              # (oh, K, ow)
+        if Kp != K:
+            r = jnp.pad(r, ((0, 0), (0, Kp - K), (0, 0)))
+        ins.append(r)
+        in_specs.append(pl.BlockSpec((1, bk, ow), lambda kb, i: (i, kb, 0)))
     out = pl.pallas_call(
-        functools.partial(_conv_kernel, stride=stride, f=f, ow=ow),
+        functools.partial(_conv_kernel, stride=stride, f=f, ow=ow,
+                          has_bias=has_bias, has_res=has_res,
+                          relu=fuse and relu),
         grid=grid,
-        in_specs=[row_spec(a) for a in range(f)]
-                 + [pl.BlockSpec((bk, C * f * f), lambda kb, i: (kb, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bk, ow), lambda kb, i: (i, kb, 0)),
         out_shape=jax.ShapeDtypeStruct((oh, grid[0] * bk, ow), x.dtype),
         interpret=interpret,
-    )(*([x] * f), wm)
-    return out.transpose(1, 0, 2)[:K]
+    )(*ins)
+    out = out.transpose(1, 0, 2)[:K]
+    if not fuse:
+        out = _finish(out, bias, residual, relu, channel_axis=0)
+    return out
 
 
-def _conv_batch_kernel(*refs, stride: int, f: int, ow: int):
+def _conv_batch_kernel(*refs, stride: int, f: int, ow: int, has_bias: bool,
+                       has_res: bool, relu: bool):
     x_rows = refs[:f]            # each (1, C, 1, W)
-    w_ref = refs[f]              # (bk, C*f*f)
-    o_ref = refs[f + 1]          # (1, 1, bk, ow)
+    it = iter(refs[f:])
+    w_ref = next(it)             # (bk, C*f*f)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_res else None
+    o_ref = next(it)             # (1, 1, bk, ow)
     C = x_rows[0].shape[1]
     cols = []
     for a in range(f):
@@ -86,36 +142,67 @@ def _conv_batch_kernel(*refs, stride: int, f: int, ow: int):
             end = b + (ow - 1) * stride + 1
             cols.append(jax.lax.slice(row, (0, b), (C, end), (1, stride)))
     pat = jnp.stack(cols, axis=1).reshape(C * f * f, ow)  # VMEM-resident
-    o_ref[0, 0] = jnp.dot(w_ref[...], pat,
-                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    acc = jnp.dot(w_ref[...], pat, preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + b_ref[0].astype(jnp.float32)[:, None]
+    if has_res:
+        acc = acc + r_ref[0, 0].astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
 
 
 def conv_im2col_batch(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, *,
-                      bk: int = 128, interpret: bool = False) -> jnp.ndarray:
+                      bk: int = 128, bias: jnp.ndarray | None = None,
+                      residual: jnp.ndarray | None = None, relu: bool = False,
+                      interpret: bool = False,
+                      fuse_store: bool | None = None) -> jnp.ndarray:
     """x: (N, C, H, W); w: (K, C, f, f) -> (N, K, oh, ow), valid padding.
-    Batch is the leading grid dimension: grid (N, K blocks, output rows)."""
+    Batch is the leading grid dimension: grid (N, K blocks, output rows).
+    ``bias`` is (K,), ``residual`` is (N, K, oh, ow)."""
     N, C, H, W = x.shape
     K, _, f, _ = w.shape
     oh = (H - f) // stride + 1
     ow = (W - f) // stride + 1
     wm = w.reshape(K, C * f * f)
+    fuse = (not interpret) if fuse_store is None else fuse_store
     bk = min(bk, K)
     Kp = -(-K // bk) * bk
     if Kp != K:                      # partial K tiles are undefined on TPU
         wm = jnp.pad(wm, ((0, Kp - K), (0, 0)))
     grid = (N, Kp // bk, oh)
+    has_bias = fuse and bias is not None
+    has_res = fuse and residual is not None
 
     def row_spec(a):
         return pl.BlockSpec((1, C, 1, W),
                             lambda n, kb, i, a=a: (n, 0, i * stride + a, 0))
 
+    ins = [x] * f + [wm]
+    in_specs = [row_spec(a) for a in range(f)] \
+        + [pl.BlockSpec((bk, C * f * f), lambda n, kb, i: (kb, 0))]
+    if has_bias:
+        ins.append(jnp.pad(bias, (0, Kp - K))[None, :] if Kp != K
+                   else bias[None, :])
+        in_specs.append(pl.BlockSpec((1, bk), lambda n, kb, i: (0, kb)))
+    if has_res:
+        r = residual.transpose(0, 2, 1, 3)           # (N, oh, K, ow)
+        if Kp != K:
+            r = jnp.pad(r, ((0, 0), (0, 0), (0, Kp - K), (0, 0)))
+        ins.append(r)
+        in_specs.append(pl.BlockSpec((1, 1, bk, ow),
+                                     lambda n, kb, i: (n, i, kb, 0)))
     out = pl.pallas_call(
-        functools.partial(_conv_batch_kernel, stride=stride, f=f, ow=ow),
+        functools.partial(_conv_batch_kernel, stride=stride, f=f, ow=ow,
+                          has_bias=has_bias, has_res=has_res,
+                          relu=fuse and relu),
         grid=grid,
-        in_specs=[row_spec(a) for a in range(f)]
-                 + [pl.BlockSpec((bk, C * f * f), lambda n, kb, i: (kb, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bk, ow), lambda n, kb, i: (n, i, kb, 0)),
         out_shape=jax.ShapeDtypeStruct((N, oh, grid[1] * bk, ow), x.dtype),
         interpret=interpret,
-    )(*([x] * f), wm)
-    return out.transpose(0, 2, 1, 3)[:, :K]
+    )(*ins)
+    out = out.transpose(0, 2, 1, 3)[:, :K]
+    if not fuse:
+        out = _finish(out, bias, residual, relu, channel_axis=1)
+    return out

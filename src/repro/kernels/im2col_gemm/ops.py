@@ -11,16 +11,25 @@ from repro.kernels.im2col_gemm.im2col_gemm import conv_im2col, conv_im2col_batch
 VARIANTS = {"conv-bk64": 64, "conv-bk128": 128, "conv-bk256": 256}
 
 
-@partial(jax.jit, static_argnames=("stride", "variant", "interpret"))
+@partial(jax.jit, static_argnames=("stride", "variant", "interpret", "relu",
+                                   "fuse_store"))
 def conv_im2col_op(x, w, stride: int = 1, variant: str = "conv-bk128",
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, bias=None, residual=None,
+                   relu: bool = False, fuse_store: bool | None = None):
     interp = default_interpret() if interpret is None else interpret
-    return conv_im2col(x, w, stride, bk=VARIANTS[variant], interpret=interp)
+    return conv_im2col(x, w, stride, bk=VARIANTS[variant], bias=bias,
+                       residual=residual, relu=relu, interpret=interp,
+                       fuse_store=fuse_store)
 
 
-@partial(jax.jit, static_argnames=("stride", "variant", "interpret"))
+@partial(jax.jit, static_argnames=("stride", "variant", "interpret", "relu",
+                                   "fuse_store"))
 def conv_im2col_batch_op(x, w, stride: int = 1, variant: str = "conv-bk128",
-                         interpret: bool | None = None):
+                         interpret: bool | None = None, bias=None,
+                         residual=None, relu: bool = False,
+                         fuse_store: bool | None = None):
     """(N, C, H, W) batch through the fused conv — batch grid dimension."""
     interp = default_interpret() if interpret is None else interpret
-    return conv_im2col_batch(x, w, stride, bk=VARIANTS[variant], interpret=interp)
+    return conv_im2col_batch(x, w, stride, bk=VARIANTS[variant], bias=bias,
+                             residual=residual, relu=relu, interpret=interp,
+                             fuse_store=fuse_store)

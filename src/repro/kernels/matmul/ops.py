@@ -26,20 +26,26 @@ VARIANTS: Dict[str, Tuple[int, int, int]] = {
 }
 
 
-@partial(jax.jit, static_argnames=("variant", "interpret"))
-def matmul_op(x, y, variant: str = "mm-128x128x128", interpret: bool | None = None):
+@partial(jax.jit, static_argnames=("variant", "interpret", "relu", "fuse_store"))
+def matmul_op(x, y, variant: str = "mm-128x128x128", interpret: bool | None = None,
+              bias=None, residual=None, relu: bool = False,
+              fuse_store: bool | None = None):
     bm, bk, bn = VARIANTS[variant]
     interp = default_interpret() if interpret is None else interpret
-    return matmul(x, y, bm=bm, bk=bk, bn=bn, interpret=interp)
+    return matmul(x, y, bm=bm, bk=bk, bn=bn, bias=bias, residual=residual,
+                  relu=relu, interpret=interp, fuse_store=fuse_store)
 
 
-@partial(jax.jit, static_argnames=("variant", "interpret"))
+@partial(jax.jit, static_argnames=("variant", "interpret", "relu", "fuse_store"))
 def matmul_batch_op(x, y, variant: str = "mm-128x128x128",
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    bias=None, residual=None, relu: bool = False,
+                    fuse_store: bool | None = None):
     """(B, M, K) @ (B, K, N) with the batch as an explicit grid dimension."""
     bm, bk, bn = VARIANTS[variant]
     interp = default_interpret() if interpret is None else interpret
-    return matmul_batch(x, y, bm=bm, bk=bk, bn=bn, interpret=interp)
+    return matmul_batch(x, y, bm=bm, bk=bk, bn=bn, bias=bias, residual=residual,
+                        relu=relu, interpret=interp, fuse_store=fuse_store)
 
 
 def vmem_bytes(variant: str, dtype_bytes: int = 2) -> int:

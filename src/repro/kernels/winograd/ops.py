@@ -1,5 +1,14 @@
-"""Full Winograd F(2x2,3x3) conv: jnp transforms around the Pallas
-point-GEMM (the compute-bound stage)."""
+"""Full Winograd conv: jnp transforms around the Pallas point-GEMM (the
+compute-bound stage), generic over F(mxm, 3x3) via the shared transform
+sets in ``primitives.conv``.
+
+Epilogues (DESIGN.md §13): bias / residual / ReLU are applied right after
+the inverse transform, inside the same jitted function — they cannot move
+into the point-GEMM kernel (the transform is linear, ReLU is not; the
+kernel's output lives in the transform domain), but fusing them here still
+removes the separate elementwise pass over the activation at the plan
+level.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -16,15 +25,28 @@ VARIANTS = {"wino-128x128": (128, 128), "wino-256x128": (256, 128),
             "wino-128x256": (128, 256)}
 
 
-@partial(jax.jit, static_argnames=("variant", "interpret"))
-def winograd_conv_op(x: jnp.ndarray, w: jnp.ndarray,
-                     variant: str = "wino-128x128",
-                     interpret: bool | None = None) -> jnp.ndarray:
-    """x: (C, H, W); w: (K, C, 3, 3) -> (K, H-2, W-2). Stride 1."""
-    AT, G, BT = (jnp.asarray(a, jnp.float32) for a in _WINO_SETS[(2, 3)])
+def _epilogue(y, bias, residual, relu: bool, channel_axis: int):
+    if bias is not None:
+        shape = [1] * y.ndim
+        shape[channel_axis] = bias.shape[0]
+        y = y + bias.astype(y.dtype).reshape(shape)
+    if residual is not None:
+        y = y + residual.astype(y.dtype)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+@partial(jax.jit, static_argnames=("m", "bk", "bt", "bc", "relu", "interpret"))
+def winograd_conv(x: jnp.ndarray, w: jnp.ndarray, *, m: int = 2,
+                  bk: int = 128, bt: int = 128, bc: int = 128,
+                  bias=None, residual=None, relu: bool = False,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """x: (C, H, W); w: (K, C, 3, 3) -> (K, H-2, W-2). Stride 1, F(mxm,3x3)."""
+    AT, G, BT = (jnp.asarray(a, jnp.float32) for a in _WINO_SETS[(m, 3)])
     C, H, W = x.shape
     K = w.shape[0]
-    m, n = 2, 4
+    n = m + 2
     oh, ow = H - 2, W - 2
     th, tw = -(-oh // m), -(-ow // m)
     ph, pw = (th - 1) * m + n, (tw - 1) * m + n
@@ -36,31 +58,32 @@ def winograd_conv_op(x: jnp.ndarray, w: jnp.ndarray,
         rows.append(jnp.stack(cols, -1))
     tiles = jnp.stack(rows, -2)                               # (C, th, tw, n, n)
     V = jnp.einsum("ap,cijpq,qb->abcij", BT, tiles.astype(jnp.float32), BT.T)
-    V = V.reshape(n * n, C, th * tw)                          # (16, C, T)
+    V = V.reshape(n * n, C, th * tw)                          # (n², C, T)
     U = jnp.einsum("ar,kcrs,sb->abkc", G, w.astype(jnp.float32), G.T)
     U = U.reshape(n * n, K, C)
 
-    bk, bt = VARIANTS[variant]
     interp = default_interpret() if interpret is None else interpret
-    M = winograd_point_gemm(U, V.astype(U.dtype), bk=bk, bt=bt,
-                            interpret=interp)                 # (16, K, T)
+    M = winograd_point_gemm(U, V.astype(U.dtype), bk=bk, bt=bt, bc=bc,
+                            interpret=interp)                 # (n², K, T)
     M = M.reshape(n, n, K, th, tw)
     Y = jnp.einsum("ap,pqkij,qm->kiajm", AT, M, AT.T)         # (K, th, m, tw, m)
-    y = Y.reshape(K, th * m, tw * m)
-    return y[:, :oh, :ow].astype(x.dtype)
+    y = Y.reshape(K, th * m, tw * m)[:, :oh, :ow]
+    y = _epilogue(y, bias, residual, relu, channel_axis=0)
+    return y.astype(x.dtype)
 
 
-@partial(jax.jit, static_argnames=("variant", "interpret"))
-def winograd_conv_batch_op(x: jnp.ndarray, w: jnp.ndarray,
-                           variant: str = "wino-128x128",
-                           interpret: bool | None = None) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("m", "bk", "bt", "bc", "relu", "interpret"))
+def winograd_conv_batch(x: jnp.ndarray, w: jnp.ndarray, *, m: int = 2,
+                        bk: int = 128, bt: int = 128, bc: int = 128,
+                        bias=None, residual=None, relu: bool = False,
+                        interpret: bool | None = None) -> jnp.ndarray:
     """x: (N, C, H, W); w: (K, C, 3, 3) -> (N, K, H-2, W-2). Stride 1.
     Batched transforms around the batch-grid Pallas point-GEMM: U is
     transformed once and shared, only V carries the batch."""
-    AT, G, BT = (jnp.asarray(a, jnp.float32) for a in _WINO_SETS[(2, 3)])
+    AT, G, BT = (jnp.asarray(a, jnp.float32) for a in _WINO_SETS[(m, 3)])
     N, C, H, W = x.shape
     K = w.shape[0]
-    m, n = 2, 4
+    n = m + 2
     oh, ow = H - 2, W - 2
     th, tw = -(-oh // m), -(-ow // m)
     ph, pw = (th - 1) * m + n, (tw - 1) * m + n
@@ -72,15 +95,31 @@ def winograd_conv_batch_op(x: jnp.ndarray, w: jnp.ndarray,
         rows.append(jnp.stack(cols, -1))
     tiles = jnp.stack(rows, -2)                               # (N, C, th, tw, n, n)
     V = jnp.einsum("ap,ncijpq,qb->nabcij", BT, tiles.astype(jnp.float32), BT.T)
-    V = V.reshape(N, n * n, C, th * tw)                       # (N, 16, C, T)
+    V = V.reshape(N, n * n, C, th * tw)                       # (N, n², C, T)
     U = jnp.einsum("ar,kcrs,sb->abkc", G, w.astype(jnp.float32), G.T)
     U = U.reshape(n * n, K, C)
 
-    bk, bt = VARIANTS[variant]
     interp = default_interpret() if interpret is None else interpret
-    M = winograd_point_gemm_batch(U, V.astype(U.dtype), bk=bk, bt=bt,
-                                  interpret=interp)           # (N, 16, K, T)
+    M = winograd_point_gemm_batch(U, V.astype(U.dtype), bk=bk, bt=bt, bc=bc,
+                                  interpret=interp)           # (N, n², K, T)
     M = M.reshape(N, n, n, K, th, tw)
     Y = jnp.einsum("ap,npqkij,qm->nkiajm", AT, M, AT.T)       # (N, K, th, m, tw, m)
-    y = Y.reshape(N, K, th * m, tw * m)
-    return y[:, :, :oh, :ow].astype(x.dtype)
+    y = Y.reshape(N, K, th * m, tw * m)[:, :, :oh, :ow]
+    y = _epilogue(y, bias, residual, relu, channel_axis=1)
+    return y.astype(x.dtype)
+
+
+def winograd_conv_op(x: jnp.ndarray, w: jnp.ndarray,
+                     variant: str = "wino-128x128",
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """x: (C, H, W); w: (K, C, 3, 3) -> (K, H-2, W-2). Stride 1, F(2x2,3x3)."""
+    bk, bt = VARIANTS[variant]
+    return winograd_conv(x, w, m=2, bk=bk, bt=bt, interpret=interpret)
+
+
+def winograd_conv_batch_op(x: jnp.ndarray, w: jnp.ndarray,
+                           variant: str = "wino-128x128",
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """x: (N, C, H, W); w: (K, C, 3, 3) -> (N, K, H-2, W-2). Stride 1."""
+    bk, bt = VARIANTS[variant]
+    return winograd_conv_batch(x, w, m=2, bk=bk, bt=bt, interpret=interpret)

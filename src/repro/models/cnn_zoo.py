@@ -40,7 +40,19 @@ class JoinNode:
     im: int
 
 
-Node = Union[ConvLayer, JoinNode]
+@dataclasses.dataclass(frozen=True)
+class EltwiseLayer:
+    """Elementwise consumer (bias add / ReLU) — a fusion target for the plan
+    compiler's epilogue pass (DESIGN.md §13.2). Like joins, eltwise nodes
+    are virtual PBQP nodes with one choice per data layout; ``kind="bias"``
+    carries a learned (c,) weight vector."""
+    name: str
+    kind: str   # "relu" | "bias"
+    c: int
+    im: int     # spatial size it produces (same as its producer's output)
+
+
+Node = Union[ConvLayer, JoinNode, EltwiseLayer]
 
 
 @dataclasses.dataclass
@@ -66,6 +78,12 @@ class _Builder:
     def conv(self, k, c, im, s, f, prev: Union[int, None, Sequence[int]] = "last", tag="") -> int:
         idx = len(self.nodes)
         self.nodes.append(ConvLayer(f"{self.name}/{tag or 'conv'}{idx}", k, c, im, s, f))
+        self._link(prev, idx)
+        return idx
+
+    def eltwise(self, kind, c, im, prev: Union[int, None, Sequence[int]] = "last", tag="") -> int:
+        idx = len(self.nodes)
+        self.nodes.append(EltwiseLayer(f"{self.name}/{tag or kind}{idx}", kind, c, im))
         self._link(prev, idx)
         return idx
 

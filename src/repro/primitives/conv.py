@@ -413,7 +413,8 @@ def build_registry() -> Dict[str, Primitive]:
     for trav in ("copy", "scan"):
         scan = trav == "scan"
         P.append(_mk(f"im2col-{trav}-ab-ki", "im2", "chw", "chw",
-                     partial(im2col, scan=scan, out_ik=False), trav=trav, order="ki"))
+                     partial(im2col, scan=scan, out_ik=False), trav=trav, order="ki",
+                     epilogue=True))
         P.append(_mk(f"im2col-{trav}-atb-ik", "im2", "chw", "hwc",
                      partial(im2col, scan=scan, out_ik=True), trav=trav, order="ik"))
         P.append(_mk(f"im2col-{trav}-atb-ki", "im2", "chw", "chw", None, trav=trav, order="ki", t="atb"))
@@ -436,11 +437,11 @@ def build_registry() -> Dict[str, Primitive]:
                  partial(winograd1d, m=2, r=3), tile_m=2, tile_n=4, oned=True))
     P.append(_mk("winograd-2-3-vec-4", "wino3", "chw", "chw", None, tile_m=2, tile_n=4, oned=True, vec=4))
     P.append(_mk("winograd-2x2-3x3", "wino3", "chw", "chw",
-                 partial(winograd2d, m=2, r=3), tile_m=2, tile_n=4))
+                 partial(winograd2d, m=2, r=3), tile_m=2, tile_n=4, epilogue=True))
     for v in (4, 8, 16):
         P.append(_mk(f"winograd-2x2-3x3-vec-{v}", "wino3", "chw", "chw", None, tile_m=2, tile_n=4, vec=v))
     P.append(_mk("winograd-4x4-3x3", "wino3", "chw", "chw",
-                 partial(winograd2d, m=4, r=3), tile_m=4, tile_n=6))
+                 partial(winograd2d, m=4, r=3), tile_m=4, tile_n=6, epilogue=True))
     for v in (4, 8, 16):
         P.append(_mk(f"winograd-4x4-3x3-vec-{v}", "wino3", "chw", "chw", None, tile_m=4, tile_n=6, vec=v))
     # --- wino5 (6) ---
@@ -452,7 +453,8 @@ def build_registry() -> Dict[str, Primitive]:
     for v in (4, 8, 16):
         P.append(_mk(f"winograd-2x2-5x5-vec-{v}", "wino5", "chw", "chw", None, tile_m=2, tile_n=6, vec=v))
     # --- conv-1x1 (8) ---
-    P.append(_mk("conv-1x1-gemm-ab-ki", "c1x1", "chw", "chw", partial(conv1x1, ik=False), order="ki"))
+    P.append(_mk("conv-1x1-gemm-ab-ki", "c1x1", "chw", "chw", partial(conv1x1, ik=False), order="ki",
+                 epilogue=True))
     P.append(_mk("conv-1x1-gemm-atb-ik", "c1x1", "hwc", "hwc", partial(conv1x1, ik=True), order="ik"))
     for nm, lay in (("ab-ik", "hwc"), ("abt-ki", "chw"), ("abt-ik", "hwc"),
                     ("atb-ki", "chw"), ("atbt-ik", "hwc"), ("atbt-ki", "chw")):
@@ -499,15 +501,66 @@ def resolve(name: str) -> Primitive:
     return REGISTRY[split_tile(name)[0]]
 
 
+# Base primitives the variant-aware plan lowering (plan.py / primitives.
+# variants) can route through a Pallas kernel. Generic matmul tilings
+# ("mm-*") apply to every GEMM-shaped base: the lowering feeds the base's
+# patch/pointwise/transform GEMM through kernels/matmul with that block
+# config. "conv-bk*" is the fused im2col kernel's K-block — im2col-family
+# (and 1x1, a degenerate f=1 im2col) only. "wino-*" tiles the Winograd
+# point-GEMM — 2-D wino3 bases only. Everything else has no Pallas lowering.
+MM_LOWERABLE_BASES = ("im2col-copy-ab-ki", "im2col-scan-ab-ki",
+                      "conv-1x1-gemm-ab-ki",
+                      "winograd-2x2-3x3", "winograd-4x4-3x3")
+CONVBK_LOWERABLE_BASES = ("im2col-copy-ab-ki", "im2col-scan-ab-ki",
+                          "conv-1x1-gemm-ab-ki")
+WINO_LOWERABLE_BASES = ("winograd-2x2-3x3", "winograd-4x4-3x3")
+
+
+def variant_compatible(base: str, variant: Optional[str]) -> bool:
+    """True iff the plan lowering can execute ``base`` under tile ``variant``
+    (kernel shape constraints consulted — PBQP must never select a tile the
+    lowering would reject at compile time)."""
+    if variant is None:
+        return True
+    p = REGISTRY.get(base)
+    if p is None or p.impl is None:
+        return False
+    # kernel VARIANTS imports are function-scope: kernels/winograd/ops
+    # imports _WINO_SETS from this module at import time
+    if variant.startswith("mm-"):
+        from repro.kernels.matmul.ops import VARIANTS
+        return variant in VARIANTS and base in MM_LOWERABLE_BASES
+    if variant.startswith("conv-bk"):
+        from repro.kernels.im2col_gemm.ops import VARIANTS
+        return variant in VARIANTS and base in CONVBK_LOWERABLE_BASES
+    if variant.startswith("wino-"):
+        from repro.kernels.winograd.ops import VARIANTS
+        return variant in VARIANTS and base in WINO_LOWERABLE_BASES
+    return False
+
+
 def is_runnable(name: str) -> bool:
-    """A tile column is runnable iff its base primitive is."""
+    """A tile column is runnable iff its base primitive is AND the lowering
+    accepts the (base, variant) pair's kernel shape constraints."""
+    base, variant = split_tile(name)
+    if base not in REGISTRY or REGISTRY[base].impl is None:
+        return False
+    return variant is None or variant_compatible(base, variant)
+
+
+def supports_epilogue(name: str) -> bool:
+    """Whether the column's base primitive advertises fused elementwise
+    epilogues (bias / ReLU / residual add applied before HBM writeback)."""
     base, _ = split_tile(name)
-    return base in REGISTRY and REGISTRY[base].impl is not None
+    p = REGISTRY.get(base)
+    return bool(p is not None and p.traits.get("epilogue", False))
 
 
 def tile_columns(bases: Sequence[str], variants: Sequence[str]) -> List[str]:
-    """The (base × tile-variant) cross product as column names."""
-    return [f"{b}{TILE_SEP}{v}" for b in bases for v in variants]
+    """The (base × tile-variant) cross product as column names, filtered to
+    pairs the lowering can actually execute."""
+    return [f"{b}{TILE_SEP}{v}" for b in bases for v in variants
+            if variant_compatible(b, v)]
 
 
 def family_of(name: str) -> str:
@@ -544,6 +597,7 @@ class ColumnTraits:
     in_layout: np.ndarray      # (P,) int8 index into layouts.LAYOUTS
     out_layout: np.ndarray     # (P,) int8 index into layouts.LAYOUTS
     key: np.ndarray            # (P,) uint64 per-column noise-stream key
+    epilogue: np.ndarray       # (P,) bool, fused elementwise epilogue support
 
     def applicable_mask(self, k: np.ndarray, c: np.ndarray, im: np.ndarray,
                         s: np.ndarray, f: np.ndarray) -> np.ndarray:
@@ -583,6 +637,7 @@ def compile_traits(names: Tuple[str, ...]) -> ColumnTraits:
         in_layout=np.array([L.LAYOUTS.index(p.in_layout) for p in prims], np.int8),
         out_layout=np.array([L.LAYOUTS.index(p.out_layout) for p in prims], np.int8),
         key=np.array([name_hash64(n) for n in names], np.uint64),
+        epilogue=np.array([bool(x.get("epilogue", False)) for x in t], bool),
     )
 
 

@@ -23,10 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.cnn_zoo import CNNSpec, ConvLayer, JoinNode
-from repro.primitives.conv import REGISTRY, resolve
+from repro.models.cnn_zoo import CNNSpec, ConvLayer, EltwiseLayer, JoinNode
+from repro.primitives.conv import REGISTRY, resolve, split_tile
 from repro.primitives import layouts as L
 from repro.primitives import plan as P
+from repro.primitives.variants import conv_variant_call
 
 
 # Jitted primitive/DLT callables cached across ``execute`` calls, keyed by
@@ -41,6 +42,20 @@ def clear_jit_cache() -> None:
     _JIT_CACHE.clear()
 
 
+def evict_prim_entries(columns) -> int:
+    """Drop cached primitive callables for the given (full, possibly
+    tile-suffixed) column names — all shapes/strides. Called by the serving
+    layer when a retired (net, generation) leaves columns no live
+    registration uses (DESIGN.md §13.3). Returns the eviction count."""
+    cols = set(columns)
+    if not cols:
+        return 0
+    dead = [k for k in _JIT_CACHE if k[0] == "prim" and k[1] in cols]
+    for k in dead:
+        del _JIT_CACHE[k]
+    return len(dead)
+
+
 def _cached(key: Tuple, make: Callable[[], Callable]) -> Callable:
     fn = _JIT_CACHE.get(key)
     if fn is None:
@@ -53,10 +68,19 @@ def _cached(key: Tuple, make: Callable[[], Callable]) -> Callable:
     return fn
 
 
-def _cached_primitive(prim, x: jnp.ndarray, w: jnp.ndarray, stride: int) -> Callable:
-    key = ("prim", prim.name, x.shape, str(x.dtype), w.shape, stride)
-    impl = prim.impl
-    return _cached(key, lambda: jax.jit(lambda a, b: impl(a, b, stride)))
+def _cached_primitive(column: str, x: jnp.ndarray, w: jnp.ndarray,
+                      stride: int) -> Callable:
+    """Jitted callable for a (possibly tile-suffixed) column name. The FULL
+    column name keys the cache — two tile variants of one base primitive are
+    distinct compiled kernels, and must never share an entry."""
+    base, variant = split_tile(column)
+    prim = REGISTRY[base]
+    key = ("prim", column, x.shape, str(x.dtype), w.shape, stride)
+    if variant is None:
+        impl = prim.impl
+        return _cached(key, lambda: jax.jit(lambda a, b: impl(a, b, stride)))
+    return _cached(key, lambda: jax.jit(
+        lambda a, b: conv_variant_call(prim, variant, a, b, stride)))
 
 
 def _cached_dlt(src: str, dst: str, x: jnp.ndarray) -> Callable:
@@ -82,6 +106,8 @@ def make_weights(spec: CNNSpec, seed: int = 0) -> Dict[int, jnp.ndarray]:
         if isinstance(node, ConvLayer):
             w = rng.standard_normal((node.k, node.c, node.f, node.f)) / (node.f * np.sqrt(node.c))
             out[i] = jnp.asarray(w, jnp.float32)
+        elif isinstance(node, EltwiseLayer) and node.kind == "bias":
+            out[i] = jnp.asarray(rng.standard_normal((node.c,)), jnp.float32)
     return out
 
 
@@ -176,9 +202,22 @@ def _execute_interpreted(spec: CNNSpec, assignment: Dict[int, str],
                 (xin,) = fetch_input(i, prim.in_layout)
             else:
                 xin = L.from_chw(xs[i], prim.in_layout)
-            y, dt = timed(_cached_primitive(prim, xin, weights[i], node.s), xin, weights[i])
+            y, dt = timed(_cached_primitive(assignment[i], xin, weights[i], node.s),
+                          xin, weights[i])
             tensors[i], layouts[i] = y, prim.out_layout
             prim_secs[i] = dt
+        elif isinstance(node, EltwiseLayer):
+            lay = assignment[i]
+            (v,) = fetch_input(i, lay)
+            if node.kind == "relu":
+                y = jnp.maximum(v, 0.0)
+            elif node.kind == "bias":
+                shape = [1, 1, 1]
+                shape[L.C_AXIS[lay]] = node.c
+                y = v + weights[i].reshape(shape)
+            else:
+                raise ValueError(node.kind)
+            tensors[i], layouts[i] = y, lay
         else:
             lay = assignment[i]
             vals = fetch_input(i, lay)

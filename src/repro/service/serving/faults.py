@@ -184,8 +184,14 @@ def validate_output(out, batch: int) -> np.ndarray:
     if arr.ndim < 1 or arr.shape[0] != batch:
         raise CorruptOutput(f"plan returned shape {arr.shape} for a "
                             f"batch of {batch}")
-    if not np.isfinite(arr).all():
+    # A finite sum proves every element finite without materialising the
+    # full isfinite mask (per-dispatch hot path, DESIGN.md §13.3); a
+    # non-finite sum can also be mere overflow of large finite values, so
+    # only then pay for the exact elementwise check.
+    if not np.isfinite(arr.sum(dtype=np.float64)):
         bad = int(np.size(arr) - np.isfinite(arr).sum())
-        raise CorruptOutput(f"plan output contains {bad} non-finite values")
+        if bad:
+            raise CorruptOutput(f"plan output contains {bad} "
+                                f"non-finite values")
     return arr
 

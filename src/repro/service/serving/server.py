@@ -64,6 +64,7 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from repro.service.pipeline import OptimisedNetwork, optimise, reoptimise
@@ -187,6 +188,12 @@ class _NetState:
         default_factory=dict)
     waits: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=4096))
+    # dispatch fast path (DESIGN.md §13.3): preallocated pow2-bucket batch
+    # buffers, reused across dispatches when max_inflight == 1 (a single
+    # in-flight batch per state means the buffer is never concurrently
+    # written). Keyed by bucket size.
+    pad_scratch: Dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def batch_cap(self) -> int:
@@ -292,6 +299,17 @@ class OptimisedServer:
         self.frontend_procs = int(frontend_procs)
         self.frontend_slots = int(frontend_slots)
         self._frontend = None
+        # dispatch fast path (DESIGN.md §13.3): per-generation precompiled
+        # plan handles, (id(opt), id(weights)) -> (opt, weights,
+        # {input shape: bound jitted fn}). Each handle closes over the
+        # weights (constants for the generation's lifetime) so steady-state
+        # dispatch is one single-array jit call — no per-dispatch weights
+        # pytree flatten, no plan-cache key rebuild. opt/weights are pinned
+        # in the value so a live key can never alias recycled ids; entries
+        # drop when the generation retires (hot_swap / re-register /
+        # rollback / unregister)
+        self._plan_handles: Dict[Tuple[int, int],
+                                 Tuple[OptimisedNetwork, Dict, Dict]] = {}
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "OptimisedServer":
@@ -470,6 +488,8 @@ class OptimisedServer:
                 stranded, sgroups = old.queue.drain()
                 state.generation = old.generation + 1
             self._nets[key] = state
+            if old is not None:
+                self._evict_retired_locked(old.opt)
         if old is not None:
             err = f"rejected: {key!r} was re-registered"
             for t in stranded:
@@ -478,6 +498,7 @@ class OptimisedServer:
                 for t in g.tickets:
                     t.finish(error=err, rejected=True)
                 self._notify_done(g, None)
+        self._precompile_plans(opt, state.weights)
         self._drift.reset(key, state.generation,
                           layers=layer_profile(opt))
         self.start()
@@ -502,6 +523,7 @@ class OptimisedServer:
             if route and key in route:
                 route.remove(key)
             stranded, sgroups = state.queue.drain()
+            self._evict_retired_locked(state.opt)
             self._cond.notify_all()
         err = (f"rejected: backend {backend!r} of {net!r} "
                f"was unregistered")
@@ -563,6 +585,7 @@ class OptimisedServer:
                     observed_first=True)
         if not canary:
             self._drift.reset(net, generation, layers=layer_profile(opt))
+            self._precompile_plans(opt, state.weights)
             return True
         # canary outside the lock: the live generation keeps serving while
         # the candidate proves itself (it executes under the CANDIDATE
@@ -577,6 +600,7 @@ class OptimisedServer:
                                      latency_budget_ms=latency_budget_ms)
             generation = state.generation
         self._drift.reset(net, generation, layers=layer_profile(opt))
+        self._precompile_plans(opt, state.weights)
         return True
 
     def _commit_swap_locked(self, state: _NetState, opt: OptimisedNetwork, *,
@@ -589,7 +613,12 @@ class OptimisedServer:
             state.history.append((state.generation, state.opt))
         if latency_budget_ms is not None:
             state.latency_budget_ms = latency_budget_ms
+        outgoing = state.opt
         state.opt = opt
+        # retire the outgoing generation's compiled-plan state (§13.3) —
+        # in-flight batches hold their own opt/weights refs and fall back to
+        # compile_plan, so eviction never breaks an already-claimed dispatch
+        self._evict_retired_locked(outgoing)
         state.fallback_asg = None      # rebuild lazily for the new opt
         pred = opt.predicted_cost_s
         state.queue.batch_cap = self._batch_cap(pred,
@@ -676,6 +705,7 @@ class OptimisedServer:
             generation = state.generation
         self._drift.record_failure(key, bad_generation, "rollback")
         self._drift.reset(key, generation, layers=layer_profile(old_opt))
+        self._precompile_plans(old_opt, state.weights)
         return True
 
     # -- request path ------------------------------------------------------
@@ -923,12 +953,102 @@ class OptimisedServer:
                 self._cond.wait(timeout)
 
     # -- execution ---------------------------------------------------------
+    @staticmethod
+    def _bind_plan(opt: OptimisedNetwork, weights: Dict,
+                   shape: Tuple[int, ...]):
+        """One bound dispatch handle: the compiled plan for ``shape`` with
+        the generation's weights closed over as jit constants and only the
+        served sink returned. The per-call input pytree collapses to a
+        single array — the weights dict is flattened once at trace time,
+        not on every dispatch."""
+        import jax
+        from repro.primitives.plan import compile_plan
+        plan = compile_plan(opt.spec, opt.assignment, shape)
+        src, sink, fn = plan.sources[0], plan.sinks[-1], plan.fn
+        return jax.jit(lambda a: fn({src: a}, weights)[sink])
+
+    def _precompile_plans(self, opt: OptimisedNetwork,
+                          weights: Dict) -> None:
+        """Build AND WARM the per-pow2-bucket bound plan handles for
+        ``opt`` (DESIGN.md §13.3). Each handle is traced and XLA-compiled
+        here — on the register / recalibration thread, never on a
+        dispatch — by running it once on zeros; steady-state ``_run_plan``
+        then resolves its handle with two dict lookups and dispatches one
+        single-array jit call instead of re-keying the global plan cache
+        and re-flattening the weights pytree per batch. Dispatches that
+        arrive before a bucket is warm (or for multi-input specs, which
+        skip the eager pass) fall back to the content-keyed global plan
+        cache, so serving never blocks on handle compilation."""
+        import jax
+        from repro.primitives.plan import source_nodes
+
+        def publish() -> None:
+            # Skip (and drop) if the generation was retired while warming,
+            # so a racing hot_swap/unregister cannot leak handles.
+            with self._cond:
+                if any(st.opt is opt for st in self._nets.values()):
+                    self._plan_handles[(id(opt), id(weights))] = (
+                        opt, weights, dict(handles))
+                else:
+                    self._plan_handles.pop((id(opt), id(weights)), None)
+
+        handles: Dict[Tuple[int, ...], object] = {}
+        try:
+            srcs = source_nodes(opt.spec)
+            if len(srcs) == 1:
+                n0 = opt.spec.nodes[srcs[0]]
+                b, cap = 1, pow2_ceil(max(int(self.max_batch), 1))
+                while b <= cap:
+                    shape = (b, n0.c, n0.im, n0.im)
+                    bound = self._bind_plan(opt, weights, shape)
+                    jax.block_until_ready(bound(np.zeros(shape, np.float32)))
+                    handles[shape] = bound
+                    publish()          # smallest buckets go live first
+                    b *= 2
+        except Exception:
+            publish()
+
+    def _evict_retired_locked(self, old_opt: OptimisedNetwork) -> int:
+        """Drop compiled-plan state for a retired generation (DESIGN.md
+        §13.3): its precompiled handles, its entries in the global plan
+        cache, and executor jit-cache entries for primitive columns no live
+        registration serves any more. Skipped (handles aside) when another
+        live backend still serves the identical (spec, assignment) pair. A
+        later ``rollback`` into a retired generation simply recompiles.
+        Caller holds the lock; returns evicted plan-cache entries."""
+        from repro.primitives.executor import evict_prim_entries
+        from repro.primitives.plan import evict_plans
+        for k in [k for k, v in self._plan_handles.items()
+                  if v[0] is old_opt]:
+            del self._plan_handles[k]
+        for st in self._nets.values():
+            if (st.opt is not old_opt
+                    and st.opt.spec.name == old_opt.spec.name
+                    and st.opt.assignment == old_opt.assignment):
+                return 0
+        n = evict_plans(old_opt.spec, old_opt.assignment)
+        live: set = set()
+        for st in self._nets.values():
+            live.update(st.opt.assignment.values())
+        evict_prim_entries(set(old_opt.assignment.values()) - live)
+        return n
+
     def _run_plan(self, opt: OptimisedNetwork, xs: np.ndarray,
                   weights: Dict) -> np.ndarray:
         """Execute one padded batch through the compiled whole-graph plan.
         Isolated so tests/experiments can wrap it (e.g. to emulate a machine
-        that got slower)."""
-        import jax
+        that got slower). The precompiled bound-handle table is the
+        steady-state path (one single-array jit dispatch); cold shapes,
+        not-yet-warm buckets, and retired or unknown (opt, weights) pairs
+        all fall back to the content-keyed global plan cache — a dispatch
+        never compiles a bound handle."""
+        ent = self._plan_handles.get((id(opt), id(weights)))
+        if ent is not None and ent[0] is opt and ent[1] is weights:
+            bound = ent[2].get(xs.shape)
+            if bound is not None:
+                # np.asarray on the jax output blocks AND copies to host in
+                # one step — no separate block_until_ready round
+                return np.asarray(bound(xs))
         import jax.numpy as jnp
         from repro.primitives.plan import compile_plan
         plan = compile_plan(opt.spec, opt.assignment, xs.shape)
@@ -1071,6 +1191,29 @@ class OptimisedServer:
                     # slab dispatch: the batch is already assembled, padded,
                     # and pow2-bucketed in shared memory — zero copies here
                     xs = batch.xs
+                elif b == 1:
+                    # lone unpadded request: a leading-axis view of the
+                    # ticket's own array — no assembly copy at all (the plan
+                    # copies on device transfer, exactly as a stacked batch
+                    # would be)
+                    xs = np.asarray(tickets[0].x)[None]
+                elif state.max_inflight == 1:
+                    # fast path (DESIGN.md §13.3): assemble into the state's
+                    # preallocated bucket buffer — one write per row, no
+                    # per-dispatch stack/concatenate allocations. Safe only
+                    # with a single in-flight batch per state (the buffer is
+                    # exclusive until this dispatch settles; the plan copies
+                    # it on device transfer before the next claim can write)
+                    row = np.asarray(tickets[0].x)
+                    xs = state.pad_scratch.get(b)
+                    if (xs is None or xs.shape[1:] != row.shape
+                            or xs.dtype != row.dtype):
+                        xs = np.empty((b,) + row.shape, row.dtype)
+                        state.pad_scratch[b] = xs
+                    for j, t in enumerate(tickets):
+                        xs[j] = t.x
+                    if b != take:
+                        xs[take:] = xs[take - 1]
                 else:
                     xs = np.stack([t.x for t in tickets])
                     if b != take:
