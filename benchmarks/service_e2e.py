@@ -22,6 +22,14 @@ the same drifted platform. Profiling cost is made visible by charging each
 repeats × runtime per config; the analytic simulator would otherwise hide
 exactly the cost the served-sample path eliminates).
 
+The fleet_recal row (DESIGN.md §14) runs the recalibration story across two
+hosts sharing one simulated object-store bucket: host A drifts,
+recalibrates from served traffic, and publishes the evidence under the
+platform's pool fingerprint; host B warm-starts everything from the shared
+bucket and hot-swaps a recalibration built from A's pooled evidence alone —
+gated on zero freshly profiled configs for B and byte-identical post-swap
+assignments.
+
 The multibackend row optimises the same net for several backends against
 one artifact store (per-backend selections, checked byte-reproducible on a
 second warm optimise), then serves one request stream three ways: each
@@ -54,7 +62,9 @@ faster than cold, picks a different assignment, concurrent multi-network
 throughput falls below the serial baseline (parity with a 15% noise
 allowance on single-core runners, where the worker pool has no hardware
 to overlap on), the drift recalibration is not
-mostly served-sampled (≥ 50%) and faster than fresh profiling, routed
+mostly served-sampled (≥ 50%) and faster than fresh profiling, the fleet
+row's second host fails to warm-start, profiles any config freshly, or
+diverges from host A's assignment, routed
 multi-backend throughput falls below the best single backend, the
 deadline-aware window misses the budget on the smoke load, or the
 availability row drops below 99% served / loses / duplicates tickets under
@@ -309,18 +319,14 @@ def multibackend_pass(store_root: str, *, net: str, backends, base: str,
             "reproducible_from_store": repro_ok}
 
 
-def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
-                       timeout_s: float = 120.0) -> Dict:
-    """Drift → detect → recalibrate-from-served-traffic → hot_swap, timed
-    against the fresh-profiling alternative on the same drifted platform."""
-    from repro.service import OptimisedServer, make_recalibrator, reoptimise
+def _charged_platform(name: str, charge_s: float, max_triplets: int):
+    """A SimulatedPlatform charging wall-clock per profiled config: a real
+    device pays repeats × runtime for every measurement; the analytic
+    simulator answering instantly would hide the cost §8.5/§14.3
+    eliminate. ``profiled_configs`` counts every freshly measured config."""
     from repro.service.platforms import SimulatedPlatform
 
     class ChargedPlatform(SimulatedPlatform):
-        """Charges wall-clock per profiled config: a real device pays
-        repeats × runtime for every measurement; the analytic simulator
-        answering instantly would hide the cost §8.5 eliminates."""
-
         def __init__(self, name, charge_s, **kw):
             super().__init__(name, **kw)
             self.charge_s = charge_s
@@ -332,6 +338,15 @@ def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
             time.sleep(self.charge_s * len(cfgs))
             return super().profile(cfgs)
 
+    return ChargedPlatform(name, charge_s, max_triplets=max_triplets)
+
+
+def _drifting_server(**kw):
+    """An OptimisedServer whose plan execution slows down by the network
+    platform's ``time_scale`` (sleep proportional to the excess), so
+    observed per-image latency rises exactly like on a slower machine."""
+    from repro.service import OptimisedServer
+
     class DriftingServer(OptimisedServer):
         def _run_plan(self, o, xs, weights):
             out = super()._run_plan(o, xs, weights)
@@ -340,8 +355,17 @@ def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
                 time.sleep(0.02 * xs.shape[0] * (scale - 1.0))
             return out
 
-    platform = ChargedPlatform(opt.platform.name, charge_s,
-                               max_triplets=opt.platform.max_triplets)
+    return DriftingServer(**kw)
+
+
+def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
+                       timeout_s: float = 120.0) -> Dict:
+    """Drift → detect → recalibrate-from-served-traffic → hot_swap, timed
+    against the fresh-profiling alternative on the same drifted platform."""
+    from repro.service import make_recalibrator, reoptimise
+
+    platform = _charged_platform(opt.platform.name, charge_s,
+                                 opt.platform.max_triplets)
     opt = dataclasses.replace(opt, platform=platform)
 
     timing: Dict = {}
@@ -355,7 +379,7 @@ def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
         timing["served_profiled_configs"] = platform.profiled_configs - p0
         return new
 
-    server = DriftingServer(
+    server = _drifting_server(
         max_batch=4, latency_budget_ms=1e9, workers=2, max_wait_ms=3.0,
         drift_threshold=1.5, drift_alpha=0.5, drift_calib_obs=2,
         recalibrate=recalibrate)
@@ -393,6 +417,100 @@ def recalibration_pass(opt, *, sample_n: int, charge_s: float = 0.05,
             "fresh_profiled_configs": platform.profiled_configs - p0,
             "charge_s_per_config": charge_s,
             "drift_ratio_at_stop": st["drift_ratio"]}
+
+
+def fleet_recal_pass(*, net: str, platform: str, max_triplets: int,
+                     max_iters: int, charge_s: float = 0.05,
+                     timeout_s: float = 120.0) -> Dict:
+    """Fleet calibration sharing (DESIGN.md §14): two hosts of the same
+    hardware class share one simulated object-store bucket. Host A
+    optimises cold against it, serves a drifting machine, recalibrates from
+    its own served traffic, and publishes the evidence under the platform's
+    pool fingerprint. Host B warm-starts everything from the shared bucket,
+    never serves a request, polls the pool, and hot-swaps a recalibration
+    built from A's published evidence alone. Both hosts calibrate on the
+    evidence's config coverage (a fresh top-up would defeat the
+    zero-profiling objective), so the gate can require ZERO freshly
+    profiled configs for B — and byte-identical post-swap assignments."""
+    from repro.service import (ArtifactStore, ObjectStoreBackend,
+                               layer_profile, make_recalibrator, optimise)
+
+    shared = ObjectStoreBackend()
+    storeA = ArtifactStore(backend=shared.share())
+    storeB = ArtifactStore(backend=shared.share())
+
+    platformA = _charged_platform(platform, charge_s, max_triplets)
+    t0 = time.perf_counter()
+    optA = optimise(net, platformA, store=storeA, executable=True,
+                    max_iters=max_iters)
+    a_cold_seconds = time.perf_counter() - t0
+    prof = layer_profile(optA)
+    n_cfg = len({tuple(map(int, r)) for r in prof.feats})
+
+    serverA = _drifting_server(
+        max_batch=4, latency_budget_ms=1e9, workers=2, max_wait_ms=3.0,
+        drift_threshold=1.5, drift_alpha=0.5, drift_calib_obs=2,
+        recalibrate=make_recalibrator(store=storeA, sample_n=n_cfg,
+                                      mode="factor", pool=True, host="A"))
+    serverA.register(optA)
+    n0 = optA.spec.nodes[0]
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((4, n0.c, n0.im, n0.im)).astype(np.float32)
+    deadline = time.time() + timeout_s
+    while (serverA.stats(optA.net)["observed_dispatches"] < 6
+           and time.time() < deadline):
+        serverA.serve(optA.net, xs)
+    platformA.time_scale = 4.0
+    platformA.invalidate_datasets()
+    while (serverA.stats(optA.net)["recalibrations"] == 0
+           and time.time() < deadline):
+        serverA.serve(optA.net, xs)
+    stA = serverA.stats(optA.net)
+    with serverA._cond:
+        a_new = serverA._nets[optA.net].opt
+    serverA.stop()
+    published = storeA.drift_entries(platformA.pool_fingerprint())
+
+    # host B: same hardware class, fresh process — everything warm-loads
+    platformB = _charged_platform(platform, charge_s, max_triplets)
+    t0 = time.perf_counter()
+    optB = optimise(net, platformB, store=storeB, executable=True,
+                    max_iters=max_iters)
+    b_warm_seconds = time.perf_counter() - t0
+
+    serverB = _drifting_server(
+        max_batch=4, latency_budget_ms=1e9, workers=2, max_wait_ms=3.0,
+        drift_threshold=1.5, drift_alpha=0.5, drift_calib_obs=2,
+        recalibrate=make_recalibrator(store=storeB, sample_n=n_cfg,
+                                      mode="factor", pool=True, host="B"))
+    serverB.register(optB)
+    p0 = platformB.profiled_configs
+    t0 = time.perf_counter()
+    polled = serverB.poll_pool(storeB, host="B")
+    deadline = time.time() + timeout_s
+    while not serverB.recalibrations_idle() and time.time() < deadline:
+        time.sleep(0.01)
+    b_recal_seconds = time.perf_counter() - t0
+    stB = serverB.stats(optB.net)
+    with serverB._cond:
+        b_new = serverB._nets[optB.net].opt
+    serverB.stop()
+
+    return {"sample_n": n_cfg,
+            "a_cold_seconds": a_cold_seconds,
+            "a_recalibrations": stA["recalibrations"],
+            "a_generation": stA["generation"],
+            "published_entries": len(published),
+            "b_warm": optB.warm,
+            "b_warm_seconds": b_warm_seconds,
+            "b_polled": polled,
+            "b_recalibrations": stB["recalibrations"],
+            "b_recal_seconds": b_recal_seconds,
+            "b_recal_error": stB["last_recal_error"],
+            "b_profiled_configs": platformB.profiled_configs - p0,
+            "b_sample": stB["recal_sample"],
+            "warm_assignments_match": optB.assignment == optA.assignment,
+            "assignments_match": b_new.assignment == a_new.assignment}
 
 
 def deadline_pass(opt, requests: int, budget_ms: float,
@@ -775,6 +893,17 @@ def main() -> int:
              f"(fresh path: {recal['fresh_seconds']:.2f}s for "
              f"{recal['fresh_profiled_configs']} configs)")
 
+        fr = fleet_recal_pass(net=args.net, platform=args.platform,
+                              max_triplets=max_triplets, max_iters=max_iters)
+        emit("service.fleet_recal_us", fr["b_recal_seconds"] * 1e6,
+             f"host B pooled recal {fr['b_recal_seconds']:.2f}s from "
+             f"{fr['published_entries']} published entr"
+             f"{'y' if fr['published_entries'] == 1 else 'ies'}, "
+             f"{fr['b_profiled_configs']} configs profiled "
+             f"(warm-start {'ok' if fr['b_warm'] else 'COLD'} "
+             f"{fr['b_warm_seconds']:.2f}s, assignments "
+             f"{'match' if fr['assignments_match'] else 'DIVERGE'})")
+
         mb = multibackend_pass(root, net=args.net,
                                backends=tuple(args.backends.split(",")),
                                base=args.base, max_triplets=max_triplets,
@@ -848,6 +977,7 @@ def main() -> int:
             "served": served,
             "concurrent_serving": concurrent,
             "recalibration": recal,
+            "fleet_recalibration": fr,
             "multibackend": mb,
             "deadline_batching": deadline,
             "frontend_scaling": fe,
@@ -886,6 +1016,35 @@ def main() -> int:
                 f"served-sample recalibration ({recal['served_seconds']}s) "
                 f"not faster than fresh profiling "
                 f"({recal['fresh_seconds']:.2f}s)")
+        if fr["a_recalibrations"] < 1:
+            failures.append("fleet: host A never hot-swapped from served "
+                            "drift")
+        if fr["published_entries"] < 1:
+            failures.append("fleet: host A published no drift evidence")
+        if not fr["b_warm"]:
+            failures.append("fleet: host B did not warm-start from the "
+                            "shared backend")
+        if not fr["warm_assignments_match"]:
+            failures.append("fleet: host B warm-started a different "
+                            "assignment than host A")
+        if fr["b_polled"] != 1 or fr["b_recalibrations"] != 1:
+            failures.append(
+                f"fleet: host B polled {fr['b_polled']} / hot-swapped "
+                f"{fr['b_recalibrations']} from pooled evidence "
+                f"(expected 1/1, error: {fr['b_recal_error']})")
+        if fr["b_profiled_configs"] != 0:
+            failures.append(f"fleet: host B freshly profiled "
+                            f"{fr['b_profiled_configs']} configs "
+                            f"(expected 0)")
+        if (fr["b_sample"] or {}).get("fresh_rows") != 0:
+            failures.append("fleet: host B's recalibration sample was not "
+                            "pure pooled evidence")
+        if (fr["b_sample"] or {}).get("pooled_sources", 0) < 1:
+            failures.append("fleet: host B's recalibration pulled no "
+                            "pooled datasets")
+        if not fr["assignments_match"]:
+            failures.append("fleet: pooled recalibration selected a "
+                            "different assignment than host A's")
         if mb["routed_vs_best_single"] < 1.0:
             failures.append(
                 f"cross-backend routing only {mb['routed_vs_best_single']:.2f}x "

@@ -99,6 +99,46 @@ class PerfDataset:
                        platform=str(z["platform"]))
 
 
+def merge_served(datasets: Sequence[PerfDataset]) -> Optional[PerfDataset]:
+    """Union several served-traffic datasets (local + fleet-pooled) into one
+    sample for ``compose_sample`` (DESIGN.md §14.3).
+
+    Columns are unioned and sorted; each source's rows embed into the union
+    with NaN for columns it never measured, exactly like a partially
+    applicable profiled row. Row order is source order then within-source
+    order, so merging is deterministic for deterministic inputs and the
+    merged fingerprint is stable across hosts that pooled the same
+    evidence. ``served_info`` summarises the pool (sources, per-source row
+    counts, summed dispatches)."""
+    datasets = [d for d in datasets if d is not None and d.n]
+    if not datasets:
+        return None
+    if len({d.platform for d in datasets}) != 1:
+        raise ValueError("merge_served: mixed platforms "
+                         f"{sorted({d.platform for d in datasets})}")
+    feature_names = list(datasets[0].feature_names)
+    columns = sorted(set().union(*(d.columns for d in datasets)))
+    col_idx = {c: j for j, c in enumerate(columns)}
+    feats, times = [], []
+    for d in datasets:
+        if list(d.feature_names) != feature_names:
+            raise ValueError("merge_served: mismatched feature names")
+        block = np.full((d.n, len(columns)), np.nan)
+        for j, c in enumerate(d.columns):
+            block[:, col_idx[c]] = d.times[:, j]
+        feats.append(np.asarray(d.feats, np.float64))
+        times.append(block)
+    out = PerfDataset(np.concatenate(feats), np.concatenate(times),
+                      columns, feature_names, datasets[0].platform)
+    infos = [getattr(d, "served_info", None) or {} for d in datasets]
+    out.served_info = {
+        "sources": len(datasets),
+        "rows": [int(d.n) for d in datasets],
+        "dispatches": int(sum(i.get("dispatches", 0) for i in infos)),
+    }
+    return out
+
+
 def observations_to_dataset(feats: np.ndarray,
                             assigned: Sequence[str],
                             bucket_times: Sequence[Tuple[int, np.ndarray]],
@@ -107,7 +147,10 @@ def observations_to_dataset(feats: np.ndarray,
                             platform: str,
                             feature_names: Sequence[str] = ("k", "c", "im",
                                                             "s", "f"),
-                            info: Optional[Dict] = None) -> PerfDataset:
+                            info: Optional[Dict] = None,
+                            probes: Optional[Sequence[Tuple[np.ndarray, str,
+                                                            float]]] = None
+                            ) -> PerfDataset:
     """Fold served-dispatch attributions into a ``PerfDataset`` the
     calibration path can consume (DESIGN.md §8.5).
 
@@ -129,6 +172,12 @@ def observations_to_dataset(feats: np.ndarray,
     ``platforms.compose_sample`` and the recalibration report — can surface
     the batch-shape mix the served sample was drawn from. It is metadata
     only: ``save``/``load`` does not persist it.
+
+    ``probes`` are single-layer probe-dispatch measurements (DESIGN.md
+    §14.4): ``(config_row, column, seconds)`` triples appended as their own
+    rows after the bucket rows, sorted by (config, column) — each probe
+    measured one column directly, so its row carries exactly one finite
+    entry. Probe columns must already be in ``columns``.
     """
     feats = np.asarray(feats, np.float64)
     assigned = list(assigned)
@@ -158,12 +207,27 @@ def observations_to_dataset(feats: np.ndarray,
         for key in sorted(rows):
             out_feats.append(np.asarray(key, np.float64))
             out_times.append(rows[key])
+    probe_rows = []
+    for cfg, col, seconds in (probes or ()):
+        cfg = np.asarray(cfg, np.float64).reshape(-1)
+        if cfg.shape != (feats.shape[1] if feats.size else len(cfg),):
+            raise ValueError(f"probe config shape {cfg.shape}")
+        if col not in col_idx:
+            raise ValueError(f"probe column {col!r} not in dataset columns")
+        probe_rows.append((tuple(cfg), col, float(seconds)))
+    for cfg, col, seconds in sorted(probe_rows, key=lambda p: (p[0], p[1])):
+        row = np.full(len(columns), np.nan)
+        row[col_idx[col]] = seconds
+        out_feats.append(np.asarray(cfg, np.float64))
+        out_times.append(row)
     if not out_feats:
         raise ValueError("no observations to convert")
     ds = PerfDataset(np.stack(out_feats), np.stack(out_times),
                      columns, list(feature_names), platform)
-    if info is not None:
-        ds.served_info = dict(info)
+    if info is not None or probe_rows:
+        ds.served_info = dict(info or {})
+        if probe_rows:
+            ds.served_info["probes"] = len(probe_rows)
     return ds
 
 

@@ -14,6 +14,9 @@ observe → recalibrate pipeline as a subsystem instead of per-script glue.
 from repro.service.artifacts import ArtifactStore, digest
 from repro.service.pipeline import (OptimisedNetwork, optimise, reoptimise,
                                     safe_assignment)
+from repro.service.store_backends import (BackendError, LocalDirBackend,
+                                          ObjectStoreBackend, ScriptedFaults,
+                                          StoreBackend, get_backend)
 from repro.service.platforms import (HostPlatform, PallasPlatform, Platform,
                                      PlatformModels, SimulatedPlatform,
                                      get_platform, host_machine_id)
@@ -26,14 +29,15 @@ from repro.service.serving import (BatchGroup, CircuitBreaker,
                                    layer_profile, make_recalibrator)
 
 __all__ = [
-    "ArtifactStore", "digest",
+    "ArtifactStore", "BackendError", "digest",
     "BatchGroup", "CircuitBreaker", "CorruptOutput",
     "DriftMonitor", "DriftStats", "Fault", "FaultError", "FaultInjector",
-    "HostPlatform", "LayerProfile", "NetQueue",
+    "HostPlatform", "LayerProfile", "LocalDirBackend", "NetQueue",
+    "ObjectStoreBackend",
     "OptimisedNetwork", "OptimisedServer", "PallasPlatform", "Platform",
-    "PlatformModels", "ProcessFrontend",
+    "PlatformModels", "ProcessFrontend", "ScriptedFaults",
     "ServedObservation", "SimulatedPlatform", "SlabHandle", "SlabPool",
-    "Ticket", "WorkerPool",
-    "get_platform", "host_machine_id", "layer_profile", "make_recalibrator",
-    "optimise", "reoptimise", "safe_assignment",
+    "StoreBackend", "Ticket", "WorkerPool",
+    "get_backend", "get_platform", "host_machine_id", "layer_profile",
+    "make_recalibrator", "optimise", "reoptimise", "safe_assignment",
 ]

@@ -187,6 +187,7 @@ def reoptimise(opt: OptimisedNetwork,
                *,
                sample=None,
                served=None,
+               pooled=None,
                sample_n: int = 16,
                budget: float = 0.05,
                mode: str = "auto",
@@ -210,6 +211,11 @@ def reoptimise(opt: OptimisedNetwork,
     does not cover. The composition mix lands in
     ``result.models.sample_info``.
 
+    ``pooled``: other hosts' published served-traffic datasets for the
+    same platform fingerprint (``ArtifactStore.pooled_drift``) — merged
+    with ``served`` so a host recalibrates from fleet evidence without
+    profiling anything itself (DESIGN.md §14.3).
+
     ``executable``: None infers it from ``opt`` (a selection restricted to
     fewer columns than its models was an ``executable=True`` optimise).
     """
@@ -219,8 +225,8 @@ def reoptimise(opt: OptimisedNetwork,
     iters = {} if max_iters is None else {"max_iters": max_iters}
     models = opt.platform.calibrate(opt.models, budget, mode=mode,
                                     sample=sample, served=served,
-                                    sample_n=sample_n, store=store, seed=seed,
-                                    **iters)
+                                    pooled=pooled, sample_n=sample_n,
+                                    store=store, seed=seed, **iters)
     if executable is None:
         executable = list(opt.columns) != list(opt.models.prim.columns)
     return optimise(opt.spec, opt.platform, models=models, store=store,

@@ -101,6 +101,16 @@ class Platform(abc.ABC):
     def fingerprint(self) -> str:
         """Stable identity for artifact keys (config, not measurements)."""
 
+    def pool_fingerprint(self) -> str:
+        """Drift-invariant hardware identity for fleet calibration pooling
+        (DESIGN.md §14.3). ``fingerprint()`` may deliberately move when the
+        platform drifts (so post-drift calibration artifacts do not collide
+        with pre-drift addresses); the pool key must NOT move, or a drifted
+        host would publish evidence its healthy peers never find. Platforms
+        whose fingerprint encodes drift state override this to return the
+        stable part."""
+        return self.fingerprint()
+
     def base_column(self, column: str) -> str:
         """Map one of this platform's columns onto the base-registry
         primitive a foreign base model would know it as. Identity for plain
@@ -164,7 +174,7 @@ class Platform(abc.ABC):
 
     def calibrate(self, base: Union[PerfModel, PlatformModels],
                   budget: float = 0.01, *, mode: str = "auto", store=None,
-                  sample=None, served=None, sample_n: int = 16,
+                  sample=None, served=None, pooled=None, sample_n: int = 16,
                   seed: int = 0, max_iters: int = 2000,
                   patience: int = 150, dlt_kind: str = "lin",
                   dlt_max_iters: int = 1500) -> PlatformModels:
@@ -190,14 +200,37 @@ class Platform(abc.ABC):
         Served rows only measure assigned primitives, so "auto" resolves to
         factor correction with the pooled factor extended to unmeasured
         columns (``factor_correct(fill_missing=True)``).
+
+        ``pooled``: fleet evidence — other hosts' published served-traffic
+        datasets for this platform fingerprint
+        (``ArtifactStore.pooled_drift``, DESIGN.md §14.3). Merged with
+        ``served`` via ``merge_served`` before composition, so a host that
+        observed nothing itself still calibrates from what the fleet saw.
+        Deterministic: the merged sample's fingerprint keys the artifact,
+        so two hosts pooling identical evidence warm-load byte-identical
+        corrected models.
         """
         t0 = time.perf_counter()
         sample_info = None
+        pooled = [d for d in (pooled or []) if d is not None and d.n]
+        if pooled:
+            if sample is not None:
+                raise ValueError("pass either sample= or pooled=, not both")
+            from repro.profiler.dataset import merge_served
+            merged = merge_served([served, *pooled] if served is not None
+                                  else pooled)
+            pool_info = {"pooled_sources": len(pooled),
+                         "pooled_rows": int(sum(d.n for d in pooled))}
+            served = merged
+        else:
+            pool_info = None
         if served is not None:
             if sample is not None:
                 raise ValueError("pass either sample= or served=, not both")
             sample, sample_info = self.compose_sample(served, n=sample_n,
                                                       seed=seed)
+            if pool_info:
+                sample_info.update(pool_info)
             if mode == "auto":
                 # finetune on rows that are NaN outside the assigned columns
                 # would re-initialise every unmeasured head; the factor path
@@ -479,10 +512,15 @@ class SimulatedPlatform(Platform):
         return SimulatedProvider(self.name, noisy=self.noisy)
 
     def fingerprint(self) -> str:
-        fp = f"sim/{self.name}/noisy={int(self.noisy)}/mt={self.max_triplets}"
+        fp = self.pool_fingerprint()
         if self.time_scale != 1.0:        # keep pre-drift addresses stable
             fp += f"/ts={self.time_scale:g}"
         return fp
+
+    def pool_fingerprint(self) -> str:
+        # drift (time_scale) moves the artifact fingerprint, not the machine
+        # identity — fleet pooling keys off the stable part (§14.3)
+        return f"sim/{self.name}/noisy={int(self.noisy)}/mt={self.max_triplets}"
 
 
 class PallasPlatform(Platform):

@@ -104,6 +104,12 @@ class DriftStats:
         default_factory=lambda: deque(maxlen=512))
     window_scale: float = 1.0
     waits_since_adjust: int = 0
+    # probe-dispatch telemetry (DESIGN.md §14.4): per (config, column) the
+    # EW mean clamped log(observed/predicted), observation count, and the
+    # model's predicted per-image seconds. Kept OUTSIDE the dispatch buffer
+    # so probes never feed excursion detection or BucketScaleHead fitting.
+    probes: Dict[Tuple[Tuple[float, ...], str], Tuple[float, int, float]] = \
+        dataclasses.field(default_factory=dict)
 
     def ratio(self) -> float:
         """Current drift ratio: 1.0 = serving exactly as calibrated."""
@@ -292,6 +298,67 @@ class DriftMonitor:
                           for b in sorted(by_bucket)}}
         return layers.feats, layers.columns, rows, info
 
+    # -- probe-dispatch telemetry (DESIGN.md §14.4) ------------------------
+    def layer_profile(self, net: str) -> Optional[LayerProfile]:
+        """The current generation's attribution profile — the server's probe
+        scheduler draws (config, column) targets from it."""
+        with self._lock:
+            s = self._stats.get(net)
+            return s.layers if s is not None else None
+
+    def record_probe(self, net: str, generation: int, config, column: str,
+                     observed_s: float, predicted_s: float) -> bool:
+        """Feed one single-layer probe dispatch's (observed, predicted)
+        per-image runtimes for ``(config, column)``.
+
+        Probes live in their own per-key EW store, deliberately outside the
+        dispatch buffer: they must never feed excursion detection, the
+        served-latency accounting, or ``BucketScaleHead`` fitting — their
+        sole consumer is ``probe_attributed``, which turns them into
+        calibration rows that correct *relative* primitive costs. Clamped
+        against the calibration reference like any observation. Returns
+        False for stale generations or non-finite timings."""
+        if (not math.isfinite(observed_s) or observed_s <= 0.0
+                or not math.isfinite(predicted_s) or predicted_s <= 0.0):
+            return False
+        with self._lock:
+            s = self._stats.get(net)
+            if s is None or s.generation != generation:
+                return False
+            log_r = math.log(observed_s / predicted_s)
+            log_r = min(max(log_r, s.ref_log - self.clamp),
+                        s.ref_log + self.clamp)
+            key = (tuple(float(v) for v in np.asarray(config).reshape(-1)),
+                   column)
+            prev = s.probes.get(key)
+            if prev is None:
+                s.probes[key] = (log_r, 1, float(predicted_s))
+            else:
+                ew, n, _ = prev
+                s.probes[key] = (ew + self.obs_alpha * (log_r - ew), n + 1,
+                                 float(predicted_s))
+            return True
+
+    def probe_attributed(self, net: str
+                         ) -> Optional[Tuple[List[Tuple[np.ndarray, str,
+                                                        float]], Dict]]:
+        """Per-(config, column) probe measurements in the model's prediction
+        scale: ``predicted * exp(ew - ref)`` — direct single-column rows for
+        ``observations_to_dataset(probes=...)``. Deterministically ordered
+        by (config, column). None when no probes were recorded."""
+        with self._lock:
+            s = self._stats.get(net)
+            if s is None or not s.probes:
+                return None
+            ref = s.ref_log
+            snap = dict(s.probes)
+        rows = [(np.asarray(cfg, np.float64), col,
+                 pred * math.exp(ew - ref))
+                for (cfg, col), (ew, n, pred) in sorted(snap.items())]
+        info = {"probes": int(sum(n for _, n, _ in snap.values())),
+                "probe_keys": len(snap)}
+        return rows, info
+
     # -- deadline telemetry: queueing p99 vs budget ------------------------
     def observe_wait(self, net: str, generation: int, wait_s: float,
                      budget_s: Optional[float]) -> Optional[float]:
@@ -337,7 +404,7 @@ class DriftMonitor:
         "corrupt" (output validation), "deadline" (supervisor abandoned a
         hung dispatch), "died" (worker thread died mid-dispatch), "canary"
         (candidate rejected by the swap gate), "rollback" (auto-rollback
-        fired)."""
+        fired), "probe" (a single-layer probe dispatch failed)."""
         with self._lock:
             gens = self._failures.setdefault(net, {})
             kinds = gens.setdefault(int(generation), {})

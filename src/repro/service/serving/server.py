@@ -59,6 +59,7 @@ import argparse
 import dataclasses
 import inspect
 import itertools
+import math
 import threading
 import time
 from collections import deque
@@ -80,6 +81,11 @@ from repro.service.serving.workers import WorkerPool
 # once this many clean observations are buffered, refit every this many more
 BUCKET_MIN_OBS = 8
 BUCKET_REFRESH_EVERY = 8
+
+
+class ProbeUnsupported(Exception):
+    """The probe target's column cannot execute on this host (simulated-only
+    primitive) — the probe is skipped, not counted as a failure."""
 
 
 def layer_profile(opt: OptimisedNetwork) -> Optional[LayerProfile]:
@@ -194,6 +200,15 @@ class _NetState:
     # written). Keyed by bucket size.
     pad_scratch: Dict[int, np.ndarray] = dataclasses.field(
         default_factory=dict)
+    # probe dispatches (DESIGN.md §14.4): rate-limited single-layer
+    # measurements correcting relative primitive costs in the pooled sample
+    probes: int = 0                    # probes measured successfully
+    probe_failures: int = 0            # probes that raised / were faulted
+    last_probe_s: float = -math.inf    # rate-limit clock, server lock held
+    probe_rr: int = 0                  # round-robin layer cursor
+    # drift-pool manifests already acted on by poll_pool (per-state so a
+    # re-register naturally re-pulls the fleet's evidence)
+    pool_seen: set = dataclasses.field(default_factory=set)
 
     @property
     def batch_cap(self) -> int:
@@ -233,6 +248,7 @@ class OptimisedServer:
                  bucket_cost_model: bool = True,
                  frontend_procs: int = 0,
                  frontend_slots: int = 16,
+                 probe_rate: float = 0.0,
                  clock: Optional[Callable[[], float]] = None):
         """Fault-tolerance knobs (DESIGN.md §11): ``exec_deadline_ms`` is the
         per-dispatch execution deadline the worker supervisor enforces (None
@@ -253,7 +269,16 @@ class OptimisedServer:
         instead of assumed linear. ``frontend_procs`` > 0 enables the
         process front end (``frontend()``): intake processes assemble
         request batches in shared-memory slabs and hand them to the worker
-        pool by reference (requires ``workers`` >= 1)."""
+        pool by reference (requires ``workers`` >= 1).
+
+        ``probe_rate`` (DESIGN.md §14.4) > 0 enables rate-limited
+        single-layer probe dispatches: at most ``probe_rate`` probes per
+        second (per state), piggybacked after clean dispatches, measuring
+        one assigned (config, primitive) directly so pooled calibration
+        data corrects *relative* primitive costs rather than just the
+        common scale. Probes ride the fault-injection contract but never
+        enter the queue — they are excluded from served-latency accounting
+        and from the bucket-scale head by construction."""
         self.max_batch = max_batch
         self.latency_budget_ms = latency_budget_ms
         self.max_wait_ms = max_wait_ms
@@ -298,6 +323,9 @@ class OptimisedServer:
                 "has no concurrent consumer")
         self.frontend_procs = int(frontend_procs)
         self.frontend_slots = int(frontend_slots)
+        if probe_rate < 0:
+            raise ValueError(f"probe_rate must be >= 0, got {probe_rate}")
+        self.probe_rate = float(probe_rate)
         self._frontend = None
         # dispatch fast path (DESIGN.md §13.3): per-generation precompiled
         # plan handles, (id(opt), id(weights)) -> (opt, weights,
@@ -1260,6 +1288,8 @@ class OptimisedServer:
                     self._schedule_recalibration(batch.net, batch.generation)
                 if clean_timing and self.bucket_cost_model:
                     self._refresh_bucket_head(batch.net, state)
+                if clean_timing and self.probe_rate > 0:
+                    self._maybe_probe(batch)
                 return
             self._drift.record_failure(batch.net, batch.generation,
                                        kind or "error")
@@ -1339,6 +1369,106 @@ class OptimisedServer:
                                         else None)
             state.queue.batch_cap = self._bucket_batch_cap_locked(state)
 
+    # -- probe dispatches (DESIGN.md §14.4) --------------------------------
+    def _maybe_probe(self, batch: _Batch) -> None:
+        """Rate-limited single-layer probe, piggybacked after a clean
+        dispatch on the same worker thread. At most one probe per
+        ``1/probe_rate`` seconds per state; targets round-robin over the
+        generation's attribution profile. Probes run under the fault
+        injector (the §11 contract covers them) but never enter the queue
+        — no ticket, no wait sample, no drift-buffer entry — so served
+        latency percentiles and the bucket-scale head cannot see them."""
+        state = batch.state
+        interval = 1.0 / self.probe_rate
+        now = self._clock()
+        with self._cond:
+            if (self._nets.get(batch.net) is not state
+                    or state.generation != batch.generation
+                    or now - state.last_probe_s < interval):
+                return
+            state.last_probe_s = now
+            idx = state.probe_rr
+            state.probe_rr += 1
+        layers = self._drift.layer_profile(batch.net)
+        if layers is None or not len(layers.columns):
+            return
+        i = idx % len(layers.columns)
+        cfg = layers.feats[i]
+        col = layers.columns[i]
+        pred = float(layers.predicted[i])
+        try:
+            if self._faults is not None:
+                obs = self._faults.run(batch.net, batch.generation,
+                                       lambda: self._run_probe(batch.opt,
+                                                               cfg, col))
+            else:
+                obs = self._run_probe(batch.opt, cfg, col)
+            obs = float(obs)
+            if not (np.isfinite(obs) and obs > 0):
+                raise ValueError(f"probe measured {obs!r}")
+        except ProbeUnsupported:
+            return                     # column not runnable here: skip, not
+        except Exception:              # a failure — the cursor advanced
+            with self._cond:
+                state.probe_failures += 1
+            self._drift.record_failure(batch.net, batch.generation, "probe")
+            return
+        if self._drift.record_probe(batch.net, batch.generation, cfg, col,
+                                    obs, pred):
+            with self._cond:
+                state.probes += 1
+
+    def _run_probe(self, opt: OptimisedNetwork, config, column: str) -> float:
+        """Measure one (config, primitive) directly: run the column's kernel
+        on a synthetic single image, timing a warmed second call. Returns
+        per-image seconds. Isolated so tests (and simulated-platform
+        harnesses) can substitute their own measurement."""
+        from repro.primitives.conv import is_runnable, run_primitive
+        if not is_runnable(column):
+            raise ProbeUnsupported(column)
+        k, c, im, s, f = (int(v) for v in np.asarray(config).reshape(-1))
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((c, im, im)).astype(np.float32)
+        w = rng.standard_normal((k, c, f, f)).astype(np.float32)
+        jax.block_until_ready(run_primitive(column, x, w, s))   # warm/compile
+        t0 = self._clock()
+        jax.block_until_ready(run_primitive(column, x, w, s))
+        return self._clock() - t0
+
+    def poll_pool(self, store, *, host: Optional[str] = None) -> int:
+        """Check the shared store for fleet drift evidence this server has
+        not yet acted on (DESIGN.md §14.3): for each registered state whose
+        platform fingerprint has fresh ``drift_pool`` entries from *other*
+        hosts, schedule one background recalibration — the recalibrator
+        (built with ``make_recalibrator(pool=True)``) pulls the pooled
+        datasets itself. Returns how many recalibrations were scheduled.
+        Callers drive this on their own cadence (a timer, the CLI, tests);
+        a faulty backend read skips the poll, never the serving path."""
+        scheduled = 0
+        with self._cond:
+            items = list(self._nets.items())
+        for key, state in items:
+            platform = state.opt.platform
+            if platform is None:
+                continue
+            try:
+                entries = store.drift_entries(platform.pool_fingerprint(),
+                                              exclude_host=host)
+            except OSError:
+                continue
+            fresh = [m for m in entries
+                     if m.get("key") not in state.pool_seen]
+            if not fresh:
+                continue
+            with self._cond:
+                if self._nets.get(key) is not state:
+                    continue
+                state.pool_seen.update(m.get("key") for m in fresh)
+                gen = state.generation
+            self._schedule_recalibration(key, gen)
+            scheduled += 1
+        return scheduled
+
     # -- drift-triggered recalibration ------------------------------------
     def served_sample(self, net: str):
         """The buffered served observations attributed to layer configs, as
@@ -1346,19 +1476,31 @@ class OptimisedServer:
         None when nothing attributable was served (§8.5). The dataset
         carries the attribution summary (dispatches, per-bucket counts and
         drift) as ``served_info`` so recalibration reports can surface the
-        batch-shape mix the sample was drawn from."""
+        batch-shape mix the sample was drawn from. Probe-dispatch
+        measurements (§14.4), when any were recorded, ride along as their
+        own single-column rows."""
         att = self._drift.attributed(net)
-        if att is None:
+        pro = self._drift.probe_attributed(net)
+        if att is None and pro is None:
             return None
-        feats, cols, bucket_rows, info = att
+        if att is not None:
+            feats, cols, bucket_rows, info = att
+        else:
+            layers = self._drift.layer_profile(net)
+            width = layers.feats.shape[1] if layers is not None else 5
+            feats = np.empty((0, width), np.float64)
+            cols, bucket_rows, info = (), [], {}
+        probe_rows, probe_info = pro if pro is not None else ([], {})
+        info = {**info, **probe_info}
         with self._cond:
             state = self._nets.get(net)
             platform = state.opt.platform if state is not None else None
         from repro.profiler.dataset import observations_to_dataset
+        columns = sorted(set(cols) | {c for _, c, _ in probe_rows})
         return observations_to_dataset(
-            feats, cols, bucket_rows, columns=sorted(set(cols)),
+            feats, cols, bucket_rows, columns=columns,
             platform=platform.name if platform is not None else "served",
-            info=info)
+            info=info, probes=probe_rows or None)
 
     def _schedule_recalibration(self, net: str, generation: int) -> None:
         if self._recalibrate is None:
@@ -1513,7 +1655,10 @@ class OptimisedServer:
                 "fallback_images": s.fallback_images,
                 "canary_rejected": s.canary_rejected,
                 "last_canary": s.last_canary,
-                "rollbacks": s.rollbacks}
+                "rollbacks": s.rollbacks,
+                # probe dispatches (DESIGN.md §14.4)
+                "probes": s.probes,
+                "probe_failures": s.probe_failures}
 
     def stats(self, net: str) -> Dict:
         """Serving stats for ``net`` — a state key or a logical name. A
@@ -1538,7 +1683,8 @@ class OptimisedServer:
                     "inflight", "recalibrations", "observed_dispatches",
                     "retries", "failed_dispatches", "failed_tickets",
                     "fallback_dispatches", "fallback_images",
-                    "canary_rejected", "rollbacks"):
+                    "canary_rejected", "rollbacks", "probes",
+                    "probe_failures"):
             out[fld] = sum(per[k][fld] for k in keys)
         failures: Dict[str, int] = {}
         for k in keys:
@@ -1596,7 +1742,9 @@ def make_recalibrator(*, store=None, sample_n: int = 16, mode: str = "factor",
                       budget: Optional[float] = None,
                       max_iters: Optional[int] = None,
                       seed: int = 0,
-                      use_served: bool = True) -> Callable:
+                      use_served: bool = True,
+                      pool: bool = False,
+                      host: Optional[str] = None) -> Callable:
     """Default drift-recalibration policy (DESIGN.md §8.3/§8.5). With
     ``use_served`` (default) the server's buffered served observations form
     the calibration sample, freshly measuring only the configs the buffer
@@ -1611,16 +1759,38 @@ def make_recalibrator(*, store=None, sample_n: int = 16, mode: str = "factor",
     a plain budgeted re-calibration against the platform's (cached) dataset
     — no ``measure_sample``, no served sample. Use it when the platform's
     profiling pool is cheap/trusted and drift triggers should simply re-run
-    the §4.4 transfer at that budget."""
+    the §4.4 transfer at that budget.
+
+    ``pool`` (DESIGN.md §14.3, needs ``store``) joins the fleet: every
+    recalibration first *publishes* this host's served evidence under the
+    platform fingerprint (best-effort — a flaky backend costs the fleet the
+    evidence, never the local recalibration), then pulls the other hosts'
+    newest pooled datasets and calibrates from local + fleet samples. A
+    host with no local observations (woken by ``poll_pool``) recalibrates
+    from fleet evidence alone, profiling nothing. ``host`` names this
+    machine in the pool (see ``platforms.host_machine_id``)."""
     counter = itertools.count()
 
     def recalibrate(opt: OptimisedNetwork,
                     served=None) -> OptimisedNetwork:
         k = next(counter)
-        if use_served and served is not None and budget is None:
-            return reoptimise(opt, served=served, sample_n=sample_n,
-                              mode=mode, store=store, seed=seed + k,
-                              max_iters=max_iters)
+        pooled = None
+        if pool and store is not None and opt.platform is not None:
+            fp = opt.platform.pool_fingerprint()
+            if served is not None and host is not None:
+                try:
+                    store.publish_drift(fp, served, host=host, net=opt.net)
+                except OSError:
+                    pass
+            try:
+                pooled = store.pooled_drift(fp, exclude_host=host) or None
+            except OSError:
+                pooled = None
+        if (use_served and budget is None
+                and (served is not None or pooled)):
+            return reoptimise(opt, served=served, pooled=pooled,
+                              sample_n=sample_n, mode=mode, store=store,
+                              seed=seed + k, max_iters=max_iters)
         sample = (opt.platform.measure_sample(sample_n, seed=seed + k)
                   if budget is None else None)
         return reoptimise(opt, sample=sample,
@@ -1655,6 +1825,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="calibration sample budget (fraction or row count)")
     ap.add_argument("--store", default="artifacts",
                     help="artifact store root ('' disables warm-start)")
+    ap.add_argument("--store-backend", choices=("local", "object"),
+                    default="local",
+                    help="artifact-store backend: 'local' (directory at "
+                         "--store) or 'object' (in-process simulated object "
+                         "store — the fleet-sharing demo backend; DESIGN.md "
+                         "§14.1)")
+    ap.add_argument("--pool-drift", action="store_true",
+                    help="fleet calibration pooling (DESIGN.md §14.3): "
+                         "publish this host's served drift evidence to the "
+                         "store under the platform fingerprint and fold the "
+                         "fleet's pooled datasets into every drift "
+                         "recalibration")
+    ap.add_argument("--probe-rate", type=float, default=0.0,
+                    help="max single-layer probe dispatches per second "
+                         "(0 disables): rate-limited direct measurements of "
+                         "assigned (config, primitive) pairs that correct "
+                         "relative primitive costs in the pooled sample "
+                         "(DESIGN.md §14.4)")
     ap.add_argument("--keep", type=int, default=None,
                     help="artifact GC: keep only the newest K artifacts per "
                          "category after each put (default: keep all)")
@@ -1745,9 +1933,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     from repro.service.artifacts import ArtifactStore
-    from repro.service.platforms import get_platform
+    from repro.service.platforms import get_platform, host_machine_id
+    from repro.service.store_backends import get_backend
 
-    store = ArtifactStore(args.store, keep=args.keep) if args.store else None
+    store = (ArtifactStore(args.store, keep=args.keep,
+                           backend=get_backend(args.store_backend,
+                                               args.store))
+             if args.store else None)
+    pool_host = host_machine_id() if args.pool_drift else None
     specs = ([s.strip() for s in args.backends.split(",") if s.strip()]
              if args.backends else [args.platform])
     routed = len(specs) > 1
@@ -1803,10 +1996,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                              rollback_history=args.rollback_history,
                              bucket_cost_model=not args.no_bucket_cost_model,
                              frontend_procs=args.frontend_procs,
+                             probe_rate=args.probe_rate,
                              recalibrate=make_recalibrator(
                                  store=store,
                                  sample_n=args.recal_sample_n,
-                                 use_served=not args.no_served_reuse))
+                                 use_served=not args.no_served_reuse,
+                                 pool=args.pool_drift and store is not None,
+                                 host=pool_host))
     for spec_name, o in opts:
         # routed backends serve one at a time each; the worker pool overlaps
         # them across backends instead
@@ -1843,6 +2039,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"[serve] faults: {s['failed_dispatches']} failed dispatches "
               f"({s['retries']} retried), {s['fallback_images']} images "
               f"served degraded, ledger {s['failures']}")
+    if args.probe_rate > 0:
+        print(f"[serve] probes: {s['probes']} measured, "
+              f"{s['probe_failures']} failed (rate cap "
+              f"{args.probe_rate:g}/s)")
+
+    if args.pool_drift and store is not None:
+        served = server.served_sample(opt.net)
+        if served is not None:
+            plat_fp = opt.platform.pool_fingerprint()
+            store.publish_drift(plat_fp, served, host=pool_host, net=opt.net)
+            print(f"[serve] published {served.n} drift-evidence rows for "
+                  f"{plat_fp} as host {pool_host}")
+        polled = server.poll_pool(store, host=pool_host)
+        print(f"[serve] fleet pool: {len(store.entries('drift_pool'))} "
+              f"entries, {polled} recalibrations scheduled from other "
+              f"hosts' evidence")
 
     if args.hot_swap:
         spec_name, o = opts[0]

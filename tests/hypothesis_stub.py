@@ -8,13 +8,27 @@ import time. Usage:
         from hypothesis import given, settings, strategies as st
     except ModuleNotFoundError:
         from hypothesis_stub import given, settings, st
+
+A stubbed skip is NOT a pass: every ``@given`` test routed through this
+module is counted and surfaced by ``conftest.pytest_terminal_summary`` as
+its own summary line, so a local green run visibly reports how much
+property coverage it did not exercise. CI installs the real engine
+(requirements-dev.txt) and never imports this module.
 """
 import pytest
+
+# test functions stubbed into skips this run — read by conftest.py for the
+# terminal summary line
+STUBBED = []
+
+_MARK = pytest.mark.skip(
+    reason="hypothesis not installed — property test stubbed, not run")
 
 
 def given(*_args, **_kwargs):
     def deco(fn):
-        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        STUBBED.append(getattr(fn, "__name__", str(fn)))
+        return _MARK(fn)
     return deco
 
 

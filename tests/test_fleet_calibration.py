@@ -1,0 +1,263 @@
+"""Fleet-scale calibration sharing: a deterministic multi-host soak
+(DESIGN.md §14). Three simulated hosts on one fake clock share a single
+faulty object-store bucket:
+
+  * host A optimises cold, serves, drifts 4x, recalibrates from its own
+    served evidence and publishes it to the pool — through a torn first
+    upload that the publish retry must absorb;
+  * host B warm-starts byte-identically from A's artifacts, serves healthy
+    traffic, then pool-polls and hot-swaps from A's published evidence
+    with ZERO freshly profiled configs;
+  * host C warm-starts and never serves before its pool poll: it
+    recalibrates from fleet evidence alone, profiling nothing;
+  * host D crashes between staged upload and manifest commit — readers
+    never see the partial entry and ``sweep`` collects the orphan.
+
+Plan execution advances the shared fake clock (the PacedServer idiom from
+test_serving.py), so drift detection, windows, and store mtimes are all
+deterministic — no wall-clock sleeps in the serving path. The only real
+waiting is for background recalibration threads to finish.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.service import (ArtifactStore, BackendError, ObjectStoreBackend,
+                           OptimisedServer, ScriptedFaults, layer_profile,
+                           make_recalibrator, optimise)
+from repro.service.platforms import SimulatedPlatform
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+class _FleetServer(OptimisedServer):
+    """Deterministic host: real plan execution, but dispatch *timing* is
+    the shared fake clock advanced by the host's true per-image cost ×
+    the platform's ``time_scale`` — the observed/predicted drift ratio is
+    exact, not wall-clock noise."""
+
+    def __init__(self, fake_clock, base_cost_s, **kw):
+        super().__init__(clock=fake_clock, **kw)
+        self._fake = fake_clock
+        self._base_cost_s = base_cost_s
+
+    def _run_plan(self, opt, xs, weights):
+        out = super()._run_plan(opt, xs, weights)
+        scale = getattr(opt.platform, "time_scale", 1.0) or 1.0
+        self._fake.advance(self._base_cost_s * xs.shape[0] * scale)
+        return out
+
+
+def _requests(spec, n, seed=0):
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n0.c, n0.im, n0.im)).astype(np.float32)
+
+
+def _pump_batch(server, net, xs, tickets):
+    batch = [server.submit(net, x) for x in xs]
+    tickets.extend(batch)
+    server.pump()
+    return batch
+
+
+def _wait_recal(server, timeout_s=120.0):
+    deadline = time.time() + timeout_s
+    while not server.recalibrations_idle() and time.time() < deadline:
+        time.sleep(0.01)
+    assert server.recalibrations_idle(), "recalibration thread hung"
+
+
+def _count_profiles(platform):
+    calls = []
+    orig = platform.profile
+    platform.profile = lambda cfgs: (calls.append(
+        len(np.atleast_2d(np.asarray(cfgs)))), orig(cfgs))[1]
+    return calls
+
+
+def test_fleet_soak_pooled_recalibration(tmp_path):
+    clock = FakeClock()
+    shared = ObjectStoreBackend(clock=clock)
+
+    storeA = ArtifactStore(backend=shared.share(), clock=clock)
+    storeB = ArtifactStore(backend=shared.share(), clock=clock)
+    storeC = ArtifactStore(backend=shared.share(), clock=clock)
+    # A's recalibrator publishes through a view whose first staged upload
+    # is torn mid-write: publish_drift's single retry must absorb it
+    faultsA = ScriptedFaults([(("put", "stage."), "torn")])
+    storeA_pub = ArtifactStore(backend=shared.share(faults=faultsA),
+                               clock=clock)
+
+    platformA = SimulatedPlatform("arm", max_triplets=16)
+    platformB = SimulatedPlatform("arm", max_triplets=16)
+    platformC = SimulatedPlatform("arm", max_triplets=16)
+    fp = platformA.pool_fingerprint()
+    assert platformB.fingerprint() == fp == platformC.fingerprint()
+
+    # -- warm start across the shared backend ------------------------------
+    optA = optimise("edge_cnn", platformA, store=storeA, executable=True,
+                    max_iters=250)
+    assert not optA.warm_selection          # cold: A paid the optimisation
+    optB = optimise("edge_cnn", platformB, store=storeB, executable=True,
+                    max_iters=250)
+    optC = optimise("edge_cnn", platformC, store=storeC, executable=True,
+                    max_iters=250)
+    for warm in (optB, optC):
+        assert warm.warm_models and warm.warm_selection and warm.warm
+        assert warm.assignment == optA.assignment        # byte-identical
+        assert warm.predicted_cost_s == optA.predicted_cost_s
+
+    prof = layer_profile(optA)
+    n_cfg = len({tuple(map(int, r)) for r in prof.feats})
+    assert n_cfg > 0
+
+    def mk_server(opt, store, host):
+        return _FleetServer(
+            clock, opt.predicted_cost_s,
+            max_batch=4, latency_budget_ms=1e9,
+            drift_threshold=1.5, drift_alpha=0.5, drift_calib_obs=2,
+            recalibrate=make_recalibrator(store=store, sample_n=n_cfg,
+                                          mode="factor", pool=True,
+                                          host=host))
+
+    serverA = mk_server(optA, storeA_pub, "A")
+    serverB = mk_server(optB, storeB, "B")
+    serverC = mk_server(optC, storeC, "C")
+    serverA.register(optA)
+    serverB.register(optB)
+    serverC.register(optC)
+    net = optA.net
+    tickets = {"A": [], "B": [], "C": []}
+    generations = []
+
+    try:
+        # -- healthy phase: A and B serve (compile + clean); C stays idle --
+        for i in range(5):
+            _pump_batch(serverA, net, _requests(optA.spec, 4, seed=i),
+                        tickets["A"])
+            _pump_batch(serverB, net, _requests(optB.spec, 4, seed=i),
+                        tickets["B"])
+            generations.append(serverA.stats(net)["generation"])
+        assert serverA.stats(net)["observed_dispatches"] >= 2
+        assert serverA.stats(net)["recalibrations"] == 0
+
+        # -- host A drifts 4x and self-recalibrates from served evidence --
+        platformA.time_scale = 4.0
+        platformA.invalidate_datasets()
+        for i in range(10):
+            _pump_batch(serverA, net, _requests(optA.spec, 4, seed=10 + i),
+                        tickets["A"])
+            generations.append(serverA.stats(net)["generation"])
+            _wait_recal(serverA)
+            if serverA.stats(net)["recalibrations"]:
+                break
+        stA = serverA.stats(net)
+        assert stA["recalibrations"] == 1 and stA["generation"] == 1
+        assert stA["last_recal_error"] is None
+        assert stA["recal_sample"]["fresh_rows"] == 0     # served covered all
+        # the torn first upload fired and the publish retry landed anyway
+        assert faultsA.pending == 0
+        assert [f[2] for f in faultsA.fired] == ["torn"]
+        assert [m["fields"]["host"]
+                for m in storeB.drift_entries(fp)] == ["A"]
+
+        # -- host D crashes between staged upload and manifest commit ------
+        # (A's buffer was reset by its hot swap; D publishes B's evidence)
+        dsA = serverB.served_sample(net)
+        assert dsA is not None
+        storeD = ArtifactStore(
+            backend=shared.share(
+                faults=ScriptedFaults([(("put", "manifest.json"), "raise")])),
+            clock=clock)
+        with pytest.raises(BackendError):
+            storeD.put_dataset({"artifact": "drift_pool", "platform": fp,
+                                "host": "D", "seq": 0,
+                                "data": dsA.fingerprint()},
+                               dsA, category="drift_pool")
+        # the partial entry is invisible to every reader
+        assert {m["fields"]["host"]
+                for m in storeB.drift_entries(fp)} == {"A"}
+
+        # -- host B pool-polls: hot-swap from A's evidence, zero profiling --
+        callsB = _count_profiles(platformB)
+        assert serverB.poll_pool(storeB, host="B") == 1
+        _wait_recal(serverB)
+        stB = serverB.stats(net)
+        assert stB["recalibrations"] == 1 and stB["generation"] == 1
+        assert stB["last_recal_error"] is None
+        assert stB["recal_sample"]["fresh_rows"] == 0
+        assert stB["recal_sample"]["pooled_sources"] == 1
+        assert stB["recal_sample"]["served_rows"] > 0
+        assert callsB == [], "pool recalibration profiled fresh configs"
+        # B published its own evidence while recalibrating
+        assert {m["fields"]["host"]
+                for m in storeC.drift_entries(fp)} == {"A", "B"}
+
+        # -- host C never served: fleet evidence alone, zero profiling -----
+        callsC = _count_profiles(platformC)
+        assert serverC.served_sample(net) is None
+        assert serverC.poll_pool(storeC, host="C") == 1
+        _wait_recal(serverC)
+        stC = serverC.stats(net)
+        assert stC["recalibrations"] == 1 and stC["generation"] == 1
+        assert stC["last_recal_error"] is None
+        assert stC["recal_sample"]["fresh_rows"] == 0
+        assert stC["recal_sample"]["pooled_sources"] == 2
+        assert callsC == [], "evidence-only recalibration profiled configs"
+
+        # -- a second poll with nothing new schedules nothing --------------
+        assert serverB.poll_pool(storeB, host="B") == 0
+        assert serverC.poll_pool(storeC, host="C") == 0
+
+        # -- post-swap traffic observes the new generation everywhere ------
+        for srv, key in ((serverA, "A"), (serverB, "B"), (serverC, "C")):
+            for i in (0, 1):
+                _pump_batch(srv, net, _requests(optA.spec, 4, seed=30 + i),
+                            tickets[key])
+            assert srv.stats(net)["generation"] == 1
+        generations.append(serverA.stats(net)["generation"])
+    finally:
+        for srv in (serverA, serverB, serverC):
+            srv.stop(timeout=60.0)
+        platformA.time_scale = 1.0
+
+    # -- zero lost, zero duplicated tickets on every host ------------------
+    for srv, key in ((serverA, "A"), (serverB, "B"), (serverC, "C")):
+        ts = tickets[key]
+        assert ts and all(t.wait(30.0) for t in ts)
+        assert all(t.done and not t.rejected and t.error is None
+                   and t.result is not None for t in ts)
+        assert srv.stats(net)["images"] == len(ts)
+    assert generations == sorted(generations)
+
+    # -- sweep collects D's orphan; committed entries stay intact ----------
+    keys = [k for k in shared.list("drift_pool/") if not k.endswith("/")]
+    by_entry = {}
+    for k in keys:
+        by_entry.setdefault(k.rsplit("/", 1)[0], []).append(k)
+    # D's crashed entry exists as a bare staged payload, no manifest
+    orphans = [e for e, ks in by_entry.items()
+               if not any(k.endswith("manifest.json") for k in ks)]
+    assert len(orphans) == 1
+    storeB.sweep(category="drift_pool", grace_s=-1.0)
+    keys = [k for k in shared.list("drift_pool/") if not k.endswith("/")]
+    by_entry = {}
+    for k in keys:
+        by_entry.setdefault(k.rsplit("/", 1)[0], []).append(k)
+    assert orphans[0] not in by_entry
+    # every surviving entry is exactly manifest + its live payload
+    assert all(sorted(k.rsplit("/", 1)[1] for k in ks)[0] == "manifest.json"
+               and len(ks) == 2 for ks in by_entry.values())
+    assert {m["fields"]["host"]
+            for m in storeB.drift_entries(fp)} == {"A", "B"}

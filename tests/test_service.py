@@ -94,11 +94,17 @@ def test_artifact_store_get_or_train_warm_flag(tmp_path):
     assert m1.fingerprint() == m2.fingerprint()
 
 
+def _payload_path(entry_dir):
+    """The payload file the entry's manifest names (stage.<token>.<name>)."""
+    with open(os.path.join(entry_dir, "manifest.json")) as f:
+        return os.path.join(entry_dir, json.load(f)["payload"])
+
+
 def test_artifact_store_rejects_corrupt_payload(tmp_path):
     store = ArtifactStore(str(tmp_path))
     fields = {"k": "corrupt"}
     path = store.put_model(fields, _tiny_model())
-    with open(os.path.join(path, "model.npz"), "r+b") as f:
+    with open(_payload_path(path), "r+b") as f:
         f.write(b"garbage")                     # checksum now mismatches
     assert store.get_model(fields) is None      # invisible, not an exception
 
@@ -121,7 +127,7 @@ def test_artifact_store_sweep_collects_truncated_and_partial(tmp_path):
     store = ArtifactStore(str(tmp_path))
     store.put_json("selections", {"k": "good"}, {"v": 1})
     bad = store.put_json("selections", {"k": "bad"}, {"v": 2})
-    with open(os.path.join(bad, "data.json"), "w") as f:
+    with open(_payload_path(bad), "w") as f:
         f.write('{"v":')                        # truncated payload
     partial = os.path.join(str(tmp_path), "selections", "no-manifest")
     os.makedirs(partial)                        # writer died before manifest

@@ -1,0 +1,224 @@
+"""Probe dispatches (DESIGN.md §14.4): rate-limited single-layer
+measurements piggybacked on clean dispatches. Unit coverage for the three
+contracts the fleet soak cannot isolate:
+
+  * rate limiting under load — at most one probe per ``1/probe_rate``
+    seconds per state, round-robin over the attribution profile;
+  * isolation — probes never enter the drift buffer, the served-latency
+    wait samples, or the bucket-scale head;
+  * attribution — probe measurements surface in the served sample as their
+    own single-column rows at the probed (config, column), in the model's
+    prediction scale.
+
+All timing is an injected fake clock (test_serving.py idiom)."""
+import numpy as np
+import pytest
+
+from repro.models import cnn_zoo
+from repro.service import OptimisedServer, layer_profile, optimise
+from repro.service.platforms import SimulatedPlatform
+from repro.service.serving.server import ProbeUnsupported
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+@pytest.fixture(scope="module")
+def optimised_net():
+    platform = SimulatedPlatform("arm", max_triplets=16)
+    return optimise("edge_cnn", platform, executable=True, max_iters=250)
+
+
+def _requests(spec, n, seed=0):
+    n0 = spec.nodes[0]
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n0.c, n0.im, n0.im)).astype(np.float32)
+
+
+class _ProbingServer(OptimisedServer):
+    """Real plan execution paced on the fake clock; probes measure exactly
+    ``probe_factor`` × the model's prediction for the probed target."""
+
+    def __init__(self, fake_clock, base_cost_s, probe_factor=4.0, **kw):
+        super().__init__(clock=fake_clock, **kw)
+        self._fake = fake_clock
+        self._base_cost_s = base_cost_s
+        self._probe_factor = probe_factor
+        self.probe_calls = []
+
+    def _run_plan(self, opt, xs, weights):
+        out = super()._run_plan(opt, xs, weights)
+        self._fake.advance(self._base_cost_s * xs.shape[0])
+        return out
+
+    def _run_probe(self, opt, config, column):
+        layers = self._drift.layer_profile(opt.net)
+        key = tuple(float(v) for v in np.asarray(config).reshape(-1))
+        for f, c, p in zip(layers.feats, layers.columns, layers.predicted):
+            if tuple(float(v) for v in f) == key and c == column:
+                self.probe_calls.append((key, column))
+                return self._probe_factor * float(p)
+        raise AssertionError(f"probe target {(key, column)} not in profile")
+
+
+def _mk(optimised_net, clock, **kw):
+    server = _ProbingServer(clock, optimised_net.predicted_cost_s,
+                            max_batch=4, latency_budget_ms=1e9,
+                            drift_threshold=50.0, drift_calib_obs=1, **kw)
+    server.register(optimised_net)
+    return server
+
+
+def test_probe_rate_limit_and_round_robin(optimised_net):
+    clock = FakeClock()
+    server = _mk(optimised_net, clock, probe_rate=1.0)
+    net, spec = optimised_net.net, optimised_net.spec
+    xs = _requests(spec, 4)
+    try:
+        server.serve(net, xs)                   # bucket-4 compile: no probe
+        assert server.stats(net)["probes"] == 0
+        # a burst of clean dispatches: exactly ONE probe, interval unelapsed
+        for _ in range(8):
+            server.serve(net, xs)
+        assert server.stats(net)["probes"] == 1
+        clock.advance(1.0)
+        server.serve(net, xs)
+        assert server.stats(net)["probes"] == 2
+        assert server.stats(net)["probe_failures"] == 0
+        # round-robin over the attribution profile, in order
+        prof = layer_profile(optimised_net)
+        want = [(tuple(float(v) for v in prof.feats[i]), prof.columns[i])
+                for i in (0, 1)]
+        assert server.probe_calls == want
+    finally:
+        server.stop()
+
+
+def test_probes_excluded_from_buffer_waits_and_bucket_head(optimised_net):
+    clock = FakeClock()
+    server = _mk(optimised_net, clock, probe_rate=1e9)   # probe every batch
+    net, spec = optimised_net.net, optimised_net.spec
+    xs = _requests(spec, 4)
+    try:
+        rounds = 6
+        for _ in range(rounds):
+            server.serve(net, xs)
+        s = server.stats(net)
+        assert s["probes"] == rounds - 1        # every clean dispatch probed
+        # the drift buffer holds only plan dispatches, never probes
+        assert s["observed_dispatches"] == rounds - 1
+        # ticketless probes leave no queueing-wait samples behind
+        with server._cond:
+            waits = len(server._drift._stats[net].waits)
+        assert waits == rounds
+        # only the served bucket can appear in the scale head
+        scales = s["bucket_scales"]
+        assert scales is None or set(scales) <= {4}
+        # probes ride the served sample as single-column rows at the probed
+        # (config, column), scaled by the measured observed/predicted ratio
+        ds = server.served_sample(net)
+        assert ds is not None
+        assert ds.served_info["probes"] == s["probes"]
+        prof = layer_profile(optimised_net)
+        probed = {k for k, _ in server.probe_calls}
+        n_bucket_rows = ds.n - len(probed)
+        for key, col in set(server.probe_calls):
+            rows = [i for i in range(n_bucket_rows, ds.n)
+                    if tuple(float(v) for v in ds.feats[i]) == key
+                    and np.isfinite(ds.times[i, ds.columns.index(col)])]
+            assert len(rows) == 1
+            i = rows[0]
+            j = ds.columns.index(col)
+            pred = next(float(p) for f, c, p in
+                        zip(prof.feats, prof.columns, prof.predicted)
+                        if tuple(float(v) for v in f) == key and c == col)
+            assert ds.times[i, j] == pytest.approx(4.0 * pred, rel=1e-6)
+            # single finite entry per probe row
+            assert np.isfinite(ds.times[i]).sum() == 1
+    finally:
+        server.stop()
+
+
+def test_probe_failure_counts_and_ledger(optimised_net):
+    clock = FakeClock()
+    server = _mk(optimised_net, clock, probe_rate=1e9)
+    server._run_probe = lambda opt, cfg, col: (_ for _ in ()).throw(
+        RuntimeError("probe rig broke"))
+    net, spec = optimised_net.net, optimised_net.spec
+    xs = _requests(spec, 4)
+    try:
+        for _ in range(3):
+            server.serve(net, xs)
+        s = server.stats(net)
+        assert s["probes"] == 0 and s["probe_failures"] == 2
+        assert server._drift.failure_ledger(net)[0]["probe"] == 2
+        # failed probes contribute nothing to the served sample
+        ds = server.served_sample(net)
+        assert ds is not None and ds.served_info.get("probes", 0) == 0
+    finally:
+        server.stop()
+
+
+def test_unsupported_probe_is_skip_not_failure(optimised_net):
+    clock = FakeClock()
+    server = _mk(optimised_net, clock, probe_rate=1e9)
+    server._run_probe = lambda opt, cfg, col: (_ for _ in ()).throw(
+        ProbeUnsupported(col))
+    net, spec = optimised_net.net, optimised_net.spec
+    try:
+        for _ in range(3):
+            server.serve(net, _requests(spec, 4))
+        s = server.stats(net)
+        assert s["probes"] == 0 and s["probe_failures"] == 0
+        assert "probe" not in server._drift.failure_ledger(net).get(0, {})
+    finally:
+        server.stop()
+
+
+def test_probe_rate_validation_and_default_off(optimised_net):
+    with pytest.raises(ValueError):
+        OptimisedServer(probe_rate=-1.0)
+    clock = FakeClock()
+    server = _mk(optimised_net, clock)                  # default: disabled
+    net, spec = optimised_net.net, optimised_net.spec
+    try:
+        for _ in range(4):
+            server.serve(net, _requests(spec, 4))
+        assert server.stats(net)["probes"] == 0
+        assert server.probe_calls == []
+    finally:
+        server.stop()
+
+
+def test_observations_to_dataset_probe_rows_pure():
+    """Pure dataset-layer contract: probe triples become their own rows,
+    sorted by (config, column), finite only at the probed column."""
+    from repro.profiler.dataset import observations_to_dataset
+    feats = np.array([[16, 3, 32, 1, 3]], np.float64)
+    probes = [(np.array([32, 16, 30, 1, 3], np.float64), "kn2row", 2e-3),
+              (np.array([16, 3, 32, 1, 3], np.float64), "mec-col", 1e-3)]
+    ds = observations_to_dataset(
+        feats, ("kn2row",), [(1, np.array([1e-3]))],
+        columns=["kn2row", "mec-col"], platform="arm", probes=probes)
+    assert ds.n == 3                    # 1 bucket row + 2 probe rows
+    assert ds.served_info["probes"] == 2
+    # probe rows sorted by (config, column): [16,...] before [32,...]
+    np.testing.assert_array_equal(ds.feats[1], [16, 3, 32, 1, 3])
+    np.testing.assert_array_equal(ds.feats[2], [32, 16, 30, 1, 3])
+    j_mec, j_kn = ds.columns.index("mec-col"), ds.columns.index("kn2row")
+    assert ds.times[1, j_mec] == pytest.approx(1e-3)
+    assert ds.times[2, j_kn] == pytest.approx(2e-3)
+    assert np.isfinite(ds.times[1:]).sum() == 2
+    with pytest.raises(ValueError):
+        observations_to_dataset(
+            feats, ("kn2row",), [(1, np.array([1e-3]))], columns=["kn2row"],
+            platform="arm",
+            probes=[(np.array([1, 1, 1, 1, 1], np.float64), "nope", 1e-3)])

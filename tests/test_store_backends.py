@@ -1,0 +1,350 @@
+"""Crash-consistency property tests for ArtifactStore over its pluggable
+backends (DESIGN.md §14.1–§14.2).
+
+Backend-parametrised (local directory AND simulated object store): injected
+fault schedules kill a writer between the staged upload and the manifest
+commit, tear a payload write in half, and re-publish after an ambiguous
+ack — asserting the §14.2 invariants:
+
+* a reader NEVER observes a partial entry: every get returns a complete
+  committed value or None/the previous value — never bytes mid-write;
+* an interrupted overwrite never destroys the existing entry;
+* ``sweep()`` collects every orphan (staged uploads no manifest names,
+  corrupt entries) and nothing live.
+
+The deterministic schedules run everywhere; the @given tests drive random
+fault interleavings through the same invariants when the real hypothesis
+engine is installed (CI). Locally-stubbed runs report the skip count in
+the pytest summary (conftest.pytest_terminal_summary).
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.service import (ArtifactStore, BackendError, LocalDirBackend,
+                           ObjectStoreBackend, ScriptedFaults)
+from repro.service.store_backends import StoreBackend
+
+
+class FaultyBackend(StoreBackend):
+    """Fault-hook wrapper making ANY backend crash-testable — the object
+    store has native hooks, the local directory gets them here, and both
+    run the identical suite."""
+
+    def __init__(self, inner, faults=None):
+        self.inner = inner
+        self.faults = faults
+
+    def _act(self, op, key):
+        action = self.faults(op, key) if self.faults else None
+        if action == "raise":
+            raise BackendError(f"injected: {op} {key}")
+        return action
+
+    def put(self, key, data):
+        action = self._act("put", key)
+        if action == "torn":
+            self.inner.put(key, bytes(data)[:max(1, len(data) // 2)])
+            raise BackendError(f"injected: torn put {key}")
+        self.inner.put(key, data)
+        if action == "raise_after":
+            raise BackendError(f"injected: late ack {key}")
+
+    def get(self, key):
+        if self._act("get", key) == "lost":
+            return None
+        return self.inner.get(key)
+
+    def get_stream(self, key, chunk_size=1 << 20):
+        if self._act("get", key) == "lost":
+            return None
+        return self.inner.get_stream(key, chunk_size)
+
+    def list(self, prefix=""):
+        self._act("list", prefix)
+        return self.inner.list(prefix)
+
+    def delete(self, key):
+        self._act("delete", key)
+        return self.inner.delete(key)
+
+    def delete_prefix(self, prefix):
+        return self.inner.delete_prefix(prefix)
+
+    def mtime(self, key):
+        return self.inner.mtime(key)
+
+    def local_path(self, key):
+        return self.inner.local_path(key)
+
+
+def _make_inner(kind, tmp_path):
+    if kind == "local":
+        return LocalDirBackend(str(tmp_path / "store"))
+    return ObjectStoreBackend()
+
+
+@pytest.fixture(params=["local", "object"])
+def backend_kind(request):
+    return request.param
+
+
+def _store(kind, tmp_path, faults=None):
+    wrapped = FaultyBackend(_make_inner(kind, tmp_path), faults)
+    return ArtifactStore(backend=wrapped), wrapped
+
+
+def _entry_keys(backend, category="selections"):
+    # drop the local backend's empty-directory pseudo-keys: only real
+    # objects count as store contents
+    return [k for k in backend.inner.list(f"{category}/")
+            if not k.endswith("/")]
+
+
+# ---------------------------------------------------------------------------
+# Backend basics
+# ---------------------------------------------------------------------------
+
+def test_backend_roundtrip_list_stream_delete(backend_kind, tmp_path):
+    b = _make_inner(backend_kind, tmp_path)
+    assert b.get("a/b") is None and b.get_stream("a/b") is None
+    b.put("a/b", b"xy" * 600)
+    b.put("a/c", b"z")
+    assert b.get("a/b") == b"xy" * 600
+    assert b"".join(b.get_stream("a/b", chunk_size=7)) == b"xy" * 600
+    assert b.list("a/") == ["a/b", "a/c"]
+    assert b.mtime("a/b") is not None
+    assert b.delete("a/b") and not b.delete("a/b")
+    assert b.list("a/") == ["a/c"]
+    assert b.delete_prefix("a/") == 1
+    assert b.list() == []
+
+
+def test_object_backend_share_and_native_faults():
+    """Host views share one bucket; a view's fault schedule is its own."""
+    a = ObjectStoreBackend()
+    b = a.share(faults=ScriptedFaults([("get", "lost")]))
+    a.put("k", b"v")
+    assert b.get("k") is None          # this view's injected loss...
+    assert b.get("k") == b"v"          # ...fires exactly once
+    assert a.get("k") == b"v"          # the sibling view never saw it
+    with pytest.raises(BackendError):
+        ObjectStoreBackend(faults=ScriptedFaults([("put", "raise")])).put(
+            "x", b"1")
+
+
+# ---------------------------------------------------------------------------
+# Crash schedules: staged-upload-then-manifest-commit invariants
+# ---------------------------------------------------------------------------
+
+def test_crash_between_stage_and_commit_is_invisible(backend_kind, tmp_path):
+    faults = ScriptedFaults([(("put", "manifest.json"), "raise")])
+    store, backend = _store(backend_kind, tmp_path, faults)
+    with pytest.raises(OSError):
+        store.put_json("selections", {"k": 1}, {"v": 1})
+    # the staged payload landed, the commit did not: nothing is readable
+    assert store.get_json("selections", {"k": 1}) is None
+    assert store.entries("selections") == []
+    staged = _entry_keys(backend)
+    assert staged and all("stage." in k for k in staged)
+    # sweep collects the orphan (grace disabled so age is irrelevant)
+    store.sweep(grace_s=-1.0)
+    assert _entry_keys(backend) == []
+
+
+def test_torn_payload_write_is_invisible_and_swept(backend_kind, tmp_path):
+    faults = ScriptedFaults([(("put", "stage."), "torn")])
+    store, backend = _store(backend_kind, tmp_path, faults)
+    with pytest.raises(OSError):
+        store.put_json("selections", {"k": "torn"}, {"v": list(range(64))})
+    assert store.get_json("selections", {"k": "torn"}) is None
+    store.sweep(grace_s=-1.0)
+    assert _entry_keys(backend) == []
+
+
+def test_interrupted_overwrite_keeps_old_entry(backend_kind, tmp_path):
+    """A duplicate publish that dies mid-write must not destroy the live
+    entry: the old manifest still names the old payload."""
+    store, backend = _store(backend_kind, tmp_path)
+    fields = {"k": "stable"}
+    store.put_json("selections", fields, {"v": "old"})
+    for schedule in ([(("put", "stage."), "torn")],
+                     [(("put", "stage."), "raise")],
+                     [(("put", "manifest.json"), "raise")]):
+        backend.faults = ScriptedFaults(schedule)
+        with pytest.raises(OSError):
+            store.put_json("selections", fields, {"v": "new"})
+        backend.faults = None
+        assert store.get_json("selections", fields) == {"v": "old"}
+    # GC reaps every failed attempt's leftovers; the entry survives
+    assert store.sweep(grace_s=-1.0) == 0
+    assert store.get_json("selections", fields) == {"v": "old"}
+    rest = _entry_keys(backend)
+    assert len(rest) == 2              # manifest + its one live payload
+    # and a clean retry finally lands the new value
+    store.put_json("selections", fields, {"v": "new"})
+    assert store.get_json("selections", fields) == {"v": "new"}
+
+
+def test_duplicate_publish_after_ambiguous_ack(backend_kind, tmp_path):
+    """An ack lost after the commit landed (raise_after) forces a retry of
+    an already-complete publish; the retry is idempotent and readers see a
+    complete value throughout."""
+    faults = ScriptedFaults([(("put", "manifest.json"), "raise_after")])
+    store, backend = _store(backend_kind, tmp_path, faults)
+    fields = {"k": "dup"}
+    with pytest.raises(OSError):
+        store.put_json("selections", fields, {"v": 7})
+    # the commit actually landed — the entry is already complete
+    assert store.get_json("selections", fields) == {"v": 7}
+    store.put_json("selections", fields, {"v": 7})          # blind retry
+    assert store.get_json("selections", fields) == {"v": 7}
+    assert len(store.entries("selections")) == 1
+    store.sweep(grace_s=-1.0)
+    assert store.get_json("selections", fields) == {"v": 7}
+    assert len(_entry_keys(backend)) == 2
+
+
+def test_corrupt_payload_parametrised_sweep(backend_kind, tmp_path):
+    """The PR-3 truncated-artifact test, generalised over backends: corrupt
+    the committed payload bytes through the backend — the entry turns
+    invisible and sweep() counts exactly it."""
+    store, backend = _store(backend_kind, tmp_path)
+    store.put_json("selections", {"k": "good"}, {"v": 1})
+    store.put_json("selections", {"k": "bad"}, {"v": 2})
+    from repro.service.artifacts import digest
+    key = digest({"k": "bad"})
+    man = json.loads(backend.get(f"selections/{key}/manifest.json").decode())
+    backend.put(f"selections/{key}/{man['payload']}", b'{"v":')
+    assert store.get_json("selections", {"k": "bad"}) is None
+    assert store.get_json("selections", {"k": "good"}) == {"v": 1}
+    assert store.sweep() == 1
+    assert store.get_json("selections", {"k": "good"}) == {"v": 1}
+    assert len(store.entries("selections")) == 1
+    assert backend.get(f"selections/{key}/manifest.json") is None
+
+
+def test_get_or_train_survives_backend_outage(backend_kind, tmp_path):
+    """The caching-failures-cost-the-cache contract extends to backends: a
+    store whose backend raises on every op never loses a trained model."""
+    def down(op, key):
+        return "raise"
+    store, _ = _store(backend_kind, tmp_path, down)
+    calls = []
+
+    def train():
+        calls.append(1)
+        return _tiny_model()
+
+    m1, warm1 = store.get_or_train({"k": 1}, train)
+    m2, warm2 = store.get_or_train({"k": 1}, train)
+    assert (warm1, warm2) == (False, False) and len(calls) == 2
+    assert m1 is not None and m2 is not None
+
+
+def test_dataset_roundtrip_through_object_store(tmp_path):
+    """npz payloads spool through the streaming read on a pathless backend."""
+    from repro.profiler.dataset import PerfDataset
+    store = ArtifactStore(backend=ObjectStoreBackend())
+    ds = PerfDataset(np.arange(10.0).reshape(5, 2),
+                     np.arange(15.0).reshape(5, 3) * 1e-6,
+                     ["a", "b", "c"], ["x", "y"], "arm")
+    store.put_dataset({"d": 1}, ds)
+    back = store.get_dataset({"d": 1})
+    assert back is not None and back.fingerprint() == ds.fingerprint()
+
+
+def test_retention_sweep_on_object_store():
+    store = ArtifactStore(backend=ObjectStoreBackend(), keep=2)
+    for i in range(6):
+        store.put_json("selections", {"i": i}, {"i": i})
+    kept = {e["fields"]["i"] for e in store.entries("selections")}
+    assert kept == {4, 5}
+
+
+def _tiny_model(seed=0):
+    from repro.core.perfmodel import fit_perf_model
+    rng = np.random.default_rng(seed)
+    f = np.exp(rng.uniform(0, 3, (60, 5)))
+    t = np.exp(np.log(f) @ rng.uniform(0.5, 2.0, (5, 3))) * 1e-6
+    return fit_perf_model("lin", f[:40], t[:40], f[40:], t[40:])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven interleavings (real engine in CI; stubbed skips report
+# their count in the local pytest summary)
+# ---------------------------------------------------------------------------
+
+_ACTIONS = ["ok", "stage_fail", "stage_torn", "manifest_fail", "late_ack",
+            "sweep"]
+
+
+def _schedule_for(action):
+    return {
+        "ok": [],
+        "stage_fail": [(("put", "stage."), "raise")],
+        "stage_torn": [(("put", "stage."), "torn")],
+        "manifest_fail": [(("put", "manifest.json"), "raise")],
+        "late_ack": [(("put", "manifest.json"), "raise_after")],
+    }[action]
+
+
+def _drive(kind, tmp_path, script):
+    """Run a publish/sweep script under its fault schedule, asserting after
+    EVERY step that each address reads as a complete committed value or
+    None — never a partial, never an exception — and at the end that sweep
+    leaves exactly the live entries' keys."""
+    store, backend = _store(kind, tmp_path)
+    committed = {}                     # addr -> set of acceptable values
+    for step, (addr, action) in enumerate(script):
+        fields = {"addr": addr}
+        if action == "sweep":
+            store.sweep(grace_s=-1.0)
+        else:
+            backend.faults = ScriptedFaults(_schedule_for(action))
+            value = {"addr": addr, "step": step}
+            try:
+                store.put_json("selections", fields, value)
+                committed[addr] = {json.dumps(value, sort_keys=True)}
+            except OSError:
+                # late_ack means the commit may have landed despite the error
+                if action == "late_ack":
+                    committed[addr] = {json.dumps(value, sort_keys=True)}
+            backend.faults = None
+        for a in {a for a, _ in script}:
+            got = store.get_json("selections", {"addr": a})
+            if a in committed:
+                assert got is not None, f"committed {a} unreadable"
+                assert json.dumps(got, sort_keys=True) in committed[a], \
+                    f"partial/alien value at {a}: {got}"
+            else:
+                assert got is None, f"uncommitted {a} readable: {got}"
+    store.sweep(grace_s=-1.0)
+    for a, vals in committed.items():
+        got = store.get_json("selections", {"addr": a})
+        assert got is not None and json.dumps(got, sort_keys=True) in vals
+    keys = _entry_keys(backend)
+    assert len(keys) == 2 * len(committed)   # manifest + one payload each
+    assert all(("manifest.json" in k) or ("stage." in k) for k in keys)
+
+
+@given(script=st.lists(st.tuples(st.sampled_from(["p", "q", "r"]),
+                                 st.sampled_from(_ACTIONS)),
+                       min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_random_fault_interleavings_local(tmp_path_factory, script):
+    _drive("local", tmp_path_factory.mktemp("fuzz"), script)
+
+
+@given(script=st.lists(st.tuples(st.sampled_from(["p", "q", "r"]),
+                                 st.sampled_from(_ACTIONS)),
+                       min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_random_fault_interleavings_object(tmp_path_factory, script):
+    _drive("object", tmp_path_factory.mktemp("fuzz"), script)
